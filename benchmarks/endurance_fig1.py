@@ -1,0 +1,79 @@
+"""Figure 1 reproduction: endurance requirements for KV cache and model
+weights vs endurance of memory technologies.
+
+Inputs (paper §3): 5-year device life; weight updates hourly (conservative)
+and once-per-second (intensive); KV-cache writes from the Splitwise [35]
+llama2-70b serving numbers (prefill-dominated token rate, median context
+lengths ~1-1.3k tokens) spread over the KV region with software wear
+levelling. Validation = the paper's qualitative orderings, since the figure
+publishes no point values.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core.endurance import weight_update_writes, writes_per_cell
+from repro.core.memclass import HOUR, TECHNOLOGIES, YEAR
+
+# Splitwise-derived serving point (per inference machine)
+PREFILL_TOKENS_PER_S = 7000.0   # llama2-70b prefill throughput class
+DECODE_TOKENS_PER_S = 600.0     # sustained decode across batch
+KV_REGION_BYTES = 400e9         # KV working region per machine
+LIFETIME_S = 5 * YEAR
+
+
+def compute() -> dict:
+    cfg = get_config("llama2-70b")
+    kv_tok = cfg.kv_bytes_per_token()
+    kv_write_bw = (PREFILL_TOKENS_PER_S + DECODE_TOKENS_PER_S) * kv_tok
+    reqs = {
+        "weights_hourly": weight_update_writes(HOUR, LIFETIME_S),
+        "weights_per_second": weight_update_writes(1.0, LIFETIME_S),
+        "kv_cache": writes_per_cell(kv_write_bw, KV_REGION_BYTES, LIFETIME_S),
+        "kv_cache_worstlevel": writes_per_cell(kv_write_bw, KV_REGION_BYTES,
+                                               LIFETIME_S, leveling_efficiency=0.5),
+    }
+    techs = {name: {"device": t.endurance_device, "potential": t.endurance_potential}
+             for name, t in TECHNOLOGIES.items()}
+    hardest = max(reqs["kv_cache_worstlevel"], reqs["weights_per_second"])
+    verdicts = {
+        # paper §3 observation 2: existing SCM devices do not meet the
+        # requirements (PCM/RRAM devices fail the per-second weight-update
+        # bar; RRAM also fails the worst-levelled KV bar) ...
+        "flash_slc_insufficient_for_kv":
+            techs["nand_slc"]["device"] < reqs["kv_cache"],
+        "scm_devices_insufficient":
+            techs["rram"]["device"] < reqs["kv_cache_worstlevel"] and
+            techs["optane_pcm"]["device"] < reqs["weights_per_second"],
+        # ... but the underlying technologies have the potential to do so
+        "technology_potential_sufficient":
+            all(techs[t]["potential"] > hardest
+                for t in ("optane_pcm", "rram", "stt_mram")),
+        # paper §3 observation 1: HBM is vastly overprovisioned on endurance
+        "hbm_vastly_overprovisioned":
+            techs["hbm3e"]["device"] > 1e4 * hardest,
+        # and the MRM operating points we propose cover the requirements
+        "mrm_operating_points_sufficient":
+            all(techs[t]["device"] > hardest
+                for t in ("mrm_pcm", "mrm_rram", "mrm_mram")),
+    }
+    return {"requirements": reqs, "technologies": techs, "verdicts": verdicts,
+            "kv_bytes_per_token": kv_tok}
+
+
+def run(csv=True):
+    t0 = time.perf_counter()
+    out = compute()
+    dt = (time.perf_counter() - t0) * 1e6
+    if csv:
+        for k, v in out["requirements"].items():
+            print(f"endurance_fig1/{k},{dt:.1f},{v:.3e}")
+        for k, v in out["verdicts"].items():
+            print(f"endurance_fig1/verdict_{k},{dt:.1f},{int(v)}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1))

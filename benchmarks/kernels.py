@@ -1,0 +1,93 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU performance;
+recorded for regression tracking) + the analytic VMEM/roofline sizing per
+kernel block configuration."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def flash_block_analysis(q_block=512, kv_block=512, d=128,
+                         dtype_bytes=2) -> dict:
+    """VMEM working set + arithmetic intensity for one flash block."""
+    vmem = (q_block * d + 2 * kv_block * d) * dtype_bytes \
+        + q_block * kv_block * 4 + (q_block * d + 2 * q_block) * 4
+    flops = 2 * q_block * kv_block * d * 2  # qk + pv
+    hbm = (kv_block * d * 2) * dtype_bytes  # streamed K,V per block
+    return {
+        "vmem_bytes": vmem,
+        "vmem_fits_16mb": vmem <= 16 * 2**20,
+        "arithmetic_intensity": flops / hbm,
+        "mxu_aligned": (q_block % 128 == 0 and kv_block % 128 == 0 and d % 128 == 0),
+        "block_time_compute_s": flops / PEAK_FLOPS_BF16,
+        "block_time_hbm_s": hbm / HBM_BW,
+    }
+
+
+def compute() -> dict:
+    from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ssd_scan import ssd_scan
+
+    rng = np.random.default_rng(0)
+    out = {"blocks": {}}
+    for qb, kb in ((256, 256), (512, 512), (512, 1024)):
+        out["blocks"][f"flash_{qb}x{kb}"] = flash_block_analysis(qb, kb)
+
+    B, S, H, D = 1, 256, 4, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    out["flash_interp_us"] = _time(
+        lambda *a: flash_attention(*a, scale=D**-0.5, q_block=64, kv_block=64),
+        q, k, v)
+
+    C = 256
+    kc = jnp.asarray(rng.normal(0, 1, (B, C, H, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(0, 1, (B, C, H, D)), jnp.float32)
+    pos = jnp.arange(C, dtype=jnp.int32)[None]
+    q1 = jnp.asarray(rng.normal(0, 1, (B, 1, H, D)), jnp.float32)
+    out["decode_interp_us"] = _time(
+        lambda *a: decode_attention(*a, scale=D**-0.5, page_size=64),
+        q1, kc, vc, pos, jnp.asarray([C - 1], jnp.int32))
+
+    x = jnp.asarray(rng.normal(0, 1, (B, S, H, 16)), jnp.float32)
+    dt_ = jnp.asarray(rng.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(1, 4, (H,)), jnp.float32)
+    bb = jnp.asarray(rng.normal(0, 1, (B, S, 1, 16)), jnp.float32)
+    cc = jnp.asarray(rng.normal(0, 1, (B, S, 1, 16)), jnp.float32)
+    out["ssd_interp_us"] = _time(lambda *a_: ssd_scan(*a_, chunk=64),
+                                 x, dt_, a, bb, cc)
+    return out
+
+
+def run(csv=True):
+    t0 = time.perf_counter()
+    out = compute()
+    dt = (time.perf_counter() - t0) * 1e6
+    if csv:
+        for name, b in out["blocks"].items():
+            print(f"kernels/{name}_ai,{dt:.1f},{b['arithmetic_intensity']:.1f}")
+            print(f"kernels/{name}_vmem_kb,{dt:.1f},{b['vmem_bytes']/1024:.0f}")
+        for k in ("flash_interp_us", "decode_interp_us", "ssd_interp_us"):
+            print(f"kernels/{k},{out[k]:.1f},0")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1, default=float))

@@ -1,0 +1,76 @@
+"""MRM vs HBM-only: placement feasibility, sustained memory power, capacity
+cost, and tokens/joule for a llama2-70b-class inference machine (the
+paper's 'tokens per dollar' §5 motivation, made concrete)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core.memclass import HBM3E, HOUR, LPDDR5X, MRM_MRAM, MRM_PCM, MRM_RRAM
+from repro.core.tiering import DataClassProfile, Tier, solve_placement
+
+DECODE_TOKENS_PER_S = 600.0
+
+
+def _classes():
+    cfg = get_config("llama2-70b")
+    w_bytes = cfg.param_counts()["total"] * 2
+    kv_tok = cfg.kv_bytes_per_token()
+    # decode reads all weights + live KV per token (paper §2.2)
+    read_bw_w = DECODE_TOKENS_PER_S * w_bytes / 64        # batch-64 amortized
+    kv_live = 300e9
+    read_bw_kv = DECODE_TOKENS_PER_S * kv_live / 64
+    return [
+        DataClassProfile("weights", w_bytes, read_bw_w, w_bytes / (24 * HOUR),
+                         24 * HOUR, False),
+        DataClassProfile("kv_cache", kv_live, read_bw_kv,
+                         DECODE_TOKENS_PER_S * kv_tok * 12, 600, True),
+        DataClassProfile("activations", 8e9, 0.4e12, 0.4e12, 0.01, True,
+                         random_access=True),
+    ]
+
+
+SYSTEMS = {
+    "hbm_only": [Tier(HBM3E, 640e9, count=16)],
+    "hbm+mrm_pcm": [Tier(HBM3E, 96e9, count=4), Tier(MRM_PCM, 768e9, count=12)],
+    "hbm+mrm_rram": [Tier(HBM3E, 96e9, count=4), Tier(MRM_RRAM, 768e9, count=12)],
+    "hbm+mrm_mram": [Tier(HBM3E, 96e9, count=4), Tier(MRM_MRAM, 768e9, count=12)],
+    "hbm+lpddr": [Tier(HBM3E, 96e9, count=4), Tier(LPDDR5X, 768e9, count=12)],
+}
+
+
+def compute() -> dict:
+    classes = _classes()
+    out = {}
+    for name, tiers in SYSTEMS.items():
+        res = solve_placement(classes, tiers)
+        tokens_per_joule = DECODE_TOKENS_PER_S / res.energy_w if res.feasible else 0.0
+        out[name] = {
+            "feasible": res.feasible,
+            "assignment": res.assignment,
+            "energy_w": res.energy_w,
+            "capacity_cost_usd": res.cost_usd,
+            "tokens_per_joule": tokens_per_joule,
+            "violations": res.violations[:3],
+        }
+    base = out["hbm_only"]["energy_w"]
+    for name in out:
+        out[name]["energy_vs_hbm"] = out[name]["energy_w"] / base if base else None
+    return out
+
+
+def run(csv=True):
+    t0 = time.perf_counter()
+    out = compute()
+    dt = (time.perf_counter() - t0) * 1e6
+    if csv:
+        for name, r in out.items():
+            print(f"mrm_tco/{name}_energy_w,{dt:.1f},{r['energy_w']:.2f}")
+            print(f"mrm_tco/{name}_tokens_per_j,{dt:.1f},{r['tokens_per_joule']:.3f}")
+            print(f"mrm_tco/{name}_cost_usd,{dt:.1f},{r['capacity_cost_usd']:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1, default=str))

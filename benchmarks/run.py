@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV per the scaffold convention.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig1 tco   # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = ("fig1", "workload", "tco", "serving", "kernels", "roofline")
+
+
+def main() -> None:
+    want = set(sys.argv[1:]) or set(SUITES)
+    failures = []
+
+    if "fig1" in want:
+        from benchmarks import endurance_fig1
+        _run("endurance_fig1", endurance_fig1.run, failures)
+    if "workload" in want:
+        from benchmarks import workload_characterization
+        _run("workload_characterization", workload_characterization.run, failures)
+    if "tco" in want:
+        from benchmarks import mrm_tco
+        _run("mrm_tco", mrm_tco.run, failures)
+    if "serving" in want:
+        from benchmarks import serving_sim
+        _run("serving_sim", serving_sim.run, failures)
+    if "kernels" in want:
+        from benchmarks import kernels
+        _run("kernels", kernels.run, failures)
+    if "roofline" in want:
+        from benchmarks import roofline
+        _run("roofline", roofline.run, failures)
+
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+def _run(name, fn, failures):
+    try:
+        fn(csv=True)
+    except Exception:
+        traceback.print_exc()
+        failures.append(name)
+
+
+if __name__ == "__main__":
+    main()

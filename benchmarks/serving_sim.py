@@ -1,0 +1,58 @@
+"""Retention-policy sweep (paper §4: DCM 'right-provisioning'): vary the
+DCM expected-session-lifetime programming and measure refresh overhead vs
+write energy — the knob the cluster control plane owns."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def compute(arch="deepseek-7b") -> dict:
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServeEngine
+
+    full = get_config(arch)
+    cfg = reduced(full)
+    params = init_params(cfg, jax.random.key(0))
+    out = {}
+    for session_s in (0.01, 1.0, 60.0, 3600.0):
+        mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40), "hbm": (HBM3E, 1 << 37)})
+        eng = ServeEngine(cfg, params, mem,
+                          EngineConfig(max_slots=2, max_cache_len=64,
+                                       weight_tier="mrm", kv_tier="mrm",
+                                       expected_session_s=session_s),
+                          account_cfg=full)
+        rng = np.random.default_rng(0)
+        for _ in range(4):
+            eng.submit(list(rng.integers(2, cfg.vocab_size, 16)), 10)
+        rep = eng.run_until_idle()
+        mrm = rep["memory"]["tiers"]["mrm"]
+        out[f"session_{session_s}s"] = {
+            "refresh_events": rep["memory"]["refresh_stats"]["refresh"],
+            "refresh_gb": mrm["refresh_gb"],
+            "write_gb": mrm["write_gb"],
+            "energy_per_token_j": rep["energy_per_token_j"],
+            "refresh_overhead": mrm["refresh_gb"] / max(mrm["write_gb"], 1e-12),
+        }
+    return out
+
+
+def run(csv=True):
+    t0 = time.perf_counter()
+    out = compute()
+    dt = (time.perf_counter() - t0) * 1e6
+    if csv:
+        for k, v in out.items():
+            print(f"serving_sim/{k}_refresh_overhead,{dt:.1f},{v['refresh_overhead']:.4f}")
+            print(f"serving_sim/{k}_energy_per_token,{dt:.1f},{v['energy_per_token_j']:.3e}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1, default=float))

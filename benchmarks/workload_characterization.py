@@ -1,0 +1,61 @@
+"""Paper §2.2 workload characterization, MEASURED from the running serving
+engine (reduced compute model, deployment-scale memory accounting):
+read:write ratio >1000:1, fully sequential reads, append-only writes,
+KV bytes/token, weight-read amplification per token."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def compute(arch="llama2-70b", requests=6, max_new=12) -> dict:
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServeEngine
+
+    full = get_config(arch)
+    cfg = reduced(full)
+    params = init_params(cfg, jax.random.key(0))
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40), "hbm": (HBM3E, 1 << 37)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=3, max_cache_len=96,
+                                   weight_tier="mrm", kv_tier="mrm",
+                                   expected_session_s=30.0),
+                      account_cfg=full)
+    rng = np.random.default_rng(0)
+    for _ in range(requests):
+        eng.submit(list(rng.integers(2, cfg.vocab_size, rng.integers(8, 40))),
+                   max_new)
+    rep = eng.run_until_idle()
+    mrm = rep["memory"]["tiers"]["mrm"]
+    return {
+        "steady_rw_ratio": rep["steady_rw_ratio"],
+        "seq_read_fraction": mrm["seq_fraction"],
+        "kv_bytes_per_token": full.kv_bytes_per_token(),
+        "weight_read_bytes_per_token": eng.active_weight_bytes,
+        "weight_to_kvwrite_amplification":
+            eng.active_weight_bytes / full.kv_bytes_per_token(),
+        "energy_per_token_j": rep["energy_per_token_j"],
+        "tokens": rep["tokens_generated"],
+        "refresh": rep["memory"]["refresh_stats"],
+    }
+
+
+def run(csv=True):
+    t0 = time.perf_counter()
+    out = compute()
+    dt = (time.perf_counter() - t0) * 1e6
+    if csv:
+        for k in ("steady_rw_ratio", "seq_read_fraction", "kv_bytes_per_token",
+                  "weight_to_kvwrite_amplification", "energy_per_token_j"):
+            print(f"workload_char/{k},{dt:.1f},{out[k]:.4e}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1, default=float))

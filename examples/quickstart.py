@@ -1,0 +1,53 @@
+"""Quickstart: the MRM memory class in 60 seconds.
+
+1. Pick an architecture from the assigned pool and look at its inference
+   memory-IO profile (the paper's §2 characterization).
+2. Solve the retention-aware placement across HBM / MRM / LPDDR tiers.
+3. Program one DCM write and watch the retention/energy/endurance trade.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.core import (DataClassProfile, Tier, plan_write, solve_placement)
+from repro.core.memclass import HBM3E, HOUR, LPDDR5X, MRM_RRAM
+
+ARCH = "qwen3-8b"
+
+cfg = get_config(ARCH)
+counts = cfg.param_counts()
+kv_tok = cfg.kv_bytes_per_token()
+print(f"== {ARCH}: {counts['total']/1e9:.1f}B params, "
+      f"{kv_tok/1024:.1f} KiB of KV appended per generated token")
+
+# --- 1. workload profile (decode reads everything, writes one vector) ------
+decode_tps = 800.0
+weights_bytes = counts["total"] * 2
+classes = [
+    DataClassProfile("weights", weights_bytes, decode_tps * weights_bytes / 32,
+                     weights_bytes / (24 * HOUR), 24 * HOUR, soft_state=False),
+    DataClassProfile("kv_cache", 64e9, decode_tps * 64e9 / 32,
+                     decode_tps * kv_tok * 8, 600, soft_state=True),
+    DataClassProfile("activations", 4e9, 0.3e12, 0.3e12, 0.01,
+                     soft_state=True, random_access=True),
+]
+print(f"   decode read:write ratio ~ "
+      f"{(weights_bytes + 64e9) / (kv_tok * 32):,.0f}:1  (paper §2.2: >1000:1)")
+
+# --- 2. retention-aware placement ------------------------------------------
+tiers = [Tier(HBM3E, 96e9, count=4), Tier(MRM_RRAM, 512e9, count=8),
+         Tier(LPDDR5X, 256e9, count=2)]
+res = solve_placement(classes, tiers)
+print("== placement:", res.assignment)
+print(f"   feasible={res.feasible}  memory power={res.energy_w:.0f} W  "
+      f"capacity cost=${res.cost_usd:,.0f}")
+
+# --- 3. DCM: program a write for a 10-minute KV page ------------------------
+op = plan_write(MRM_RRAM, expected_lifetime_s=600)
+nominal = plan_write(MRM_RRAM, expected_lifetime_s=MRM_RRAM.retention_s)
+print(f"== DCM write @10min lifetime: retention={op.retention_s/3600:.2f} h, "
+      f"energy {op.energy_pj_bit:.2f} pJ/bit (nominal {nominal.energy_pj_bit:.2f}), "
+      f"endurance {op.endurance_at_point:.1e} (device nominal "
+      f"{MRM_RRAM.endurance_device:.1e})")

@@ -1,0 +1,124 @@
+"""Sharded, atomic, async checkpointing with resharding-on-restore.
+
+Layout: <dir>/step_<N>/ arrays.npz (path-keyed leaves) + manifest.json
+(step, arch, pytree paths, dtypes, shapes). Writes go to a tmp dir + atomic
+rename, so a crash mid-save never corrupts the latest checkpoint. ``save``
+can run in a background thread (async off the training critical path);
+``restore`` applies new shardings (mesh-shape-agnostic — the elastic
+re-mesh path restores onto whatever mesh is available).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
+         keep_last: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    base = pathlib.Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = base / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = _flatten(tree)
+    arrays = {}
+    for i, (_, leaf) in enumerate(leaves):
+        a = np.asarray(leaf)
+        if a.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes
+            a = a.view(np.uint16)
+        arrays[f"a{i}"] = a
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "paths": [p for p, _ in leaves],
+        "dtypes": [str(np.asarray(l).dtype) for _, l in leaves],
+        "shapes": [list(np.asarray(l).shape) for _, l in leaves],
+        "extra": extra or {},
+        "saved_at": time.time(),
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(base, keep_last)
+    return str(final)
+
+
+def save_async(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
+               keep_last: int = 3) -> threading.Thread:
+    """Snapshot to host memory now; write in a background thread."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, extra,
+                                            keep_last), daemon=True)
+    t.start()
+    return t
+
+
+def _gc(base: pathlib.Path, keep_last: int) -> None:
+    steps = sorted(p for p in base.iterdir() if p.name.startswith("step_"))
+    for p in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    base = pathlib.Path(ckpt_dir)
+    if not base.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in base.iterdir()
+                   if p.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like,
+            shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional pytree of NamedShardings —
+    arrays are device_put with them (resharding restore; works across mesh
+    shapes because the on-disk format is unsharded host arrays)."""
+    path = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    import ml_dtypes
+    with np.load(path / "arrays.npz") as z:
+        arrays = {}
+        for i in range(len(manifest["paths"])):
+            a = z[f"a{i}"]
+            if manifest["dtypes"][i] == "bfloat16":
+                a = a.view(ml_dtypes.bfloat16)
+            arrays[manifest["paths"][i]] = a
+
+    like_flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in like_flat[0]:
+        key = jax.tree_util.keystr(p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        a = arrays[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(a.shape) != want_shape:
+            raise ValueError(f"{key}: shape {a.shape} != {want_shape}")
+        leaves.append(a)
+    tree = jax.tree_util.tree_unflatten(like_flat[1], leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(
+            lambda a, l: jax.numpy.asarray(a, dtype=getattr(l, "dtype", None)),
+            tree, like)
+    return tree, manifest["extra"]

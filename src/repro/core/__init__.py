@@ -1,0 +1,21 @@
+"""Managed-Retention Memory (MRM): the paper's contribution as a library.
+
+- memclass:  memory-technology models incl. MRM operating points
+- dcm:       per-write programmable retention (energy/endurance trade-off)
+- tiering:   retention-aware placement of weights / KV / activations
+- refresh:   cluster-level retention tracking + refresh/migrate/drop
+- endurance: Fig.-1 arithmetic, wear accounting, software wear-levelling
+- ecc:       retention-aware large-block error correction
+- simulator: instrumented device/system simulator driven by the serving engine
+"""
+from repro.core.memclass import (TECHNOLOGIES, MemTechnology, get_technology,
+                                 HOUR, DAY, YEAR)
+from repro.core.dcm import WriteOp, endurance_at, plan_write, write_energy
+from repro.core.endurance import (WearLevelingAllocator, WearState,
+                                  weight_update_writes, writes_per_cell)
+from repro.core.ecc import BlockCode, design_code, max_safe_age, rber_at_age
+from repro.core.tiering import (DataClassProfile, PlacementResult, Tier,
+                                evaluate_placement, solve_placement)
+from repro.core.refresh import (Action, RefreshScheduler, RetentionTracker,
+                                ScheduledAction, TrackedRegion)
+from repro.core.simulator import IOStats, MemDevice, MemorySystem

@@ -1,0 +1,187 @@
+"""MRM device + memory-system simulator.
+
+The serving engine drives this with its *real* access stream (weight reads
+per step, KV page writes/reads, activations) so the paper's workload claims
+(read:write ratio, sequentiality, endurance requirements, energy) are
+*measured from the running system*, not asserted.
+
+Instruments per tier: bytes read/written (+ sequentiality), energy, wear
+(via `repro.core.endurance`), refresh traffic (via `repro.core.refresh`),
+and exports the tokens/J / TCO numbers for `benchmarks/mrm_tco.py`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import dcm
+from repro.core.ecc import design_code, rber_at_age
+from repro.core.endurance import WearLevelingAllocator, WearState
+from repro.core.memclass import YEAR, MemTechnology
+from repro.core.refresh import Action, RefreshScheduler, RetentionTracker
+
+
+@dataclass
+class IOStats:
+    read_bytes: float = 0.0
+    write_bytes: float = 0.0
+    refresh_bytes: float = 0.0
+    read_energy_j: float = 0.0
+    write_energy_j: float = 0.0
+    n_reads: int = 0
+    n_writes: int = 0
+    seq_read_bytes: float = 0.0  # reads declared sequential by the caller
+
+    @property
+    def rw_ratio(self) -> float:
+        return self.read_bytes / self.write_bytes if self.write_bytes else float("inf")
+
+    @property
+    def seq_fraction(self) -> float:
+        return self.seq_read_bytes / self.read_bytes if self.read_bytes else 0.0
+
+
+class MemDevice:
+    """One tier: a technology + capacity with wear, retention and ECC."""
+
+    def __init__(self, tech: MemTechnology, capacity_bytes: int,
+                 uber_target: float = 1e-15):
+        self.tech = tech
+        self.capacity = capacity_bytes
+        # wear-tracking granularity: cap the array at ~1M entries so huge
+        # simulated devices stay cheap to track (a tracking block may span
+        # several physical blocks; wear stats are per tracking block)
+        self.track_block_bytes = max(tech.block_bytes,
+                                     -(-capacity_bytes // (1 << 20)))
+        self.n_blocks = max(1, capacity_bytes // self.track_block_bytes)
+        self.wear = WearState(self.n_blocks, self.track_block_bytes,
+                              tech.endurance_device)
+        self.alloc = WearLevelingAllocator(self.wear)
+        self.stats = IOStats()
+        # retention-aware ECC: size the code for the RBER at refresh age
+        if tech.kind == "managed":
+            ref_age = tech.retention_s / 2
+            self.code = design_code(tech.block_bytes,
+                                    rber_at_age(tech, ref_age, tech.retention_s),
+                                    uber_target)
+        else:
+            self.code = design_code(tech.block_bytes, 1e-9, uber_target)
+
+    # -- IO ---------------------------------------------------------------
+    def read(self, nbytes: float, sequential: bool = True) -> None:
+        s = self.stats
+        s.read_bytes += nbytes
+        s.n_reads += 1
+        if sequential:
+            s.seq_read_bytes += nbytes
+        s.read_energy_j += nbytes * 8 * self.tech.read_energy_pj_bit * 1e-12
+
+    def write(self, nbytes: float, expected_lifetime_s: Optional[float] = None,
+              refresh: bool = False) -> dcm.WriteOp:
+        if expected_lifetime_s is None:
+            expected_lifetime_s = self.tech.retention_s / 2.0
+        op = dcm.plan_write(self.tech, expected_lifetime_s)
+        s = self.stats
+        if refresh:
+            s.refresh_bytes += nbytes
+        else:
+            s.write_bytes += nbytes
+            s.n_writes += 1
+        s.write_energy_j += nbytes * 8 * op.energy_pj_bit * 1e-12
+        return op
+
+    def blocks_for(self, nbytes: float) -> int:
+        return max(1, int(-(-nbytes // self.track_block_bytes)))
+
+    @property
+    def energy_j(self) -> float:
+        return self.stats.read_energy_j + self.stats.write_energy_j
+
+    def report(self) -> dict:
+        s = self.stats
+        return {
+            "tech": self.tech.name,
+            "capacity_gb": self.capacity / 1e9,
+            "read_gb": s.read_bytes / 1e9,
+            "write_gb": s.write_bytes / 1e9,
+            "refresh_gb": s.refresh_bytes / 1e9,
+            "rw_ratio": s.rw_ratio,
+            "seq_fraction": s.seq_fraction,
+            "energy_j": self.energy_j,
+            "wear_max": self.wear.max_wear,
+            "wear_ratio": self.wear.wear_ratio,
+            "life_used": self.wear.life_used(),
+            "ecc_overhead": self.code.overhead,
+            "utilization": self.alloc.utilization,
+        }
+
+
+class MemorySystem:
+    """Tiers + retention tracker + refresh scheduler, as one control plane."""
+
+    def __init__(self, tiers: Dict[str, Tuple[MemTechnology, int]],
+                 margin: float = 2.0):
+        self.devices: Dict[str, MemDevice] = {
+            name: MemDevice(tech, cap) for name, (tech, cap) in tiers.items()}
+        self.tracker = RetentionTracker(margin=margin)
+        self.scheduler = RefreshScheduler(self.tracker)
+        self.now = 0.0
+        self._regions: Dict[int, Tuple[str, List[int]]] = {}
+
+    def advance(self, dt: float) -> List:
+        """Advance simulation time; service refresh deadlines."""
+        self.now += dt
+        actions = self.scheduler.tick(self.now)
+        for a in actions:
+            dev = self.devices[a.region.tier]
+            if a.action == Action.REFRESH:
+                dev.write(a.region.bytes,
+                          expected_lifetime_s=a.region.retention_s / self.tracker.margin,
+                          refresh=True)
+                blocks = self._regions.get(a.region.region_id, (None, []))[1]
+                if blocks:
+                    dev.alloc.rewrite_in_place(blocks)
+            else:
+                _, blocks = self._regions.pop(a.region.region_id, (None, []))
+                if blocks:
+                    dev.alloc.free_blocks(blocks)
+        return actions
+
+    def write_region(self, tier: str, owner: str, nbytes: float,
+                     expected_lifetime_s: float, sequential: bool = True) -> Optional[int]:
+        """Allocate + write a region with DCM-programmed retention.
+        Returns a region id (None = allocation failure)."""
+        dev = self.devices[tier]
+        nblocks = dev.blocks_for(nbytes)
+        blocks = dev.alloc.alloc(nblocks)
+        if blocks is None:
+            return None
+        op = dev.write(nbytes, expected_lifetime_s=expected_lifetime_s)
+        rid = self.tracker.track(owner, tier, nblocks, nbytes, self.now,
+                                 op.retention_s)
+        self._regions[rid] = (tier, blocks)
+        return rid
+
+    def read_region(self, rid: int, nbytes: Optional[float] = None,
+                    sequential: bool = True) -> None:
+        r = next((x for x in self.tracker.regions() if x.region_id == rid), None)
+        if r is None:
+            return
+        self.devices[r.tier].read(nbytes if nbytes is not None else r.bytes,
+                                  sequential)
+        self.tracker.touch(rid, self.now)
+
+    def release_region(self, rid: int) -> None:
+        self.tracker.release(rid)
+        entry = self._regions.pop(rid, None)
+        if entry:
+            tier, blocks = entry
+            self.devices[tier].alloc.free_blocks(blocks)
+
+    def report(self) -> dict:
+        return {
+            "now_s": self.now,
+            "tiers": {n: d.report() for n, d in self.devices.items()},
+            "refresh_stats": dict(self.tracker.stats),
+            "total_energy_j": sum(d.energy_j for d in self.devices.values()),
+        }

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the workload's compute hot-spots.
+
+The paper's workload analysis (§2.2: decode reads all weights + the whole
+KV cache per token, sequentially and predictably) identifies attention as
+the IO hot-spot; the Pallas kernels express that insight TPU-natively:
+block-granular HBM->VMEM streaming with MXU-aligned tiles.
+
+Each kernel package has:
+- ``kernel.py`` — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+- ``ops.py``    — jit'd public wrapper (layout plumbing, defaults)
+- ``ref.py``    — pure-jnp oracle used by the allclose test sweeps
+
+On this CPU container kernels are validated with ``interpret=True``; the
+model's dry-run path uses the pure-XLA implementations (DESIGN.md §4).
+"""

@@ -1,0 +1,103 @@
+"""Decode-attention Pallas TPU kernel: one query token vs a paged KV cache.
+
+This kernel is the direct TPU expression of the paper's central IO claim:
+decode reads the *entire* KV cache sequentially, page by page, for a single
+appended vector. The grid walks (batch*kv-head, page) with pages streamed
+HBM->VMEM as (page_size, head_dim) blocks — exactly the block-granular,
+predictable read stream MRM is designed to serve — while the G grouped
+queries ride along in VMEM scratch with online-softmax state.
+
+Masking is position-based against a stored-positions page (ring-buffer
+caches, windowed layers) so the kernel serves both dense and windowed
+layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, cap: Optional[float], window: Optional[int],
+                   n_pages: int):
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]          # (G, D)
+    k = k_ref[0]          # (page, D)
+    v = v_ref[0]
+    pos = pos_ref[0]      # (page,) stored absolute positions
+    cur = cur_ref[0]      # scalar current position
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, page)
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    valid = (pos >= 0) & (pos <= cur)
+    if window is not None:
+        valid &= pos > (cur - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_bh(q, k_pages, v_pages, pos, cur_pos, *,
+                        scale: float, cap: Optional[float] = None,
+                        window: Optional[int] = None, page_size: int = 512,
+                        interpret: bool = True):
+    """q: (BH, G, D) grouped queries; k/v_pages: (BH, C, D) cache;
+    pos: (BH, C) stored positions; cur_pos: (BH,) int32. -> (BH, G, D)."""
+    BH, G, D = q.shape
+    C = k_pages.shape[1]
+    page_size = min(page_size, C)
+    assert C % page_size == 0
+    n_pages = C // page_size
+
+    kernel = functools.partial(_decode_kernel, scale=scale, cap=cap,
+                               window=window, n_pages=n_pages)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, pi: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, D), lambda b, pi: (b, pi, 0)),
+            pl.BlockSpec((1, page_size, D), lambda b, pi: (b, pi, 0)),
+            pl.BlockSpec((1, page_size), lambda b, pi: (b, pi)),
+            pl.BlockSpec((1,), lambda b, pi: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, pi: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),     # m
+            pltpu.VMEM((G,), jnp.float32),     # l
+            pltpu.VMEM((G, D), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k_pages, v_pages, pos, cur_pos)

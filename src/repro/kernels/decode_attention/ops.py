@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for the decode kernel: (B, 1, H, D) GQA layout."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_bh
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "cap", "window",
+                                             "page_size", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_pos, cur_pos, *, scale: float,
+                     cap: Optional[float] = None, window: Optional[int] = None,
+                     page_size: int = 512, interpret: bool = True):
+    """q: (B, 1, H, D); caches: (B, C, Hkv, D); cache_pos: (B, C);
+    cur_pos: scalar or (B,). -> (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qf = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    posf = jnp.repeat(cache_pos[:, None, :], Hkv, axis=1).reshape(B * Hkv, C)
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1, 1) if
+                           jnp.ndim(cur_pos) else jnp.full((B, 1), cur_pos, jnp.int32),
+                           (B, Hkv)).reshape(B * Hkv)
+    out = decode_attention_bh(qf, kf, vf, posf, cur, scale=scale, cap=cap,
+                              window=window, page_size=page_size,
+                              interpret=interpret)
+    return out.reshape(B, Hkv, G, D).reshape(B, 1, H, D)

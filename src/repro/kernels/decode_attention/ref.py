@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(q, k_pages, v_pages, pos, cur_pos, *, scale: float,
+                         cap: Optional[float] = None,
+                         window: Optional[int] = None):
+    """q: (BH, G, D); k/v_pages: (BH, C, D); pos: (BH, C); cur_pos: (BH,)."""
+    s = jnp.einsum("bgd,bcd->bgc", q.astype(jnp.float32),
+                   k_pages.astype(jnp.float32)) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    cur = cur_pos[:, None]
+    valid = (pos >= 0) & (pos <= cur)
+    if window is not None:
+        valid &= pos > (cur - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    return jnp.einsum("bgc,bcd->bgd", p / l,
+                      v_pages.astype(jnp.float32)).astype(q.dtype)

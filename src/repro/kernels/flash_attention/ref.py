@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q, k, v, *, scale: float, cap: Optional[float] = None,
+                  window: Optional[int] = None, causal: bool = True,
+                  kv_len: Optional[int] = None):
+    """q: (BH, Sq, D); k/v: (BH, Skv, D) -> (BH, Sq, D). Naive softmax."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > (qpos - window)
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    return jnp.einsum("bqk,bkd->bqd", p / l, v.astype(jnp.float32)).astype(q.dtype)

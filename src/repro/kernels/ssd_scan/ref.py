@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the naive O(S) sequential
+state-space recurrence (token by token), independently implemented from the
+chunked algorithm so the test sweep cross-validates both."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xdt, da, b, c):
+    """xdt: (BH, S, P); da: (BH, S); b/c: (BH, S, N) -> y (BH, S, P).
+
+    state_t = exp(da_t) * state_{t-1} + b_t (outer) xdt_t
+    y_t     = state_t @ c_t
+    """
+    BH, S, P = xdt.shape
+    N = b.shape[-1]
+
+    def step(state, xs):
+        x_t, da_t, b_t, c_t = xs
+        state = state * jnp.exp(da_t)[:, None, None] + \
+            x_t[:, :, None].astype(jnp.float32) * b_t[:, None, :].astype(jnp.float32)
+        y_t = jnp.einsum("bpn,bn->bp", state, c_t.astype(jnp.float32))
+        return state, y_t
+
+    xs = (xdt.transpose(1, 0, 2), da.transpose(1, 0),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    state0 = jnp.zeros((BH, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2).astype(xdt.dtype)

@@ -1,0 +1,64 @@
+"""Serving driver: a reduced model computes real tokens while the MRM
+control plane meters the deployment-size memory system.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
+      --requests 8 --max-new 16 --kv-tier mrm_rram --weight-tier mrm_rram
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--weight-tier", default="mrm_rram")
+    ap.add_argument("--kv-tier", default="mrm_rram")
+    ap.add_argument("--hbm-gb", type=float, default=64)
+    ap.add_argument("--mrm-gb", type=float, default=512)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--session-s", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import get_technology
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServeEngine
+
+    full = get_config(args.arch)
+    cfg = reduced(full)
+    params = init_params(cfg, jax.random.key(args.seed))
+
+    tiers = {"hbm": (get_technology("hbm3e"), int(args.hbm_gb * 2**30))}
+    for t in {args.weight_tier, args.kv_tier} - {"hbm"}:
+        tiers[t] = (get_technology(t), int(args.mrm_gb * 2**30))
+    mem = MemorySystem(tiers)
+
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=args.slots, max_cache_len=128,
+                                   weight_tier=args.weight_tier,
+                                   kv_tier=args.kv_tier,
+                                   expected_session_s=args.session_s),
+                      account_cfg=full)
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        prompt = list(rng.integers(2, cfg.vocab_size, rng.integers(8, 48)))
+        if cfg.n_codebooks > 1:
+            prompt = [list(rng.integers(0, cfg.vocab_size, cfg.n_codebooks))
+                      for _ in range(len(prompt))]
+        eng.submit(prompt, max_new_tokens=args.max_new)
+    rep = eng.run_until_idle()
+    print(json.dumps(rep, indent=1, default=float))
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Training driver: data pipeline -> jitted train_step -> checkpoint/restart,
+with the fault-tolerance control loop (heartbeats, elastic re-mesh planning,
+straggler policy) wired in.
+
+On this CPU container it trains *reduced* configs for real (examples/
+train_tiny_lm.py drives it); on hardware the same driver runs the full
+configs — the only difference is the mesh and the --reduced flag.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+      --steps 50 --seq-len 128 --batch 8 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--remat", default=None, choices=[None, "none", "dots", "full"])
+    ap.add_argument("--compress", default="none", choices=["none", "int8", "topk"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--inject-failure-at", type=int, default=-1,
+                    help="simulate a worker failure at this step (FT test)")
+    args = ap.parse_args(argv)
+
+    from repro import ckpt as ckpt_lib
+    from repro.configs import get_config, reduced as reduce_cfg
+    from repro.data import DataConfig, SyntheticPipeline
+    from repro.models import init_params
+    from repro.optim import OptConfig, init_opt_state
+    from repro.optim.compress import compress_decompress, init_state as comp_init
+    from repro.runtime.fault_tolerance import ClusterState
+    from repro.train import make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    if args.remat:
+        cfg = dataclasses.replace(cfg, remat=args.remat)
+    oc = OptConfig(lr=args.lr, warmup_steps=args.warmup, total_steps=args.steps)
+
+    pipeline = SyntheticPipeline(cfg, DataConfig(
+        seq_len=args.seq_len, global_batch=args.batch, seed=args.seed))
+
+    params = init_params(cfg, jax.random.key(args.seed))
+    opt_state = init_opt_state(params)
+    start_step = 0
+    if args.resume and args.ckpt_dir:
+        last = ckpt_lib.latest_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt_state), extra = ckpt_lib.restore(
+                args.ckpt_dir, last, (params, opt_state))
+            start_step = extra.get("step", last)
+            print(f"[train] resumed from step {start_step}")
+
+    base_step = make_train_step(cfg, oc)
+    comp_state = comp_init(params) if args.compress != "none" else None
+
+    if args.compress != "none":
+        from repro.models.transformer import loss_and_metrics
+        from repro.optim.adamw import adamw_update
+
+        def step_fn(params, opt_state, comp_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_and_metrics(cfg, p, batch), has_aux=True)(params)
+            grads, comp_state = compress_decompress(grads, comp_state, args.compress)
+            new_p, new_o, stats = adamw_update(oc, params, grads, opt_state)
+            return new_p, new_o, comp_state, dict(metrics, loss=loss, **stats)
+
+        jstep = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    else:
+        jstep = jax.jit(base_step, donate_argnums=(0, 1))
+
+    cluster = ClusterState(workers=[f"w{i}" for i in range(4)], chips_per_worker=1)
+    history = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipeline.batch_at(step).items()}
+        ts = time.time()
+        if args.compress != "none":
+            params, opt_state, comp_state, metrics = jstep(params, opt_state,
+                                                           comp_state, batch)
+        else:
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+        dt = time.time() - ts
+
+        # fault-tolerance control loop (simulated single-host: all workers
+        # report the measured step time; failure injection drops one)
+        now = time.time() - t0
+        times = {w: dt for w in cluster.workers}
+        if args.inject_failure_at >= 0 and step == args.inject_failure_at:
+            print(f"[ft] injecting failure of w0 at step {step}")
+            if "w0" not in cluster.evicted:
+                cluster.evicted.append("w0")
+            for w in cluster.workers[1:]:
+                cluster.monitor.beat(w, now)
+        else:
+            for w in cluster.workers:
+                if w not in cluster.evicted:
+                    cluster.monitor.beat(w, now)
+        plan = cluster.handle_step(now, times)
+        if plan is not None:
+            print(f"[ft] re-mesh plan: {plan}")
+            if args.ckpt_dir:
+                ckpt_lib.save(args.ckpt_dir, step, (params, opt_state),
+                              extra={"step": step})
+                print(f"[ft] checkpointed at step {step} for elastic restart")
+
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            history.append({"step": step, "loss": loss, "dt_s": dt})
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"grad_norm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt*1e3:.0f} ms)")
+        if args.ckpt_dir and step > 0 and step % args.ckpt_every == 0:
+            ckpt_lib.save_async(args.ckpt_dir, step, (params, opt_state),
+                                extra={"step": step})
+    print(json.dumps({"final_loss": history[-1]["loss"] if history else None,
+                      "steps": args.steps, "wall_s": time.time() - t0}))
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model stack: composable transformer/SSM/MoE/MLA/hybrid families."""
+from repro.models.transformer import (abstract_params, decode, init_caches,
+                                      init_params, loss_and_metrics, model_defs,
+                                      prefill)
+from repro.models.frontends import decode_input_specs, input_specs, sample_batch
+
+__all__ = [
+    "abstract_params", "decode", "init_caches", "init_params",
+    "loss_and_metrics", "model_defs", "prefill",
+    "decode_input_specs", "input_specs", "sample_batch",
+]

@@ -1,0 +1,64 @@
+"""Modality-frontend STUBS (per the assignment: `[audio]`/`[vlm]` entries
+specify the transformer BACKBONE only; `input_specs()` provides precomputed
+frame/patch embeddings).
+
+`input_specs` builds the exact abstract inputs each (arch x shape) dry-run
+cell lowers with; `sample_batch` builds small concrete inputs for smoke
+tests and examples.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+
+
+def token_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.n_codebooks > 1:
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for train/prefill steps (ShapeDtypeStruct only)."""
+    B, S = shape.global_batch, shape.seq_len
+    text_len = S - (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct(token_shape(cfg, B, text_len), jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(token_shape(cfg, B, text_len), jnp.int32)
+    if cfg.frontend == "vision":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for one serve/decode step (token + position)."""
+    B = shape.global_batch
+    return {
+        "last_tokens": jax.ShapeDtypeStruct(token_shape(cfg, B, 1), jnp.int32),
+        "cur_pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def sample_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 with_labels: bool = True) -> Dict[str, jax.Array]:
+    """Small concrete batch for smoke tests (deterministic)."""
+    rng = np.random.default_rng(seed)
+    text_len = seq - (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    tshape = token_shape(cfg, batch, text_len)
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, tshape), jnp.int32)}
+    if with_labels:
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, tshape), jnp.int32)
+    if cfg.frontend == "vision":
+        out["image_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (batch, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    return out

@@ -1,0 +1,147 @@
+"""Shared layer primitives: RMSNorm, RoPE, activations, (gated) MLPs,
+embeddings and LM heads. Pure functions over ParamDef-described params."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDef
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_def(dim: int, axis_name: str = "embed") -> ParamDef:
+    return ParamDef((dim,), (axis_name,), init="zeros")  # (1+g) parameterization
+
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (NeoX half-rotation style)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: scalar, (S,), or (B, S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    pos = jnp.asarray(positions, jnp.float32)
+    ang = pos[..., None] * inv  # (..., d/2)
+    # normalize to broadcast against (B, S, H, d/2)
+    if pos.ndim == 0:
+        ang = ang.reshape(1, 1, 1, -1)
+    elif pos.ndim == 1:  # (S,)
+        ang = ang[None, :, None, :]
+    elif pos.ndim == 2:  # (B, S)
+        ang = ang[:, :, None, :]
+    else:
+        raise ValueError(f"positions rank {pos.ndim}")
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / softcap
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    if name in ("silu",):
+        return jax.nn.silu
+    if name in ("gelu", "gelu_plain"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain)
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    gated = cfg.act in ("silu", "gelu")
+    defs = {
+        "w_up": ParamDef((d, d_ff), ("embed", "ff")),
+        "w_down": ParamDef((d_ff, d), ("ff", "embed")),
+    }
+    if gated:
+        defs["w_gate"] = ParamDef((d, d_ff), ("embed", "ff"))
+    return defs
+
+
+def mlp(cfg: ModelConfig, p: dict, x, constrain=None):
+    act = activation(cfg.act)
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * up
+    else:
+        h = act(up)
+    if constrain is not None:
+        h = constrain(h, ("act_batch", "act_seq", "act_ff"))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> dict:
+    v, d, k = cfg.padded_vocab, cfg.d_model, cfg.n_codebooks
+    shape = (k, v, d) if k > 1 else (v, d)
+    axes = ("codebooks", "vocab", "embed") if k > 1 else ("vocab", "embed")
+    emb_std = d ** -0.5 if cfg.tie_embeddings else 1.0
+    defs = {"embedding": ParamDef(shape, axes, std=emb_std)}
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef(shape, axes)
+    return defs
+
+
+def embed(cfg: ModelConfig, p: dict, tokens):
+    """tokens: (B, S) int32 or (B, S, K) for multi-codebook audio."""
+    e = p["embedding"]
+    if cfg.n_codebooks > 1:
+        # sum codebook embeddings: e (K, V, D), tokens (B, S, K)
+        out = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), e.dtype)
+        for k in range(cfg.n_codebooks):
+            out = out + jnp.take(e[k], tokens[..., k], axis=0)
+    else:
+        out = jnp.take(e, tokens, axis=0)
+    if cfg.scale_embeddings:
+        out = out * jnp.asarray(math.sqrt(cfg.d_model), out.dtype)
+    return out
+
+
+def lm_logits(cfg: ModelConfig, p: dict, x):
+    """x: (..., D) -> logits (..., V) or (..., K, V) for multi-codebook."""
+    table = p["embedding"] if cfg.tie_embeddings else p["lm_head"]
+    if cfg.n_codebooks > 1:
+        logits = jnp.einsum("...d,kvd->...kv", x, table)
+    else:
+        logits = x @ table.T
+    return softcap(logits, cfg.final_softcap)

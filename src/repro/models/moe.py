@@ -1,0 +1,145 @@
+"""Mixture-of-Experts MLP with expert parallelism.
+
+Dispatch is the GShard/Switch capacity-slot formulation: tokens are split
+into fixed-size *groups*; within a group, top-k routing builds a one-hot
+(group, experts, capacity) dispatch tensor contracted with token activations
+(einsum dispatch is the portable TPU pattern under pjit — it produces the
+expected all-to-all/all-gather collectives for the roofline, and its FLOP
+overhead is g*cf/(3*d_ff) per pass, kept small by the group-size knob).
+Groups are processed under lax.scan so dispatch temporaries stay bounded.
+
+Experts are sharded over the ``model`` mesh axis (EP); shared experts
+(DeepSeek-V2) run densely for every token.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import activation
+from repro.models.param import ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    gated = cfg.act in ("silu", "gelu")
+    defs = {
+        "router": ParamDef((d, e), ("embed", "experts")),
+        "w_up": ParamDef((e, d, f), ("experts", "embed", "ff")),
+        "w_down": ParamDef((e, f, d), ("experts", "ff", "embed")),
+    }
+    if gated:
+        defs["w_gate"] = ParamDef((e, d, f), ("experts", "embed", "ff"))
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        defs["shared_up"] = ParamDef((d, fs), ("embed", "ff"))
+        defs["shared_down"] = ParamDef((fs, d), ("ff", "embed"))
+        if gated:
+            defs["shared_gate"] = ParamDef((d, fs), ("embed", "ff"))
+    return defs
+
+
+def _group_size(cfg: ModelConfig, seq_len: int) -> int:
+    # groups are chunks of the SEQUENCE dim (batch stays a sharded batch dim
+    # — see moe_sublayer); keep dispatch-FLOP overhead ~ g*cf/(3*f) small
+    # but groups big enough for stable capacity utilization
+    g = 256
+    while g * 2 <= min(seq_len, 4096) and (g * 2 * cfg.capacity_factor) / (3 * cfg.expert_d_ff) < 0.03:
+        g *= 2
+    while seq_len % g:
+        g //= 2
+    return max(g, 1)
+
+
+def route(cfg: ModelConfig, router_w, tokens):
+    """tokens: (T, d) -> (weights (T, k), idx (T, k), aux_loss scalar)."""
+    logits = (tokens @ router_w).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    e = cfg.n_experts
+    me = probs.mean(axis=0)  # mean router prob per expert
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / idx.size
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+    return w.astype(tokens.dtype), idx, aux
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, xe, sh=None):
+    """xe: (B, E, C, d) -> (B, E, C, d). Experts shard over the model axis
+    (EP); when n_experts doesn't divide it (mixtral: 8e vs 16-way), the
+    constraint on h falls back to sharding d_ff (TP inside each expert)."""
+    act = activation(cfg.act)
+    up = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    if "w_gate" in p:
+        h = act(jnp.einsum("becd,edf->becf", xe, p["w_gate"])) * up
+    else:
+        h = act(up)
+    if sh is not None:
+        h = sh.c(h, ("act_batch", "act_experts", None, "act_ff"))
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+
+def moe_sublayer(cfg: ModelConfig, p: dict, x, sh=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux loss scalar).
+
+    Groups are chunks of the SEQUENCE dim; the batch dim rides through the
+    group scan as a batched (data-sharded) dim. (Grouping flattened B*S
+    tokens would put the sharded batch axis on the scan's xs leading dim,
+    which GSPMD must replicate — 16x redundant expert compute. Found via
+    the roofline useful-FLOPs ratio; see EXPERIMENTS.md §Perf.)
+    """
+    B, S, d = x.shape
+    k, E = cfg.moe_top_k, cfg.n_experts
+    g = _group_size(cfg, S)
+    n_groups = S // g
+    cap = max(4, int(round(g / E * k * cfg.capacity_factor)))
+    cap = min(cap, g)
+
+    w_all, idx_all, aux = route(cfg, p["router"], x.reshape(B * S, d))
+    # (n_groups, B, g, ...) — scan axis leading, batch stays sharded inside
+    tok_g = x.reshape(B, n_groups, g, d).transpose(1, 0, 2, 3)
+    w_g = w_all.reshape(B, n_groups, g, k).transpose(1, 0, 2, 3)
+    idx_g = idx_all.reshape(B, n_groups, g, k).transpose(1, 0, 2, 3)
+
+    def per_group(carry, xs):
+        tg, wg, ig = xs  # (B,g,d), (B,g,k), (B,g,k)
+        oh = jax.nn.one_hot(ig, E, dtype=jnp.float32)      # (B,g,k,E)
+        flat = oh.reshape(B, g * k, E)
+        # priority: earlier tokens / earlier choices claim capacity first
+        pos = jnp.cumsum(flat, axis=1) - flat              # slot within expert
+        slot_idx = (pos * flat).sum(-1)                    # (B, g*k)
+        keep = (slot_idx < cap)[..., None]
+        slot = jax.nn.one_hot(slot_idx, cap, dtype=jnp.float32)  # (B,g*k,cap)
+        disp = (flat * keep)[..., :, None] * slot[..., None, :]  # (B,g*k,E,cap)
+        disp = disp.reshape(B, g, k, E, cap)
+        combine = disp * wg[..., None, None].astype(jnp.float32)
+        disp_tok = disp.sum(2)                             # (B,g,E,cap)
+        if sh is not None:
+            disp_tok = sh.c(disp_tok, ("act_batch", None, "act_experts", None))
+        xe = jnp.einsum("bgec,bgd->becd", disp_tok.astype(tg.dtype), tg)
+        if sh is not None:
+            xe = sh.c(xe, ("act_batch", "act_experts", None, None))
+        ye = _expert_ffn(cfg, p, xe, sh=sh)
+        out = jnp.einsum("bgkec,becd->bgd", combine.astype(ye.dtype), ye)
+        return carry, out
+
+    if n_groups == 1:
+        _, out_g = per_group(0.0, (tok_g[0], w_g[0], idx_g[0]))
+        outs = out_g[None]
+    else:
+        _, outs = jax.lax.scan(jax.checkpoint(per_group), 0.0,
+                               (tok_g, w_g, idx_g))
+    out = outs.transpose(1, 0, 2, 3).reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        act = activation(cfg.act)
+        up = x @ p["shared_up"]
+        h = act(x @ p["shared_gate"]) * up if "shared_gate" in p else act(up)
+        if sh is not None:
+            h = sh.c(h, ("act_batch", "act_seq", "act_ff"))
+        out = out + h @ p["shared_down"]
+    return out, aux

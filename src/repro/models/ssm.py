@@ -1,0 +1,209 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: within-chunk "attention"
+with cumulative decay masks + an inter-chunk state recurrence carried by
+lax.scan (so the materialized decay mask is (B, H, chunk, chunk), never
+(B, H, S, S)). Decode is the O(1) per-token recurrence over the
+(H, headdim, state) SSM state — the arch that makes `long_500k` trivial.
+
+The Pallas twin of the chunk computation lives in
+`repro.kernels.ssd_scan`; this pure-XLA path is the dry-run/oracle path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDef
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    ng, ns, nh, cw = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv
+    conv_dim = di + 2 * ng * ns
+    return {
+        "in_proj": ParamDef((d, 2 * di + 2 * ng * ns + nh), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cw, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamDef((nh,), ("ssm_heads",), init="a_log", dtype="float32"),
+        "d_skip": ParamDef((nh,), ("ssm_heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="dt_bias", dtype="float32"),
+        "norm_g": ParamDef((di,), ("ssm_inner",), init="zeros"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, ng, ns, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + ng * ns]
+    c = zxbcdt[..., 2 * di + ng * ns:2 * di + 2 * ng * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ng * ns:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv via shifted adds. xbc: (B, S, C); w: (W, C).
+    state: (B, W-1, C) left context for decode/streaming; returns (y, new_state)."""
+    W = w.shape[0]
+    Bsz, S, C = xbc.shape
+    if state is None:
+        state = jnp.zeros((Bsz, W - 1, C), xbc.dtype)
+    ext = jnp.concatenate([state, xbc], axis=1)  # (B, S+W-1, C)
+    y = jnp.zeros((Bsz, S, C), jnp.float32)
+    for i in range(W):
+        y = y + ext[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = ext[:, S:, :] if S >= W - 1 else ext[:, -(W - 1):, :]
+    return jax.nn.silu(y).astype(xbc.dtype), new_state
+
+
+def _segsum(a):
+    """log-space segment sums: a (..., L) -> (..., L, L) lower-triangular.
+    S(i,j) = sum_{t=j+1..i} a_t = cs_i - cs_j for i >= j, else -inf."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """SSD over a full sequence.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative;
+    b, c: (B, S, G, N) with H % G == 0. Returns (y (B,S,H,P), final state
+    (B, H, P, N)).
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+
+    xr = x.reshape(B, nc, L, H, P)
+    dtr = dt.reshape(B, nc, L, H)
+    br = b.reshape(B, nc, L, G, N)
+    cr = c.reshape(B, nc, L, G, N)
+    # broadcast groups to heads
+    bh = jnp.repeat(br, rep, axis=3)  # (B, nc, L, H, N)
+    ch = jnp.repeat(cr, rep, axis=3)
+
+    da = dtr * a[None, None, None, :]           # (B, nc, L, H) log-decay
+    da_cs = jnp.cumsum(da, axis=2)              # cumulative within chunk
+    seg = _segsum(da.transpose(0, 1, 3, 2))     # (B, nc, H, L, L)
+    decay_mask = jnp.exp(seg)
+
+    x_dt = xr * dtr[..., None]
+
+    def chunk_step(state, xs):
+        # state: (B, H, P, N)
+        xc, bc, cc, dmask, dacs = xs  # per-chunk slices; xc is x*dt
+        # intra-chunk (the "attention" form)
+        cb = jnp.einsum("blhn,bshn->bhls", cc, bc, preferred_element_type=jnp.float32)
+        y_in = jnp.einsum("bhls,bshp->blhp", cb * dmask, xc,
+                          preferred_element_type=jnp.float32)
+        # contribution from carried-in state
+        state_decay = jnp.exp(dacs)  # (B, L, H)
+        y_off = jnp.einsum("blhn,bhpn,blh->blhp", cc, state, state_decay,
+                           preferred_element_type=jnp.float32)
+        # update state: state' = decay_total * state + sum_s decay_tail_s * B_s x_s
+        tail = jnp.exp(dacs[:, -1:, :] - dacs)  # (B, L, H)
+        new_state = jnp.einsum("bshn,bshp,bsh->bhpn", bc, xc, tail,
+                               preferred_element_type=jnp.float32)
+        total = jnp.exp(dacs[:, -1, :])  # (B, H)
+        state = state * total[..., None, None] + new_state
+        return state, (y_in + y_off)
+
+    xs = (
+        x_dt.transpose(1, 0, 2, 3, 4),
+        bh.transpose(1, 0, 2, 3, 4),
+        ch.transpose(1, 0, 2, 3, 4),
+        decay_mask.transpose(1, 0, 2, 3, 4),
+        da_cs.transpose(1, 0, 2, 3),
+    )
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y.astype(x.dtype), state
+
+
+def ssd_decode(x1, dt1, a, b1, c1, state):
+    """One-token recurrence. x1: (B, H, P); dt1: (B, H); b1/c1: (B, G, N);
+    state: (B, H, P, N) -> (y (B, H, P), new state)."""
+    B, H, P = x1.shape
+    G, N = b1.shape[1], b1.shape[2]
+    rep = H // G
+    bh = jnp.repeat(b1, rep, axis=1)  # (B, H, N)
+    ch = jnp.repeat(c1, rep, axis=1)
+    decay = jnp.exp(dt1 * a[None, :])  # (B, H)
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", bh, x1.astype(jnp.float32), dt1, preferred_element_type=jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch, preferred_element_type=jnp.float32)
+    return y.astype(x1.dtype), state
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype, abstract=False) -> dict:
+    di, ng, ns = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    nh, hd, cw = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_conv
+    conv_dim = di + 2 * ng * ns
+    shapes = {
+        "conv": ((batch, cw - 1, conv_dim), dtype),
+        "state": ((batch, nh, hd, ns), jnp.float32),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def ssm_sublayer(
+    cfg: ModelConfig,
+    p: dict,
+    x,
+    *,
+    sh=None,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, d_model) -> (out, updated cache or None)."""
+    from repro.models.layers import rmsnorm  # avoid cycle
+
+    B, S, d = x.shape
+    di, nh, hd = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    ng, ns = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xi, b, c, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    xbc = jnp.concatenate([xi, b, c], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xi, b, c = xbc[..., :di], xbc[..., di:di + ng * ns], xbc[..., di + ng * ns:]
+    xh = xi.reshape(B, S, nh, hd)
+    if sh is not None:
+        xh = sh.c(xh, ("act_batch", None, "act_heads", None))
+    bg = b.reshape(B, S, ng, ns)
+    cg = c.reshape(B, S, ng, ns)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        y1, new_state = ssd_decode(xh[:, 0], dt[:, 0], a, bg[:, 0], cg[:, 0], cache["state"])
+        y = y1[:, None]
+    else:
+        y, final_state = ssd_chunked(xh, dt, a, bg, cg, cfg.ssm_chunk)
+        new_state = final_state
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm_g"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if cache is not None:
+        new_cache = {"conv": new_conv, "state": new_state}
+    return out, new_cache

@@ -1,0 +1,315 @@
+"""Model assembly: embeddings -> scanned layer groups -> head.
+
+Layers are grouped into runs of identical (or 2-alternating) LayerSpecs
+(`ModelConfig.scan_groups`) and executed under `lax.scan` with stacked
+parameters — this keeps HLO size and compile time bounded for 80-layer
+models and is what makes the 512-device dry-run tractable.
+
+Entry points:
+- ``loss_and_metrics`` — training forward (+ seq-chunked CE so the
+  (B, S, vocab) logits tensor never materializes);
+- ``prefill``          — returns last-position logits + per-group KV caches
+  (ring-buffered to the window for local-attention layers);
+- ``decode``           — one-token step against the caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, ScanGroup
+from repro.models import param as prm
+from repro.models.attention import (abstract_cache, attention_sublayer, attn_defs,
+                                    cache_len_for, init_cache)
+from repro.models.hybrid import hybrid_defs, hybrid_sublayer
+from repro.models.layers import embed, embed_defs, lm_logits, mlp, mlp_defs, rmsnorm, rmsnorm_def
+from repro.models.mla import mla_cache_init, mla_defs, mla_sublayer
+from repro.models.moe import moe_defs, moe_sublayer
+from repro.models.param import ParamDef
+from repro.models.ssm import ssm_cache_init, ssm_defs, ssm_sublayer
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig, spec: LayerSpec) -> dict:
+    defs: dict = {"norm1": rmsnorm_def(cfg.d_model)}
+    if spec.kind == "attn":
+        defs["mixer"] = attn_defs(cfg)
+    elif spec.kind == "mla":
+        defs["mixer"] = mla_defs(cfg)
+    elif spec.kind == "ssm":
+        defs["mixer"] = ssm_defs(cfg)
+    elif spec.kind == "hybrid":
+        defs["mixer"] = hybrid_defs(cfg)
+    if cfg.post_norms:
+        defs["post_norm1"] = rmsnorm_def(cfg.d_model)
+    if spec.mlp != "none":
+        defs["norm2"] = rmsnorm_def(cfg.d_model)
+        defs["mlp"] = moe_defs(cfg) if spec.mlp == "moe" else mlp_defs(cfg, cfg.d_ff)
+        if cfg.post_norms:
+            defs["post_norm2"] = rmsnorm_def(cfg.d_model)
+    return defs
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    groups = []
+    for g in cfg.scan_groups():
+        unit_defs = tuple(prm.stack_defs(block_defs(cfg, spec), g.repeats) for spec in g.unit)
+        groups.append(unit_defs)
+    defs = {
+        "embed": embed_defs(cfg),
+        "groups": tuple(groups),
+        "final_norm": rmsnorm_def(cfg.d_model),
+    }
+    if cfg.n_meta_tokens:
+        defs["meta_tokens"] = ParamDef((cfg.n_meta_tokens, cfg.d_model),
+                                       (None, "embed"), std=0.02)
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return prm.materialize(model_defs(cfg), key, cfg.param_dtype)
+
+
+def abstract_params(cfg: ModelConfig, shardings=None):
+    return prm.abstract(model_defs(cfg), cfg.param_dtype, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x, *, positions,
+                sh=None, cache=None, mode="train", cur_pos=None):
+    """Pre-norm residual block. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        h, new_cache = attention_sublayer(cfg, p["mixer"], h, positions=positions,
+                                          window=spec.window, sh=sh, cache=cache,
+                                          mode=mode, cur_pos=cur_pos)
+    elif spec.kind == "mla":
+        h, new_cache = mla_sublayer(cfg, p["mixer"], h, positions=positions, sh=sh,
+                                    cache=cache, mode=mode, cur_pos=cur_pos)
+    elif spec.kind == "ssm":
+        h, new_cache = ssm_sublayer(cfg, p["mixer"], h, sh=sh, cache=cache, mode=mode)
+    elif spec.kind == "hybrid":
+        h, new_cache = hybrid_sublayer(cfg, p["mixer"], h, positions=positions,
+                                       window=spec.window, sh=sh, cache=cache,
+                                       mode=mode, cur_pos=cur_pos)
+    else:
+        raise ValueError(spec.kind)
+    if cfg.post_norms:
+        h = rmsnorm(h, p["post_norm1"], cfg.norm_eps)
+    x = x + h
+    if sh is not None:
+        x = sh.c(x, ("act_batch", "act_seq_res", "act_embed"))
+
+    if spec.mlp != "none":
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            h, aux = moe_sublayer(cfg, p["mlp"], h, sh=sh)
+        else:
+            h = mlp(cfg, p["mlp"], h, constrain=(sh.c if sh is not None else None))
+        if cfg.post_norms:
+            h = rmsnorm(h, p["post_norm2"], cfg.norm_eps)
+        x = x + h
+        if sh is not None:
+            x = sh.c(x, ("act_batch", "act_seq_res", "act_embed"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def _unit_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
+                dtype, abstract: bool):
+    if spec.kind == "attn":
+        clen = cache_len_for(spec.window, max_len)
+        return (abstract_cache if abstract else init_cache)(cfg, batch, clen, dtype)
+    if spec.kind == "mla":
+        return mla_cache_init(cfg, batch, max_len, dtype, abstract=abstract)
+    if spec.kind == "ssm":
+        return ssm_cache_init(cfg, batch, dtype, abstract=abstract)
+    if spec.kind == "hybrid":
+        clen = cache_len_for(spec.window, max_len)
+        return {
+            "attn": (abstract_cache if abstract else init_cache)(cfg, batch, clen, dtype),
+            "ssm": ssm_cache_init(cfg, batch, dtype, abstract=abstract),
+        }
+    raise ValueError(spec.kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                abstract: bool = False):
+    """Per-group tuple of per-unit-position caches stacked over repeats."""
+    def stack(tree, r):
+        if abstract:
+            return jax.tree.map(lambda s: jax.ShapeDtypeStruct((r,) + s.shape, s.dtype), tree)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (r,) + a.shape).copy()
+                            if hasattr(a, "shape") else a, tree)
+
+    groups = []
+    for g in cfg.scan_groups():
+        groups.append(tuple(
+            stack(_unit_cache(cfg, spec, batch, max_len, dtype, abstract), g.repeats)
+            for spec in g.unit))
+    return tuple(groups)
+
+
+# ---------------------------------------------------------------------------
+# Trunk
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch: dict, sh=None):
+    """tokens (+ frontend embeds + meta tokens) -> x (B, S_total, d), and the
+    index of the first 'real' output position (for loss slicing)."""
+    x = embed(cfg, params["embed"], batch["tokens"])
+    prefix = 0
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+        prefix += img.shape[1]
+    if cfg.n_meta_tokens:
+        B = x.shape[0]
+        meta = jnp.broadcast_to(params["meta_tokens"][None].astype(x.dtype),
+                                (B, cfg.n_meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+        prefix += cfg.n_meta_tokens
+    if sh is not None:
+        x = sh.c(x, ("act_batch", "act_seq_res", "act_embed"))
+    return x, prefix
+
+
+def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
+                 caches=None, mode="train", cur_pos=None):
+    """Run every scan group. Returns (x, new_caches, aux_total)."""
+    groups = cfg.scan_groups()
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for gi, g in enumerate(groups):
+        gp = params["groups"][gi]
+        gc = caches[gi] if caches is not None else None
+
+        def body(carry, xs, _g=g):
+            xx, aux = carry
+            if caches is not None:
+                params_t, caches_t = xs
+            else:
+                params_t, caches_t = xs, tuple(None for _ in _g.unit)
+            outs = []
+            for u, spec in enumerate(_g.unit):
+                xx, c_new, aux_u = apply_block(
+                    cfg, spec, params_t[u], xx, positions=positions, sh=sh,
+                    cache=caches_t[u], mode=mode, cur_pos=cur_pos)
+                outs.append(c_new)
+                aux = aux + aux_u
+            return (xx, aux), (tuple(outs) if caches is not None or mode == "prefill" else None)
+
+        if mode == "train" and cfg.remat != "none":
+            if cfg.remat == "dots":
+                body = jax.checkpoint(body, policy=jax.checkpoint_policies.checkpoint_dots)
+            else:
+                body = jax.checkpoint(body)
+
+        xs = (gp, gc) if caches is not None else gp
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        if caches is not None:
+            new_caches.append(ys)
+    return x, (tuple(new_caches) if caches is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+def loss_and_metrics(cfg: ModelConfig, params, batch: dict, sh=None,
+                     loss_chunk: int = 1024) -> Tuple[jax.Array, dict]:
+    """Causal-LM loss. batch: tokens (B,S[,K]) int32, labels (B,S[,K]) int32
+    with -100 = masked. Frontend/meta prefix positions never contribute."""
+    x, prefix = _embed_inputs(cfg, params, batch, sh)
+    B, S_tot = x.shape[0], x.shape[1]
+    positions = jnp.arange(S_tot)
+    x, _, aux = apply_groups(cfg, params, x, positions=positions, sh=sh, mode="train")
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if prefix:
+        x = x[:, prefix:]
+    labels = batch["labels"]
+
+    S = x.shape[1]
+    chunk = min(loss_chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+
+    def ce_chunk(carry, idx):
+        tot, cnt, zsum = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = lm_logits(cfg, params["embed"], xs).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        mask = (ls >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        tot = tot + nll.sum()
+        cnt = cnt + mask.sum()
+        zsum = zsum + (jnp.square(lse) * mask).sum()
+        return (tot, cnt, zsum), None
+
+    (tot, cnt, zsum), _ = jax.lax.scan(
+        jax.checkpoint(ce_chunk), (jnp.zeros((), jnp.float32),) * 3, jnp.arange(n))
+    cnt = jnp.maximum(cnt, 1.0)
+    ce = tot / cnt
+    z_loss = 1e-4 * zsum / cnt
+    loss = ce + z_loss + aux
+    return loss, {"ce": ce, "z_loss": z_loss, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, batch: dict, sh=None,
+            max_cache_len: Optional[int] = None):
+    """Returns (last_logits (B, V[, K]), caches). The caches cover the whole
+    prompt (+ meta/frontend prefix)."""
+    x, prefix = _embed_inputs(cfg, params, batch, sh)
+    B, S_tot = x.shape[0], x.shape[1]
+    positions = jnp.arange(S_tot)
+    max_len = max_cache_len or S_tot
+
+    # build zero caches, run in prefill mode (blocks fill them)
+    caches = init_caches(cfg, B, max_len, jnp.dtype(cfg.dtype))
+    x, new_caches, _ = apply_groups(cfg, params, x, positions=positions, sh=sh,
+                                    caches=caches, mode="prefill")
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1]
+    logits = lm_logits(cfg, params["embed"], last)
+    return logits, new_caches
+
+
+def decode(cfg: ModelConfig, params, caches, last_tokens, cur_pos, sh=None):
+    """One decode step. last_tokens: (B, 1[, K]); cur_pos: scalar absolute
+    position (incl. meta/frontend prefix). Returns (logits (B, V[, K]), caches)."""
+    x = embed(cfg, params["embed"], last_tokens)
+    if sh is not None:
+        x = sh.c(x, ("act_batch", None, "act_embed"))
+    cp = jnp.asarray(cur_pos, jnp.int32)
+    positions = cp if cp.ndim == 0 else cp[:, None]  # (B,) -> (B, 1) for rope
+    x, new_caches, _ = apply_groups(cfg, params, x, positions=positions, sh=sh,
+                                    caches=caches, mode="decode", cur_pos=cp)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params["embed"], x[:, 0])
+    return logits, new_caches

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (OptConfig, adamw_update, init_opt_state, lr_at,
+                               opt_state_defs, clip_by_global_norm, global_norm)
+
+__all__ = ["OptConfig", "adamw_update", "init_opt_state", "lr_at",
+           "opt_state_defs", "clip_by_global_norm", "global_norm"]

@@ -1,0 +1,102 @@
+"""Sharded AdamW with fp32 moments, global-norm clipping, and optional
+ZeRO-1-style optimizer-state sharding over the data axis.
+
+Parameters stay in ``cfg.param_dtype`` (bf16); moments and the update math
+run in fp32. The optimizer state is a pytree congruent with params so the
+sharding machinery (runtime/sharding.py) applies unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef, is_def
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(oc: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * warm * cos
+
+
+def opt_state_defs(param_defs) -> dict:
+    """ParamDef tree for the optimizer state (fp32 moments)."""
+    def f32(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, dtype="float32", init="zeros")
+    return {
+        "m": jax.tree.map(f32, param_defs, is_leaf=is_def),
+        "v": jax.tree.map(f32, param_defs, is_leaf=is_def),
+        "step": ParamDef((), (), init="zeros", dtype="int32"),
+    }
+
+
+def init_opt_state(params) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(oc: OptConfig, params, grads, opt_state) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, stats)."""
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    step = opt_state["step"] + 1
+    lr = lr_at(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_); new_m.append(nm); new_v.append(nv)
+    new_params = jax.tree.unflatten(tdef, new_p)
+    new_state = {"m": jax.tree.unflatten(tdef, new_m),
+                 "v": jax.tree.unflatten(tdef, new_v),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

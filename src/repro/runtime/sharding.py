@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Sharding is expressed per-tensor as logical axis names; the rules map a
+logical name to mesh axes. A dim is only sharded when its size divides the
+mapped mesh-axis product — otherwise the rule silently falls back to
+replication for that dim (recorded via :func:`explain_specs` so the fallback
+is auditable, see DESIGN.md §4).
+
+This one mechanism is what lets a single model implementation shard a 76B
+dense model, a 64-expert MoE, an MQA model whose 8 query heads do not divide
+the 16-way model axis, and a batch-1 long-context decode, over the same
+(16,16) / (2,16,16) production meshes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import ParamDef, is_def
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Logical axis -> mesh axes. "model" is tensor/expert parallel; batch-like
+# activation axes map to ("pod", "data") which collapses to just "data" on
+# the single-pod mesh.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # parameter axes
+    "layers": None,
+    "embed": None,             # d_model (kept replicated; residual stream)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "lora": None,
+    "conv": None,
+    "codebooks": None,
+    # activation axes
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_seq_res": None,     # residual stream between blocks (SP variant: "model")
+    "act_kv_seq": "model",     # flash-decoding style KV-seq sharding
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_embed": None,
+    "act_experts": "model",
+}
+
+# Variant rule-sets used by the perf hillclimb (EXPERIMENTS.md §Perf).
+SEQUENCE_PARALLEL_RULES = dict(DEFAULT_RULES, act_seq_res="model")
+
+
+def _axes_tuple(spec: MeshAxes) -> Tuple[str, ...]:
+    if spec is None:
+        return ()
+    if isinstance(spec, str):
+        return (spec,)
+    return tuple(spec)
+
+
+def mesh_axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        if a in mesh.shape:
+            size *= mesh.shape[a]
+    return size
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+) -> P:
+    """Build a PartitionSpec, dropping mesh axes that don't divide the dim
+    or that don't exist in this mesh, and never using a mesh axis twice."""
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    out = []
+    for name, dim in zip(logical_axes, shape):
+        entry: MeshAxes = rules.get(name) if name else None
+        axes = tuple(a for a in _axes_tuple(entry) if a in mesh.shape and a not in used)
+        while axes and dim % mesh_axis_size(mesh, axes) != 0:
+            axes = axes[:-1]  # drop trailing axes until divisible
+        if axes:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sharding_for(logical_axes, shape, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical_axes, shape, mesh, rules))
+
+
+def param_partition_specs(defs, mesh: Mesh, rules=None):
+    """PartitionSpec tree for a ParamDef tree."""
+    return jax.tree.map(
+        lambda d: spec_for(d.logical_axes, d.shape, mesh, rules), defs, is_leaf=is_def)
+
+
+def param_shardings(defs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda d: sharding_for(d.logical_axes, d.shape, mesh, rules), defs, is_leaf=is_def)
+
+
+def explain_specs(defs, mesh: Mesh, rules=None):
+    """List (path, shape, logical_axes, spec, fallbacks) for auditing."""
+    rules = rules or DEFAULT_RULES
+    rows = []
+    flat = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)[0]
+    for path, d in flat:
+        spec = spec_for(d.logical_axes, d.shape, mesh, rules)
+        fallbacks = []
+        for name, dim, got in zip(d.logical_axes, d.shape, spec):
+            want = _axes_tuple(rules.get(name) if name else None)
+            if want and got is None:
+                fallbacks.append(f"{name}({dim})!~{'x'.join(want)}")
+        rows.append((jax.tree_util.keystr(path), d.shape, d.logical_axes, spec, fallbacks))
+    return rows
+
+
+def constrain(x, logical_axes, mesh: Mesh, rules=None):
+    """with_sharding_constraint via logical axes (no-op outside jit)."""
+    s = sharding_for(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+class ShardCtx:
+    """Activation-sharding helper threaded through the model code.
+
+    ``ShardCtx(None)`` (CPU smoke tests) makes every constraint a no-op, so
+    the same model code runs unsharded on one device and SPMD on the
+    production mesh.
+    """
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None):
+        self.mesh = mesh
+        self.rules = dict(rules or DEFAULT_RULES)
+
+    def c(self, x, logical_axes):
+        if self.mesh is None:
+            return x
+        return constrain(x, logical_axes, self.mesh, self.rules)
+
+    def kv_axes(self, cfg) -> Tuple[Optional[str], ...]:
+        """KV-cache sharding policy: shard kv-heads over the model axis when
+        divisible, else fall back to sharding the cache *sequence* dim
+        (flash-decoding style; GSPMD inserts the softmax-stat reductions)."""
+        if self.mesh is None:
+            return ("act_batch", None, None, None)
+        size = mesh_axis_size(self.mesh, _axes_tuple(self.rules.get("act_kv_heads")))
+        if size > 1 and cfg.n_kv_heads % size == 0:
+            return ("act_batch", None, "act_kv_heads", None)
+        return ("act_batch", "act_kv_seq", None, None)
+
+    def kv(self, cfg, cache: dict) -> dict:
+        if self.mesh is None:
+            return cache
+        axes = self.kv_axes(cfg)
+        out = dict(cache)
+        for name in ("k", "v"):
+            if name in out:
+                out[name] = self.c(out[name], axes)
+        if "pos" in out:
+            out["pos"] = self.c(out["pos"], axes[:2])
+        return out

@@ -1,0 +1,6 @@
+from repro.serving.engine import EngineConfig, ServeEngine
+from repro.serving.kv_cache import PagedKVManager
+from repro.serving.scheduler import ContinuousBatchScheduler, Request
+
+__all__ = ["EngineConfig", "ServeEngine", "PagedKVManager",
+           "ContinuousBatchScheduler", "Request"]

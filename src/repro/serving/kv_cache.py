@@ -1,0 +1,171 @@
+"""Paged KV-cache manager over the MRM pool.
+
+PagedAttention-style block tables (the paper cites [21]) with pages sized to
+MRM blocks: each session owns a list of pages; a page is `page_size` tokens
+of per-layer KV (a multi-MB sequential unit — the paper's §2 access-grain
+argument). Page *placement and lifetime* go through `repro.core`:
+
+- allocation -> MemorySystem.write_region with a DCM retention programmed
+  from the session's expected remaining lifetime;
+- every decode step reads all live pages sequentially (instrumented);
+- each appended token accumulates into the open page; page-full -> sealed,
+  and the open page region is rewritten (append-only write pattern);
+- session end -> regions released (soft state dropped, per §4).
+
+The JAX compute path keeps its own dense ring caches (models/attention.py);
+this manager is the memory control plane that decides *where those bytes
+live* and meters the device traffic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.simulator import MemorySystem
+
+
+@dataclass
+class Page:
+    page_id: int
+    region_id: Optional[int]   # MemorySystem region (None = dropped/expired)
+    n_tokens: int
+    sealed: bool = False
+    refcount: int = 1          # >1 when shared via prefix caching
+    prefix_key: Optional[str] = None
+
+
+@dataclass
+class SessionKV:
+    session_id: int
+    pages: List[Page] = field(default_factory=list)
+    tokens: int = 0
+    shared_prefix_pages: int = 0
+
+
+class PagedKVManager:
+    def __init__(self, cfg: ModelConfig, mem: MemorySystem, tier: str,
+                 page_tokens: int = 128,
+                 expected_session_s: float = 600.0):
+        self.cfg = cfg
+        self.mem = mem
+        self.tier = tier
+        self.page_tokens = page_tokens
+        self.expected_session_s = expected_session_s
+        self.kv_bytes_token = cfg.kv_bytes_per_token()
+        self.page_bytes = self.kv_bytes_token * page_tokens
+        self.sessions: Dict[int, SessionKV] = {}
+        self._next_page = 0
+        self.dropped_allocs = 0
+        # automatic prefix caching (paper §2.2 cites vLLM's [53]): sealed
+        # prefix pages are shared by key across sessions — repeated prompt
+        # prefixes cost zero KV writes and zero extra MRM capacity
+        self._prefix_index: Dict[str, List[Page]] = {}
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+
+    # ------------------------------------------------------------------
+    def open_session(self, session_id: int, prefix_key: Optional[str] = None,
+                     prefix_tokens: int = 0) -> SessionKV:
+        """``prefix_key``: stable identity of the prompt's page-aligned
+        prefix; if the index holds it, its sealed pages are attached
+        (refcounted) instead of re-written."""
+        s = SessionKV(session_id)
+        self.sessions[session_id] = s
+        if prefix_key is not None and prefix_key in self._prefix_index:
+            for page in self._prefix_index[prefix_key]:
+                page.refcount += 1
+                s.pages.append(page)
+                s.tokens += page.n_tokens
+            s.shared_prefix_pages = len(s.pages)
+            self.prefix_hits += 1
+            self.prefix_tokens_reused += s.tokens
+        return s
+
+    def register_prefix(self, session_id: int, prefix_key: str) -> None:
+        """Publish this session's sealed leading pages under ``prefix_key``
+        (call after the prompt's KV has been appended)."""
+        s = self.sessions[session_id]
+        if prefix_key in self._prefix_index or s.shared_prefix_pages:
+            return
+        sealed = [p for p in s.pages if p.sealed]
+        if sealed:
+            for p in sealed:
+                p.prefix_key = prefix_key
+                p.refcount += 1  # the index holds its own reference
+            self._prefix_index[prefix_key] = sealed
+
+    def _new_page(self, s: SessionKV, n_tokens: int) -> Page:
+        rid = self.mem.write_region(
+            self.tier, f"session:{s.session_id}",
+            n_tokens * self.kv_bytes_token,
+            expected_lifetime_s=self.expected_session_s)
+        if rid is None:
+            self.dropped_allocs += 1
+        p = Page(self._next_page, rid, n_tokens)
+        self._next_page += 1
+        s.pages.append(p)
+        return p
+
+    def append_tokens(self, session_id: int, n: int) -> None:
+        """Append n tokens' KV (prefill: n large; decode: n=1)."""
+        s = self.sessions[session_id]
+        while n > 0:
+            if s.pages and not s.pages[-1].sealed:
+                page = s.pages[-1]
+                take = min(n, self.page_tokens - page.n_tokens)
+                if take > 0:
+                    # append-only rewrite of the open page region
+                    if page.region_id is not None:
+                        self.mem.devices[self.tier].write(
+                            take * self.kv_bytes_token,
+                            expected_lifetime_s=self.expected_session_s)
+                    page.n_tokens += take
+                    s.tokens += take
+                    n -= take
+                if page.n_tokens >= self.page_tokens:
+                    page.sealed = True
+                continue
+            take = min(n, self.page_tokens)
+            self._new_page(s, take)
+            s.tokens += take
+            n -= take
+
+    def read_all(self, session_id: int) -> float:
+        """One decode step reads the whole cache sequentially (paper §2.2).
+        Returns bytes read."""
+        s = self.sessions[session_id]
+        total = 0.0
+        for page in s.pages:
+            if page.region_id is not None:
+                self.mem.read_region(page.region_id,
+                                     page.n_tokens * self.kv_bytes_token,
+                                     sequential=True)
+                total += page.n_tokens * self.kv_bytes_token
+        return total
+
+    def close_session(self, session_id: int) -> None:
+        s = self.sessions.pop(session_id, None)
+        if s is None:
+            return
+        for page in s.pages:
+            page.refcount -= 1
+            if page.refcount <= 0 and page.region_id is not None:
+                self.mem.release_region(page.region_id)
+                page.region_id = None
+
+    def evict_prefix(self, prefix_key: str) -> None:
+        """Capacity/retention policy hook: drop the index's reference."""
+        pages = self._prefix_index.pop(prefix_key, None)
+        for page in pages or []:
+            page.refcount -= 1
+            if page.refcount <= 0 and page.region_id is not None:
+                self.mem.release_region(page.region_id)
+                page.region_id = None
+
+    # ------------------------------------------------------------------
+    def live_pages(self) -> int:
+        return sum(len(s.pages) for s in self.sessions.values())
+
+    def live_tokens(self) -> int:
+        return sum(s.tokens for s in self.sessions.values())

@@ -1,0 +1,37 @@
+"""Training step: value_and_grad over the chunked-CE loss + sharded AdamW.
+
+``make_train_step`` builds the pjit-able function used by both the real
+trainer (launch/train.py) and the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import loss_and_metrics
+from repro.optim.adamw import OptConfig, adamw_update
+from repro.runtime.sharding import ShardCtx
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, sh: Optional[ShardCtx] = None):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = loss_and_metrics(cfg, p, batch, sh)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, stats = adamw_update(oc, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **stats)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, sh: Optional[ShardCtx] = None):
+    def eval_step(params, batch):
+        loss, metrics = loss_and_metrics(cfg, params, batch, sh)
+        return dict(metrics, loss=loss)
+    return eval_step

@@ -1,0 +1,7 @@
+import pathlib
+import sys
+
+# tests run with PYTHONPATH=src; this makes them work without it too.
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

@@ -1,0 +1,290 @@
+"""MRM core: DCM trade-off monotonicity (hypothesis property tests),
+Figure-1 endurance arithmetic, wear-levelling allocator invariants,
+retention-aware ECC, tiering solver, refresh scheduler, simulator."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Action, DataClassProfile, MemorySystem, RefreshScheduler,
+                        RetentionTracker, Tier, WearLevelingAllocator, WearState,
+                        design_code, endurance_at, evaluate_placement, max_safe_age,
+                        plan_write, rber_at_age, solve_placement,
+                        weight_update_writes, write_energy, writes_per_cell)
+from repro.core.memclass import (DAY, HOUR, YEAR, HBM3E, LPDDR5X, MRM_MRAM,
+                                 MRM_PCM, MRM_RRAM, NAND_SLC, OPTANE_PCM,
+                                 RRAM_DEVICE, STT_MRAM_DEVICE, TECHNOLOGIES,
+                                 get_technology)
+
+MANAGED = [MRM_PCM, MRM_RRAM, MRM_MRAM]
+
+
+# ---------------------------------------------------------------------------
+# DCM
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(min_value=1.0, max_value=2 * DAY),
+       st.floats(min_value=1.0, max_value=2 * DAY))
+@settings(max_examples=50, deadline=None)
+def test_dcm_write_energy_monotone_in_retention(r1, r2):
+    for tech in MANAGED:
+        e1, e2 = write_energy(tech, r1), write_energy(tech, r2)
+        if r1 <= r2:
+            assert e1 <= e2 + 1e-9
+        assert 0 < e1 <= tech.write_energy_pj_bit + 1e-9
+
+
+@given(st.floats(min_value=1.0, max_value=2 * DAY))
+@settings(max_examples=50, deadline=None)
+def test_dcm_endurance_gains_never_exceed_potential(r):
+    for tech in MANAGED:
+        e = endurance_at(tech, r)
+        assert tech.endurance_device - 1 <= e <= tech.endurance_potential + 1
+
+
+def test_dcm_plan_write_relaxation_pays():
+    """Shorter-lived data must be cheaper to write and wear less."""
+    for tech in MANAGED:
+        short = plan_write(tech, 60.0)
+        long_ = plan_write(tech, tech.retention_s)
+        assert short.energy_pj_bit <= long_.energy_pj_bit
+        assert short.endurance_at_point >= long_.endurance_at_point
+
+
+# ---------------------------------------------------------------------------
+# Figure-1 arithmetic (paper §3)
+# ---------------------------------------------------------------------------
+
+
+def test_fig1_weight_update_endurance_requirements():
+    hourly = weight_update_writes(HOUR)
+    per_second = weight_update_writes(1.0)
+    assert 4e4 < hourly < 5e4          # ~4.4e4 writes over 5 years
+    assert 1.4e8 < per_second < 1.7e8  # ~1.58e8
+
+
+def test_fig1_kv_cache_endurance_requirement():
+    """Splitwise llama2-70b-ish: prefill ~7k tok/s/machine, 0.33 MB/token,
+    KV region of several hundred GB -> 1e5..1e7 writes/cell over 5 years."""
+    from repro.configs import get_config
+    kv_per_tok = get_config("llama2-70b").kv_bytes_per_token()
+    wpc = writes_per_cell(7000 * kv_per_tok, 400e9)
+    assert 1e5 < wpc < 1e7
+
+
+def test_fig1_technology_ordering():
+    """The paper's Fig-1 qualitative claims: Flash SLC insufficient for KV;
+    current SCM devices don't meet the requirements (PCM/RRAM fail the
+    once-per-second weight-update bar; RRAM also the worst-levelled KV bar);
+    technology potentials sufficient; DRAM/HBM vastly overprovisioned."""
+    from repro.configs import get_config
+    kv_per_tok = get_config("llama2-70b").kv_bytes_per_token()
+    kv_req = writes_per_cell(7000 * kv_per_tok, 400e9)
+    kv_req_worst = writes_per_cell(7000 * kv_per_tok, 400e9,
+                                   leveling_efficiency=0.5)
+    w_sec = weight_update_writes(1.0)
+    assert NAND_SLC.endurance_device < kv_req
+    assert RRAM_DEVICE.endurance_device < kv_req_worst
+    assert OPTANE_PCM.endurance_device < w_sec
+    assert RRAM_DEVICE.endurance_device < w_sec
+    for t in (OPTANE_PCM, RRAM_DEVICE, STT_MRAM_DEVICE):
+        assert t.endurance_potential > max(kv_req_worst, w_sec)
+    assert HBM3E.endurance_device > 1e4 * max(kv_req, w_sec)
+
+
+# ---------------------------------------------------------------------------
+# Wear levelling
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(1, 12), st.booleans()), min_size=1,
+                max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_allocator_never_double_allocates(ops):
+    wear = WearState(n_blocks=64, block_bytes=4096, endurance=1e9)
+    alloc = WearLevelingAllocator(wear)
+    live = []
+    allocated_now = set()
+    for n, do_free in ops:
+        got = alloc.alloc(n)
+        if got is not None:
+            assert not (set(got) & allocated_now), "double allocation!"
+            allocated_now.update(got)
+            live.append(got)
+        if do_free and live:
+            blocks = live.pop(0)
+            alloc.free_blocks(blocks)
+            allocated_now.difference_update(blocks)
+    assert 0.0 <= alloc.utilization <= 1.0
+
+
+def test_allocator_prefers_least_worn():
+    wear = WearState(n_blocks=8, block_bytes=64, endurance=1e9)
+    alloc = WearLevelingAllocator(wear)
+    a = alloc.alloc(8)
+    alloc.rewrite_in_place(a[:4])  # wear blocks 0..3 extra
+    alloc.free_blocks(a)
+    b = alloc.alloc(4)
+    assert set(b) == {4, 5, 6, 7}  # least-worn reused first
+
+
+def test_wear_lifetime_projection():
+    wear = WearState(n_blocks=4, block_bytes=100, endurance=1000)
+    wear.record_write([0, 1, 2, 3])
+    t = wear.project_lifetime_s(write_bytes_per_s=400, now_s=0.0)  # 1 write/s/cell
+    assert 900 <= t <= 1000
+
+
+# ---------------------------------------------------------------------------
+# ECC
+# ---------------------------------------------------------------------------
+
+
+def test_ecc_rber_grows_with_age():
+    ages = [0.0, 0.25, 0.5, 1.0]
+    rbers = [rber_at_age(MRM_RRAM, a * DAY, DAY) for a in ages]
+    assert all(r2 > r1 for r1, r2 in zip(rbers, rbers[1:]))
+    assert abs(rbers[-1] - 1e-4) / 1e-4 < 0.01  # RBER at retention ~ 1e-4
+
+
+def test_ecc_large_blocks_amortize_parity():
+    r = 1e-6
+    small = design_code(512, r)
+    big = design_code(8192, r)
+    assert big.overhead < small.overhead
+
+
+def test_ecc_max_safe_age_consistent():
+    code = design_code(4096, rber_at_age(MRM_RRAM, DAY / 2, DAY))
+    age = max_safe_age(MRM_RRAM, code, DAY)
+    assert DAY / 4 < age < 2 * DAY
+
+
+# ---------------------------------------------------------------------------
+# Tiering
+# ---------------------------------------------------------------------------
+
+
+def _llama70b_classes():
+    return [
+        DataClassProfile("weights", 140e9, 6 * 800e9, 140e9 / (24 * HOUR),
+                         24 * HOUR, False),
+        DataClassProfile("kv_cache", 300e9, 2 * 800e9, 2.4e9, 600, True),
+        DataClassProfile("activations", 10e9, 0.5e12, 0.5e12, 0.01, True,
+                         random_access=True),
+    ]
+
+
+def test_placement_activations_avoid_mrm():
+    """Write-heavy transient activations must land on HBM (paper §4:
+    'MRM will co-exist with HBM for write-heavy data structures')."""
+    tiers = [Tier(HBM3E, 192e9, count=8), Tier(MRM_RRAM, 768e9, count=16),
+             Tier(LPDDR5X, 512e9, count=4)]
+    res = solve_placement(_llama70b_classes(), tiers)
+    assert res.feasible, res.violations
+    assert res.assignment["activations"] == "hbm3e"
+    assert res.assignment["weights"] == "mrm_rram"
+    assert res.assignment["kv_cache"] == "mrm_rram"
+
+
+def test_placement_detects_endurance_violation():
+    # long-lived (no DCM endurance gain) + write-hot on a small region
+    classes = [DataClassProfile("kv_cache", 1e9, 1e9, 300e9, 2 * DAY, True)]
+    tiers = [Tier(MRM_RRAM, 2e9, count=10)]  # bw is ample; endurance is not
+    res = evaluate_placement(classes, tiers, {"kv_cache": "mrm_rram"})
+    assert not res.feasible
+    assert any("endurance" in v for v in res.violations)
+
+
+def test_placement_mrm_beats_hbm_only_on_energy():
+    classes = _llama70b_classes()
+    hbm_only = [Tier(HBM3E, 640e9, count=16)]
+    mixed = [Tier(HBM3E, 192e9, count=8), Tier(MRM_RRAM, 768e9, count=16)]
+    r_hbm = solve_placement(classes, hbm_only)
+    r_mix = solve_placement(classes, mixed)
+    assert r_hbm.feasible and r_mix.feasible
+    assert r_mix.energy_w < r_hbm.energy_w
+
+
+# ---------------------------------------------------------------------------
+# Refresh scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_refresh_live_data_rearmed():
+    tr = RetentionTracker(margin=2.0)
+    sched = RefreshScheduler(tr)
+    rid = tr.track("weights", "mrm", 10, 1e6, now=0.0, retention_s=100.0)
+    acts = sched.tick(49.0)
+    assert acts == []
+    acts = sched.tick(51.0)
+    assert len(acts) == 1 and acts[0].action == Action.REFRESH
+    r = tr.regions()[0]
+    assert r.deadline > 100.0  # re-armed
+
+
+def test_refresh_idle_data_migrates():
+    tr = RetentionTracker(margin=2.0, idle_migrate_after_s=10.0)
+    sched = RefreshScheduler(tr)
+    rid = tr.track("session:1", "mrm", 1, 1e6, now=0.0, retention_s=100.0)
+    tr.mark_idle(rid, 5.0)
+    acts = sched.tick(51.0)
+    assert len(acts) == 1 and acts[0].action == Action.MIGRATE
+    assert tr.regions() == []
+
+
+def test_released_regions_never_refresh():
+    tr = RetentionTracker(margin=2.0)
+    sched = RefreshScheduler(tr)
+    rid = tr.track("session:1", "mrm", 1, 1e6, now=0.0, retention_s=100.0)
+    tr.release(rid)
+    assert sched.tick(1000.0) == []
+
+
+@given(st.lists(st.floats(min_value=1.0, max_value=500.0), min_size=1, max_size=20))
+@settings(max_examples=30, deadline=None)
+def test_refresh_never_misses_deadline(lifetimes):
+    """Property: every live region is serviced before its retention expires."""
+    tr = RetentionTracker(margin=2.0)
+    sched = RefreshScheduler(tr)
+    for i, lt in enumerate(lifetimes):
+        op = plan_write(MRM_RRAM, lt)
+        tr.track(f"r{i}", "mrm", 1, 1.0, now=0.0, retention_s=op.retention_s)
+    t = 0.0
+    for _ in range(200):
+        t += 7.0
+        sched.tick(t)
+        for r in tr.regions():
+            age = t - r.written_at
+            assert age <= r.retention_s + 1e-6, "retention deadline missed"
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_accounting_and_wear():
+    ms = MemorySystem({"mrm": (MRM_RRAM, 1 << 26)})
+    rid = ms.write_region("mrm", "w", 1 << 20, expected_lifetime_s=1e9)
+    for _ in range(50):
+        ms.read_region(rid)
+    rep = ms.report()["tiers"]["mrm"]
+    assert rep["read_gb"] > rep["write_gb"] * 40
+    assert rep["seq_fraction"] == 1.0
+    assert rep["wear_max"] >= 1.0
+    ms.release_region(rid)
+    rid2 = ms.write_region("mrm", "w2", 1 << 20, expected_lifetime_s=1e9)
+    assert rid2 is not None
+
+
+def test_simulator_refresh_charges_energy_and_wear():
+    ms = MemorySystem({"mrm": (MRM_RRAM, 1 << 26)})
+    rid = ms.write_region("mrm", "s", 1 << 20, expected_lifetime_s=30.0)
+    e0 = ms.devices["mrm"].energy_j
+    ms.advance(35.0)
+    rep = ms.report()
+    assert rep["refresh_stats"]["refresh"] >= 1
+    assert ms.devices["mrm"].energy_j > e0

@@ -1,0 +1,118 @@
+"""Pallas kernel sweeps: shapes x dtypes x feature flags, allclose against
+the pure-jnp oracles (interpret mode on CPU; BlockSpec tiling exercised)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (1, 64, 2, 2, 16), (2, 128, 4, 2, 32), (1, 256, 8, 1, 64), (2, 96, 6, 3, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cap,window", [(None, None), (50.0, None), (None, 48)])
+def test_flash_attention_sweep(B, S, H, Hkv, D, dtype, cap, window):
+    q = jnp.asarray(RNG.normal(0, 1, (B, S, H, D)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, scale=D**-0.5, cap=cap, window=window,
+                          q_block=32, kv_block=32)
+    G = H // Hkv
+    qf = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4).reshape(B * H, S, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    ref = attention_ref(qf.astype(jnp.float32), kf.astype(jnp.float32),
+                        vf.astype(jnp.float32), scale=D**-0.5, cap=cap, window=window)
+    ref = ref.reshape(B, Hkv, G, S, D).transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,C,H,Hkv,D,page", [
+    (2, 96, 4, 2, 16, 32), (1, 128, 8, 1, 32, 64), (3, 64, 6, 3, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, C, H, Hkv, D, page, dtype):
+    kc = jnp.asarray(RNG.normal(0, 1, (B, C, Hkv, D)), dtype)
+    vc = jnp.asarray(RNG.normal(0, 1, (B, C, Hkv, D)), dtype)
+    pos = jnp.asarray(np.where(RNG.random((B, C)) < 0.8,
+                               RNG.integers(0, 70, (B, C)), -1), jnp.int32)
+    q = jnp.asarray(RNG.normal(0, 1, (B, 1, H, D)), dtype)
+    cur = jnp.asarray(RNG.integers(40, 70, (B,)), jnp.int32)
+    out = decode_attention(q, kc, vc, pos, cur, scale=D**-0.5, page_size=page)
+    G = H // Hkv
+    qf = q.reshape(B, Hkv, G, D).reshape(B * Hkv, G, D)
+    kf = kc.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    vf = vc.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    posf = jnp.repeat(pos[:, None, :], Hkv, 1).reshape(B * Hkv, C)
+    curf = jnp.repeat(cur[:, None], Hkv, 1).reshape(B * Hkv)
+    ref = decode_attention_ref(qf.astype(jnp.float32), kf.astype(jnp.float32),
+                               vf.astype(jnp.float32), posf, curf, scale=D**-0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32).reshape(B, 1, H, D),
+                               np.asarray(ref).reshape(B, 1, H, D), **_tol(dtype))
+
+
+def test_decode_attention_windowed():
+    B, C, H, D = 1, 64, 2, 16
+    kc = jnp.asarray(RNG.normal(0, 1, (B, C, H, D)), jnp.float32)
+    vc = jnp.asarray(RNG.normal(0, 1, (B, C, H, D)), jnp.float32)
+    pos = jnp.arange(C, dtype=jnp.int32)[None]
+    q = jnp.asarray(RNG.normal(0, 1, (B, 1, H, D)), jnp.float32)
+    cur = jnp.asarray([C - 1], jnp.int32)
+    out = decode_attention(q, kc, vc, pos, cur, scale=D**-0.5, window=16, page_size=16)
+    ref = decode_attention_ref(
+        q.reshape(B, 1, H, D).transpose(0, 2, 1, 3).reshape(B * H, 1, D),
+        kc.transpose(0, 2, 1, 3).reshape(B * H, C, D),
+        vc.transpose(0, 2, 1, 3).reshape(B * H, C, D),
+        jnp.repeat(pos[:, None, :], H, 1).reshape(B * H, C),
+        jnp.repeat(cur[:, None], H, 1).reshape(B * H),
+        scale=D**-0.5, window=16)
+    np.testing.assert_allclose(np.asarray(out).reshape(B * H, 1, D),
+                               np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,H,G,P,N,chunk", [
+    (1, 64, 2, 1, 8, 16, 16), (2, 128, 4, 2, 16, 8, 32), (1, 96, 3, 1, 8, 8, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_scan_sweep(B, S, H, G, P, N, chunk, dtype):
+    x = jnp.asarray(RNG.normal(0, 1, (B, S, H, P)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), dtype)
+    a = -jnp.asarray(RNG.uniform(0.5, 8, (H,)), jnp.float32)
+    b = jnp.asarray(RNG.normal(0, 1, (B, S, G, N)), dtype)
+    c = jnp.asarray(RNG.normal(0, 1, (B, S, G, N)), dtype)
+    y = ssd_scan(x, dt, a, b, c, chunk=chunk)
+    rep = H // G
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    da = (dt * a[None, None, :]).transpose(0, 2, 1).reshape(B * H, S)
+    bh = jnp.repeat(b, rep, 2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    ch = jnp.repeat(c, rep, 2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    ref = ssd_scan_ref(xdt.astype(jnp.float32), da.astype(jnp.float32),
+                       bh.astype(jnp.float32), ch.astype(jnp.float32))
+    ref = ref.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_cross_validates_model_path():
+    """Kernel vs the model's chunked SSD (independent implementations)."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 2, 64, 4, 8, 16
+    x = jnp.asarray(RNG.normal(0, 1, (B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(1, 8, (H,)), jnp.float32)
+    b = jnp.asarray(RNG.normal(0, 1, (B, S, 1, N)), jnp.float32)
+    c = jnp.asarray(RNG.normal(0, 1, (B, S, 1, N)), jnp.float32)
+    y_kernel = ssd_scan(x, dt, a, b, c, chunk=32)
+    y_model, _ = ssd_chunked(x, dt, a, b, c, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,138 @@
+"""Sharding rules (divisibility-fallback properties via hypothesis over an
+AbstractMesh) and the trip-count-aware HLO analyzer."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.launch.hlo_analysis import (analyze, exec_counts, parse_module,
+                                       roofline_terms, shape_bytes, shape_dims)
+from repro.runtime.sharding import DEFAULT_RULES, mesh_axis_size, spec_for
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_spec_for_basic():
+    assert spec_for(("vocab", "embed"), (256000, 4096), MESH) == P("model", None)
+    assert spec_for(("act_batch", None), (256, 4096), MESH) == P("data", None)
+    assert spec_for(("act_batch", None), (256, 4096), MESH3) == P(("pod", "data"), None)
+
+
+def test_spec_for_divisibility_fallback():
+    # 8 heads don't divide the 16-way model axis -> replicate
+    assert spec_for(("embed", "heads", "head_dim"), (2048, 8, 256), MESH) == \
+        P(None, None, None)
+    # 25 heads (hymba) -> replicate; vocab still shards
+    assert spec_for(("heads",), (25,), MESH) == P(None)
+    # batch=1 long-context decode -> act_batch falls back
+    assert spec_for(("act_batch", "act_kv_seq"), (1, 524288), MESH) == \
+        P(None, "model")
+
+
+def test_spec_for_never_reuses_axis():
+    spec = spec_for(("act_batch", "act_kv_seq", "act_kv_heads"),
+                    (256, 32768, 16), MESH)
+    used = [a for part in spec for a in
+            ((part,) if isinstance(part, str) else (part or ()))]
+    assert len(used) == len(set(used))
+
+
+@given(st.lists(st.sampled_from([None, "vocab", "heads", "ff", "experts",
+                                 "act_batch", "act_kv_seq"]),
+                min_size=1, max_size=4),
+       st.lists(st.integers(min_value=1, max_value=4096), min_size=4, max_size=4))
+@settings(max_examples=100, deadline=None)
+def test_spec_for_always_divides(axes, dims):
+    dims = dims[:len(axes)]
+    spec = spec_for(axes, dims, MESH)
+    for part, dim in zip(spec, dims):
+        if part is None:
+            continue
+        axes_t = (part,) if isinstance(part, str) else tuple(part)
+        assert dim % mesh_axis_size(MESH, axes_t) == 0
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+SYNTH = """
+HloModule test, num_partitions=8
+
+%cond (p: (f32[8,8], s32[])) -> pred[] {
+  %p = (f32[8,8]{1,0}, s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=1
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (bp: (f32[8,8], s32[])) -> (f32[8,8], s32[]) {
+  %bp = (f32[8,8]{1,0}, s32[]) parameter(0)
+  %x = f32[8,8]{1,0} get-tuple-element(%bp), index=0
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum
+  %i2 = s32[] get-tuple-element(%bp), index=1
+  %one = s32[] constant(1)
+  %i3 = s32[] add(%i2, %one)
+  ROOT %t = (f32[8,8]{1,0}, s32[]) tuple(%ar, %i3)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> f32[8,8] {
+  %arg = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (f32[8,8]{1,0}, s32[]) tuple(%arg, %zero)
+  %w = (f32[8,8]{1,0}, s32[]) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_shape_parsing():
+    assert shape_bytes("f32[8,8]{1,0}") == 256
+    assert shape_bytes("(f32[4]{0}, bf16[2,2]{1,0})") == 24
+    assert shape_dims("bf16[3,5,7]{2,1,0}") == [3, 5, 7]
+    assert shape_bytes("pred[]") == 1
+
+
+def test_trip_count_and_flops():
+    comps, entry = parse_module(SYNTH)
+    assert entry == "main"
+    counts = exec_counts(comps, entry)
+    assert counts["body"] == 12
+    ana = analyze(SYNTH, num_devices=8)
+    assert ana["dot_flops"] == 12 * 2 * 8 * 8 * 8
+    ar = ana["collectives"]["all-reduce"]
+    assert ar["count"] == 12
+    assert ar["operand_bytes"] == 12 * 256
+    assert ar["wire_bytes"] == pytest.approx(12 * 2 * 256 * 7 / 8)
+
+
+def test_roofline_terms():
+    ana = analyze(SYNTH, num_devices=8)
+    rt = roofline_terms(ana, peak_flops=1e12, hbm_bw=1e11, ici_bw=1e10)
+    assert rt["dominant"] in ("compute", "memory", "collective")
+    assert rt["compute_s"] == pytest.approx(ana["flops"] / 1e12)
+
+
+def test_analyzer_matches_xla_on_loop_free_graph():
+    """On a graph with no loops our flop count must match XLA's own."""
+    import jax.numpy as jnp
+
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    compiled = jax.jit(f).lower(a, b).compile()
+    ana = analyze(compiled.as_text(), 1)
+    xla = compiled.cost_analysis()["flops"]
+    assert ana["dot_flops"] == pytest.approx(xla, rel=0.01)

@@ -1,0 +1,226 @@
+"""Substrate: data pipeline determinism/sharding, checkpoint save/restore/
+reshard, optimizer + gradient compression, fault tolerance."""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import latest_step, restore, save, save_async
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, SyntheticPipeline
+from repro.optim import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.optim.compress import (compress_decompress, init_state as comp_init,
+                                  wire_bytes)
+from repro.runtime.fault_tolerance import (ClusterState, HeartbeatMonitor,
+                                           MeshPlan, StragglerMitigator,
+                                           plan_mesh, resharding_moves)
+
+CFG = reduced(get_config("deepseek-7b"))
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_resumable():
+    pipe = SyntheticPipeline(CFG, DataConfig(seq_len=32, global_batch=4))
+    b1 = pipe.batch_at(7)
+    b2 = pipe.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    it = pipe.iter_from(7)
+    b3 = next(it)
+    np.testing.assert_array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    full = pipe.batch_at(3)
+    assert full["tokens"].shape == (4, 32)
+
+
+def test_pipeline_host_sharding_disjoint():
+    dcs = [DataConfig(seq_len=16, global_batch=8, n_hosts=2, host_id=h)
+           for h in (0, 1)]
+    b0 = SyntheticPipeline(CFG, dcs[0]).batch_at(0)
+    b1 = SyntheticPipeline(CFG, dcs[1]).batch_at(0)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tiny_tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "b": {"c": jnp.arange(6, dtype=jnp.int32),
+                  "d": (jnp.ones((2,)), jnp.zeros((3,), jnp.bfloat16))}}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    tree = _tiny_tree()
+    save(str(tmp_path), 5, tree, extra={"step": 5})
+    assert latest_step(str(tmp_path)) == 5
+    got, extra = restore(str(tmp_path), 5, tree)
+    assert extra["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_keep_last_and_async(tmp_path):
+    tree = _tiny_tree()
+    threads = [save_async(str(tmp_path), s, tree, keep_last=2) for s in (1, 2, 3)]
+    for t in threads:
+        t.join()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+                   if p.name.startswith("step_"))
+    assert steps[-1] == 3 and len(steps) <= 2
+
+
+def test_ckpt_shape_mismatch_detected(tmp_path):
+    save(str(tmp_path), 1, {"a": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, {"a": jnp.ones((5,))})
+
+
+def test_ckpt_resume_training_continues_identically(tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
+    from repro.train import make_train_step
+    oc = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    pipe = SyntheticPipeline(CFG, DataConfig(seq_len=32, global_batch=2))
+    step_fn = jax.jit(make_train_step(CFG, oc))
+
+    def run(params, opt, lo, hi):
+        for s in range(lo, hi):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+            params, opt, m = step_fn(params, opt, batch)
+        return params, opt, m
+
+    from repro.models import init_params
+    p0 = init_params(CFG, jax.random.key(0))
+    o0 = init_opt_state(p0)
+    pA, oA, mA = run(p0, o0, 0, 6)
+
+    p1 = init_params(CFG, jax.random.key(0))
+    o1 = init_opt_state(p1)
+    p1, o1, _ = run(p1, o1, 0, 3)
+    save(str(tmp_path), 3, (p1, o1), extra={"step": 3})
+    (p2, o2), extra = restore(str(tmp_path), 3, (p1, o1))
+    pB, oB, mB = run(p2, o2, extra["step"], 6)
+    np.testing.assert_allclose(float(mA["loss"]), float(mB["loss"]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer + compression
+# ---------------------------------------------------------------------------
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(oc, 0)) < 0.11
+    assert abs(float(lr_at(oc, 10)) - 1.0) < 1e-6
+    assert float(lr_at(oc, 100)) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_adamw_reduces_quadratic():
+    oc = OptConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0,
+                   grad_clip=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = init_opt_state(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(oc, params, g, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+@pytest.mark.parametrize("scheme", ["int8", "topk"])
+def test_compressed_grads_converge_with_error_feedback(scheme):
+    oc = OptConfig(lr=0.05, warmup_steps=0, total_steps=400, weight_decay=0.0,
+                   grad_clip=10.0)
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (64,)),
+                               jnp.float32)}
+    opt = init_opt_state(params)
+    ef = comp_init(params)
+    for _ in range(400):
+        g = {"w": 2 * params["w"]}
+        g, ef = compress_decompress(g, ef, scheme, topk_frac=0.1)
+        params, opt, _ = adamw_update(oc, params, g, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_compression_wire_bytes():
+    g = {"w": jnp.zeros((1000,), jnp.bfloat16)}
+    assert wire_bytes(g, "none") == 2000
+    assert wire_bytes(g, "int8") == 1000
+    assert wire_bytes(g, "topk", 0.05) == pytest.approx(400)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_failure_detection():
+    m = HeartbeatMonitor(["a", "b", "c"], timeout_s=10)
+    for w in ("a", "b", "c"):
+        m.beat(w, 0.0)
+    m.beat("a", 20.0)
+    m.beat("b", 20.0)
+    assert m.failed(25.0) == ["c"]
+    assert m.alive(25.0) == ["a", "b"]
+
+
+@given(st.integers(min_value=1, max_value=4096))
+@settings(max_examples=100, deadline=None)
+def test_plan_mesh_properties(chips):
+    plan = plan_mesh(chips)
+    assert plan.n_chips + plan.dropped_chips == chips
+    assert plan.n_chips >= 1
+    n = 1
+    for s in plan.shape:
+        n *= s
+    assert n == plan.n_chips
+    assert len(plan.shape) == len(plan.axes)
+
+
+def test_plan_mesh_keeps_tp_axis_when_possible():
+    assert plan_mesh(256).shape == (16, 16)
+    assert plan_mesh(512).shape == (2, 16, 16)
+    assert plan_mesh(250).shape == (15, 16)  # drop 10 chips, keep TP=16
+    assert plan_mesh(8).shape[-1] == 8
+
+
+def test_resharding_moves():
+    old = plan_mesh(256)
+    new = plan_mesh(240)
+    mv = resharding_moves(old, new, 1e9)
+    assert mv["kind"] == "dp_relayout" and not mv["ckpt_reload"]
+    tiny = plan_mesh(8)
+    mv2 = resharding_moves(old, tiny, 1e9)
+    assert mv2["ckpt_reload"]
+
+
+def test_straggler_eviction():
+    sm = StragglerMitigator(["a", "b", "c", "d"])
+    for _ in range(5):
+        evict = sm.record_step({"a": 1.0, "b": 1.0, "c": 1.0, "d": 5.0})
+    assert evict == ["d"]
+
+
+def test_cluster_state_replans_on_failure():
+    cs = ClusterState(workers=[f"w{i}" for i in range(64)], chips_per_worker=4)
+    now = 0.0
+    for w in cs.workers:
+        cs.monitor.beat(w, now)
+    plan = cs.current_plan(now)
+    assert plan.n_chips == 256
+    # w0 stops heartbeating
+    now = 100.0
+    for w in cs.workers[1:]:
+        cs.monitor.beat(w, now)
+    new_plan = cs.handle_step(now, {w: 1.0 for w in cs.workers[1:]})
+    assert new_plan is not None and new_plan.n_chips == 252 // 16 * 16
