@@ -1,40 +1,62 @@
 """Benchmark harness — one module per paper table/figure + the roofline.
 
-Prints ``name,us_per_call,derived`` CSV per the scaffold convention.
+Prints ``name,us_per_call,derived`` CSV per the scaffold convention; with
+``--json out.json`` it additionally writes a machine-readable trajectory
+(suite -> metric -> value) for CI tracking.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig1 tco   # subset
+  PYTHONPATH=src python -m benchmarks.run                   # all
+  PYTHONPATH=src python -m benchmarks.run fig1 tco          # subset
+  PYTHONPATH=src python -m benchmarks.run serving --json out.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 SUITES = ("fig1", "workload", "tco", "serving", "kernels", "roofline")
 
 
-def main() -> None:
-    want = set(sys.argv[1:]) or set(SUITES)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*",
+                    help=f"subset of suites (default: all of {SUITES})")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write a suite->metric->value JSON trajectory")
+    args = ap.parse_args(argv)
+    unknown = set(args.suites) - set(SUITES)
+    if unknown:
+        ap.error(f"unknown suites {sorted(unknown)}; choose from {SUITES}")
+    want = set(args.suites) or set(SUITES)
     failures = []
+    results = {}
 
     if "fig1" in want:
         from benchmarks import endurance_fig1
-        _run("endurance_fig1", endurance_fig1.run, failures)
+        results["fig1"] = _run("endurance_fig1", endurance_fig1.run, failures)
     if "workload" in want:
         from benchmarks import workload_characterization
-        _run("workload_characterization", workload_characterization.run, failures)
+        results["workload"] = _run("workload_characterization",
+                                   workload_characterization.run, failures)
     if "tco" in want:
         from benchmarks import mrm_tco
-        _run("mrm_tco", mrm_tco.run, failures)
+        results["tco"] = _run("mrm_tco", mrm_tco.run, failures)
     if "serving" in want:
         from benchmarks import serving_sim
-        _run("serving_sim", serving_sim.run, failures)
+        results["serving"] = _run("serving_sim", serving_sim.run, failures)
     if "kernels" in want:
         from benchmarks import kernels
-        _run("kernels", kernels.run, failures)
+        results["kernels"] = _run("kernels", kernels.run, failures)
     if "roofline" in want:
         from benchmarks import roofline
-        _run("roofline", roofline.run, failures)
+        results["roofline"] = _run("roofline", roofline.run, failures)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": results, "failures": failures}, f,
+                      indent=1, default=float)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)
@@ -43,10 +65,11 @@ def main() -> None:
 
 def _run(name, fn, failures):
     try:
-        fn(csv=True)
+        return fn(csv=True)
     except Exception:
         traceback.print_exc()
         failures.append(name)
+        return None
 
 
 if __name__ == "__main__":

@@ -1,6 +1,13 @@
-"""Retention-policy sweep (paper §4: DCM 'right-provisioning'): vary the
-DCM expected-session-lifetime programming and measure refresh overhead vs
-write energy — the knob the cluster control plane owns."""
+"""Serving-simulator benchmarks over the MRM control plane.
+
+1. Retention-policy sweep (paper §4: DCM 'right-provisioning'): vary the
+   DCM expected-session-lifetime programming and measure refresh overhead
+   vs write energy — the knob the cluster control plane owns.
+2. Cluster sweep: replica count x capacity-constrained MRM KV tier with
+   chunked prefill — every failed KV allocation must be resolved by an
+   explicit eviction/spill/recompute decision (zero silent drops), and the
+   fleet report aggregates tokens/bytes across replicas.
+"""
 from __future__ import annotations
 
 import time
@@ -42,6 +49,65 @@ def compute(arch="deepseek-7b") -> dict:
     return out
 
 
+def cluster_sweep(arch="deepseek-7b", replica_counts=(1, 2),
+                  kv_capacity_bytes=1 << 25, requests=8) -> dict:
+    """Replica sweep under a capacity-constrained MRM KV tier: chunked
+    prefill on, pressure policy 'evict-lru' (prefix-LRU eviction with
+    drop-and-recompute fallback). Asserts the pressure ledger balances and
+    no allocation was silently dropped."""
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import ClusterFrontend, EngineConfig, ServeEngine
+
+    full = get_config(arch)
+    cfg = reduced(full)
+    params = init_params(cfg, jax.random.key(0))
+    out = {}
+    for n in replica_counts:
+        engines = []
+        for _ in range(n):
+            mem = MemorySystem({"mrm": (MRM_RRAM, kv_capacity_bytes),
+                                "hbm": (HBM3E, 1 << 34)})
+            engines.append(ServeEngine(
+                cfg, params, mem,
+                EngineConfig(max_slots=2, max_cache_len=64, weight_tier="hbm",
+                             kv_tier="mrm", eos_token=-1, chunk_tokens=16,
+                             page_tokens=16,
+                             kv_pressure_policy="evict-lru",
+                             kv_high_watermark=0.9),
+                account_cfg=full))
+        fe = ClusterFrontend(engines)
+        rng = np.random.default_rng(0)
+        for i in range(requests):
+            fe.submit(list(rng.integers(2, cfg.vocab_size, 40)), 8,
+                      session_key=f"user-{i}")
+        rep = fe.run_until_idle()
+        p = rep["pressure"]
+        resolved = (p["resolved_evict"] + p["resolved_spill"] +
+                    p["resolved_recompute"])
+        assert p["events"] > 0, "tier was supposed to be capacity-constrained"
+        assert p["events"] == resolved + p["unresolved"], p
+        assert p["unresolved"] == 0, p
+        assert rep["dropped_allocs"] == 0, \
+            f"silent drops under pressure: {rep['dropped_allocs']}"
+        assert rep["tokens_generated"] == sum(
+            r["tokens_generated"] for r in rep["per_replica"])
+        out[f"replicas_{n}"] = {
+            "finished": rep["finished"],
+            "tokens_generated": rep["tokens_generated"],
+            "fleet_tokens_per_s": rep["fleet_tokens_per_s"],
+            "energy_per_token_j": rep["energy_per_token_j"],
+            "pressure_events": p["events"],
+            "pressure_resolved": resolved,
+            "prefix_evictions": p["prefix_evictions"],
+            "recompute_tokens": p["recompute_tokens"],
+            "dropped_allocs": rep["dropped_allocs"],
+        }
+    return out
+
+
 def run(csv=True):
     t0 = time.perf_counter()
     out = compute()
@@ -50,6 +116,15 @@ def run(csv=True):
         for k, v in out.items():
             print(f"serving_sim/{k}_refresh_overhead,{dt:.1f},{v['refresh_overhead']:.4f}")
             print(f"serving_sim/{k}_energy_per_token,{dt:.1f},{v['energy_per_token_j']:.3e}")
+    t0 = time.perf_counter()
+    fleet = cluster_sweep()
+    dt = (time.perf_counter() - t0) * 1e6
+    out.update(fleet)
+    if csv:
+        for k, v in fleet.items():
+            print(f"serving_sim/{k}_fleet_tokens_per_s,{dt:.1f},{v['fleet_tokens_per_s']:.4f}")
+            print(f"serving_sim/{k}_pressure_events,{dt:.1f},{v['pressure_events']}")
+            print(f"serving_sim/{k}_dropped_allocs,{dt:.1f},{v['dropped_allocs']}")
     return out
 
 

@@ -2,8 +2,11 @@
 living on MRM — the paper's deployment, end to end:
 
 - continuous batching over fixed decode slots (real token generation);
-- weights written once to the MRM weight region, read wholesale per step;
-- KV pages allocated with DCM retention programmed from session lifetime;
+- chunked prefill: prompts enter in 32-token pieces interleaved with
+  decode rounds (bounded inter-token latency for resident sessions);
+- weights written once to the MRM weight region, read wholesale per pass;
+- KV pages allocated with DCM retention programmed from session lifetime,
+  capacity pressure resolved by prefix-LRU eviction (never silent drops);
 - the retention tracker refreshes live pages and drops closed sessions;
 - the report shows the measured read:write ratio, sequentiality, energy.
 
@@ -33,24 +36,30 @@ engine = ServeEngine(
     cfg, params, mem,
     EngineConfig(max_slots=4, max_cache_len=128, weight_tier="mrm",
                  kv_tier="mrm", page_tokens=64, expected_session_s=30.0,
-                 eos_token=-1),
+                 eos_token=-1, chunk_tokens=32,
+                 kv_pressure_policy="evict-lru"),
     account_cfg=FULL)
 
 rng = np.random.default_rng(0)
 print(f"serving {FULL.name}: weights {engine.weight_bytes/1e9:.0f} GB -> MRM, "
-      f"KV {FULL.kv_bytes_per_token()/1024:.0f} KiB/token, paged x64 tokens")
+      f"KV {FULL.kv_bytes_per_token()/1024:.0f} KiB/token, paged x64 tokens, "
+      f"chunked prefill x32")
 for i in range(8):
     prompt = list(rng.integers(2, cfg.vocab_size, int(rng.integers(10, 60))))
     engine.submit(prompt, max_new_tokens=16)
 
 rep = engine.run_until_idle()
 mrm = rep["memory"]["tiers"]["mrm"]
-print(f"\nfinished {rep['finished']} requests, {rep['tokens_generated']} tokens")
+print(f"\nfinished {rep['finished']} requests, {rep['tokens_generated']} tokens "
+      f"({rep['prefill_chunks']} prefill chunks)")
 print(f"  steady read:write ratio  {rep['steady_rw_ratio']:,.0f}:1   (paper: >1000:1)")
 print(f"  sequential read fraction {mrm['seq_fraction']*100:.1f}%")
 print(f"  energy per token         {rep['energy_per_token_j']*1e3:.2f} mJ")
 print(f"  refresh events           {rep['memory']['refresh_stats']['refresh']}")
+print(f"  pressure events          {rep['pressure']['events']} "
+      f"(silent drops {rep['dropped_allocs']})")
 print(f"  MRM wear (max writes)    {mrm['wear_max']:.0f}  "
       f"(ratio {mrm['wear_ratio']:.2f}, life used {mrm['life_used']:.2e})")
 print(f"  ECC overhead             {mrm['ecc_overhead']*100:.2f}%")
 assert rep["steady_rw_ratio"] > 1000
+assert rep["dropped_allocs"] == 0

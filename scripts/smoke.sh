@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Smoke check: tier-1 tests + one fast serving benchmark with a JSON
+# trajectory. Run from the repo root:  bash scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== serving benchmark (fast) =="
+python -m benchmarks.run serving --json /tmp/smoke_serving.json
+python - <<'EOF'
+import json
+rep = json.load(open("/tmp/smoke_serving.json"))
+assert not rep["failures"], rep["failures"]
+fleet = rep["suites"]["serving"]["replicas_2"]
+assert fleet["dropped_allocs"] == 0, fleet
+print("smoke OK:", {k: fleet[k] for k in ("finished", "tokens_generated",
+                                          "pressure_events", "dropped_allocs")})
+EOF

@@ -85,6 +85,11 @@ class RetentionTracker:
     def release(self, rid: int) -> Optional[TrackedRegion]:
         return self._regions.pop(rid, None)
 
+    def get(self, rid: int) -> Optional[TrackedRegion]:
+        """O(1) region lookup by id — the serving hot path (every KV page
+        read) goes through this, never through `regions()`."""
+        return self._regions.get(rid)
+
     def regions(self) -> List[TrackedRegion]:
         return list(self._regions.values())
 

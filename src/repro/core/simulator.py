@@ -164,12 +164,48 @@ class MemorySystem:
 
     def read_region(self, rid: int, nbytes: Optional[float] = None,
                     sequential: bool = True) -> None:
-        r = next((x for x in self.tracker.regions() if x.region_id == rid), None)
+        r = self.tracker.get(rid)  # O(1): hottest call in the serving loop
         if r is None:
             return
         self.devices[r.tier].read(nbytes if nbytes is not None else r.bytes,
                                   sequential)
         self.tracker.touch(rid, self.now)
+
+    def region(self, rid: int):
+        """O(1) region metadata lookup (tier, bytes, deadlines)."""
+        return self.tracker.get(rid)
+
+    def utilization(self, tier: str) -> float:
+        """Fraction of the tier's tracked blocks currently allocated."""
+        return self.devices[tier].alloc.utilization
+
+    # -- per-tier step-latency model -----------------------------------
+    def snapshot(self) -> Dict[str, Tuple[float, float]]:
+        """Per-tier (read_bytes, write+refresh_bytes) counters; pair with
+        :meth:`step_latency_since` to time an engine step."""
+        return {n: (d.stats.read_bytes,
+                    d.stats.write_bytes + d.stats.refresh_bytes)
+                for n, d in self.devices.items()}
+
+    def step_latency_since(self, snap: Dict[str, Tuple[float, float]],
+                           floor_s: float = 1e-4) -> Tuple[float, Dict[str, dict]]:
+        """Model the wall time of the traffic since ``snap``: each tier
+        serves its own reads at its read bandwidth and its writes at its
+        write bandwidth; tiers run in parallel, so the step takes as long
+        as the slowest tier (not all bytes charged to one tier's read BW).
+        Returns (step_seconds, per-tier byte/latency breakdown)."""
+        step_s = floor_s
+        per_tier: Dict[str, dict] = {}
+        for n, d in self.devices.items():
+            r0, w0 = snap.get(n, (0.0, 0.0))
+            dr = d.stats.read_bytes - r0
+            dw = (d.stats.write_bytes + d.stats.refresh_bytes) - w0
+            lat = (dr / (d.tech.read_bw_gbps * 1e9) +
+                   dw / (d.tech.write_bw_gbps * 1e9))
+            per_tier[n] = {"read_bytes": dr, "write_bytes": dw,
+                           "latency_s": lat}
+            step_s = max(step_s, lat)
+        return step_s, per_tier
 
     def release_region(self, rid: int) -> None:
         self.tracker.release(rid)

@@ -1,8 +1,12 @@
 """Serving driver: a reduced model computes real tokens while the MRM
-control plane meters the deployment-size memory system.
+control plane meters the deployment-size memory system. With --replicas N
+a :class:`ClusterFrontend` fans requests across N engine replicas
+(session-affinity routing, shared simulated clock, aggregated fleet
+report).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-      --requests 8 --max-new 16 --kv-tier mrm_rram --weight-tier mrm_rram
+      --requests 8 --max-new 16 --kv-tier mrm_rram --weight-tier mrm_rram \
+      --replicas 2 --chunk-tokens 32 --kv-policy evict-lru
 """
 from __future__ import annotations
 
@@ -11,6 +15,29 @@ import json
 
 import jax
 import numpy as np
+
+
+def build_engine(args, cfg, full, params):
+    from repro.core.memclass import get_technology
+    from repro.core.simulator import MemorySystem
+    from repro.serving import EngineConfig, ServeEngine
+
+    tiers = {"hbm": (get_technology("hbm3e"), int(args.hbm_gb * 2**30))}
+    for t in {args.weight_tier, args.kv_tier} - {"hbm"}:
+        tiers[t] = (get_technology(t), int(args.mrm_gb * 2**30))
+    if args.spill_tier and args.spill_tier not in tiers:
+        tiers[args.spill_tier] = (get_technology(args.spill_tier),
+                                  int(args.mrm_gb * 2**30))
+    mem = MemorySystem(tiers)
+    return ServeEngine(
+        cfg, params, mem,
+        EngineConfig(max_slots=args.slots, max_cache_len=128,
+                     weight_tier=args.weight_tier, kv_tier=args.kv_tier,
+                     expected_session_s=args.session_s,
+                     chunk_tokens=args.chunk_tokens,
+                     kv_pressure_policy=args.kv_policy,
+                     kv_spill_tier=args.spill_tier),
+        account_cfg=full)
 
 
 def main(argv=None):
@@ -25,37 +52,47 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--session-s", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill piece size (None = whole prompt)")
+    ap.add_argument("--kv-policy", default="evict-lru",
+                    choices=("none", "evict-lru", "spill", "recompute"))
+    ap.add_argument("--spill-tier", default=None,
+                    help="colder tier for the 'spill' pressure policy")
+    ap.add_argument("--sessions", type=int, default=3,
+                    help="distinct session keys for affinity routing")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced
-    from repro.core.memclass import get_technology
-    from repro.core.simulator import MemorySystem
     from repro.models import init_params
-    from repro.serving import EngineConfig, ServeEngine
+    from repro.serving import ClusterFrontend
 
     full = get_config(args.arch)
     cfg = reduced(full)
     params = init_params(cfg, jax.random.key(args.seed))
 
-    tiers = {"hbm": (get_technology("hbm3e"), int(args.hbm_gb * 2**30))}
-    for t in {args.weight_tier, args.kv_tier} - {"hbm"}:
-        tiers[t] = (get_technology(t), int(args.mrm_gb * 2**30))
-    mem = MemorySystem(tiers)
-
-    eng = ServeEngine(cfg, params, mem,
-                      EngineConfig(max_slots=args.slots, max_cache_len=128,
-                                   weight_tier=args.weight_tier,
-                                   kv_tier=args.kv_tier,
-                                   expected_session_s=args.session_s),
-                      account_cfg=full)
+    engines = [build_engine(args, cfg, full, params)
+               for _ in range(max(args.replicas, 1))]
     rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
+
+    def gen_prompt():
         prompt = list(rng.integers(2, cfg.vocab_size, rng.integers(8, 48)))
         if cfg.n_codebooks > 1:
             prompt = [list(rng.integers(0, cfg.vocab_size, cfg.n_codebooks))
                       for _ in range(len(prompt))]
-        eng.submit(prompt, max_new_tokens=args.max_new)
-    rep = eng.run_until_idle()
+        return prompt
+
+    if len(engines) == 1:
+        eng = engines[0]
+        for _ in range(args.requests):
+            eng.submit(gen_prompt(), max_new_tokens=args.max_new)
+        rep = eng.run_until_idle()
+    else:
+        fe = ClusterFrontend(engines)
+        for i in range(args.requests):
+            fe.submit(gen_prompt(), max_new_tokens=args.max_new,
+                      session_key=f"session-{i % max(args.sessions, 1)}")
+        rep = fe.run_until_idle()
     print(json.dumps(rep, indent=1, default=float))
     return rep
 

@@ -264,6 +264,46 @@ def decode_attention(q, k_cache, v_cache, cache_pos, cur_pos, *,
 
 
 # ---------------------------------------------------------------------------
+# Extend attention (a chunk of new tokens against a ring-buffer cache) —
+# the compute half of chunked prefill: queries at absolute positions `qpos`
+# attend to everything already resident in the cache (earlier chunks) plus
+# the chunk itself, with the same position-based masking as decode.
+# ---------------------------------------------------------------------------
+
+
+def extend_attention(q, k_cache, v_cache, cache_pos, qpos, *,
+                     window: Optional[int] = None, cap: Optional[float] = None,
+                     scale: float):
+    """q: (B, S, H, D); caches: (B, C, Hkv, D); cache_pos: (B, C) stored
+    absolute positions (-1 = empty); qpos: (S,) absolute query positions.
+    The chunk's own keys must already be written into the cache.
+    -> (B, S, H, Dv)."""
+    B, S, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // Hkv
+    qq = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,S,D)
+    s = jnp.einsum("bhgqd,bkhd->bhgqk", qq, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    qpos = jnp.asarray(qpos, jnp.int32)
+    mask = (cache_pos[:, None, :] >= 0) & (cache_pos[:, None, :] <= qpos[None, :, None])
+    if window is not None:
+        mask &= cache_pos[:, None, :] > (qpos[None, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)  # (B,Hkv,G,S,C)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dv)
+    return out.astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Cache plumbing
 # ---------------------------------------------------------------------------
 
@@ -307,10 +347,28 @@ def fill_cache_from_prefill(cache: dict, k, v, q_offset: int = 0) -> dict:
     return {"k": k_new, "v": v_new, "pos": pos_new}
 
 
-def append_to_cache(cache: dict, k1, v1, pos) -> dict:
+def write_chunk_to_cache(cache: dict, k, v, positions) -> dict:
+    """Write a chunk's keys/values (B, S, Hkv, D) at absolute positions
+    `positions` (S,) into the ring cache (slot = pos % C). Chunks must not
+    exceed the cache length, or intra-chunk ring slots would collide."""
+    C = cache["k"].shape[1]
+    positions = jnp.asarray(positions, jnp.int32)
+    slots = positions % C
+    k_new = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+    v_new = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+    pos_new = cache["pos"].at[:, slots].set(positions[None, :])
+    return {"k": k_new, "v": v_new, "pos": pos_new}
+
+
+def append_to_cache(cache: dict, k1, v1, pos, active=None) -> dict:
     """Append one token (B, 1, Hkv, D) at absolute position(s) `pos` —
     a scalar (dry-run fast path: one dynamic_update_slice) or (B,) per-
-    sequence positions (continuous batching: scatter per row)."""
+    sequence positions (continuous batching: scatter per row).
+
+    ``active`` ((B,) bool, optional): rows where False keep their cache
+    untouched — required when decode rounds interleave with chunked
+    prefill, so a mid-prefill slot's ring entries aren't clobbered by the
+    batched decode write."""
     C = cache["k"].shape[1]
     B = cache["pos"].shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -331,6 +389,11 @@ def append_to_cache(cache: dict, k1, v1, pos) -> dict:
         k_new = cache["k"].at[rows, slot].set(k1[:, 0].astype(cache["k"].dtype))
         v_new = cache["v"].at[rows, slot].set(v1[:, 0].astype(cache["v"].dtype))
         pos_new = cache["pos"].at[rows, slot].set(pos)
+    if active is not None:
+        act = jnp.asarray(active, bool)
+        k_new = jnp.where(act[:, None, None, None], k_new, cache["k"])
+        v_new = jnp.where(act[:, None, None, None], v_new, cache["v"])
+        pos_new = jnp.where(act[:, None], pos_new, cache["pos"])
     return {"k": k_new, "v": v_new, "pos": pos_new}
 
 
@@ -348,8 +411,9 @@ def attention_sublayer(
     window: Optional[int],
     sh=None,
     cache: Optional[dict] = None,
-    mode: str = "train",  # train | prefill | decode
+    mode: str = "train",  # train | prefill | extend | decode
     cur_pos=None,
+    decode_active=None,   # (B,) bool: rows whose cache the decode may touch
 ) -> Tuple[jax.Array, Optional[dict]]:
     """x: (B, S, d) -> (attn_out (B, S, d), updated cache or None)."""
     B, S, d = x.shape
@@ -368,11 +432,22 @@ def attention_sublayer(
     new_cache = None
     if mode == "decode":
         assert cache is not None
-        new_cache = append_to_cache(cache, k, v, cur_pos)
+        new_cache = append_to_cache(cache, k, v, cur_pos, active=decode_active)
         if sh is not None:
             new_cache = sh.kv(cfg, new_cache)
         out = decode_attention(q, new_cache["k"], new_cache["v"], new_cache["pos"],
                                cur_pos, window=window, cap=cfg.attn_softcap, scale=scale)
+    elif mode == "extend":
+        # chunked prefill: `positions` are the chunk's absolute positions;
+        # write the chunk's KV into the ring cache, then attend against the
+        # whole cache (earlier chunks + this one) with position masking.
+        assert cache is not None
+        new_cache = write_chunk_to_cache(cache, k, v, positions)
+        if sh is not None:
+            new_cache = sh.kv(cfg, new_cache)
+        out = extend_attention(q, new_cache["k"], new_cache["v"],
+                               new_cache["pos"], positions, window=window,
+                               cap=cfg.attn_softcap, scale=scale)
     else:
         out = chunked_attention(q, k, v, q_offset=0, window=window,
                                 cap=cfg.attn_softcap, scale=scale,

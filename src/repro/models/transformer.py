@@ -86,14 +86,16 @@ def abstract_params(cfg: ModelConfig, shardings=None):
 
 
 def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x, *, positions,
-                sh=None, cache=None, mode="train", cur_pos=None):
+                sh=None, cache=None, mode="train", cur_pos=None,
+                decode_active=None):
     """Pre-norm residual block. Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == "attn":
         h, new_cache = attention_sublayer(cfg, p["mixer"], h, positions=positions,
                                           window=spec.window, sh=sh, cache=cache,
-                                          mode=mode, cur_pos=cur_pos)
+                                          mode=mode, cur_pos=cur_pos,
+                                          decode_active=decode_active)
     elif spec.kind == "mla":
         h, new_cache = mla_sublayer(cfg, p["mixer"], h, positions=positions, sh=sh,
                                     cache=cache, mode=mode, cur_pos=cur_pos)
@@ -191,7 +193,7 @@ def _embed_inputs(cfg: ModelConfig, params, batch: dict, sh=None):
 
 
 def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
-                 caches=None, mode="train", cur_pos=None):
+                 caches=None, mode="train", cur_pos=None, decode_active=None):
     """Run every scan group. Returns (x, new_caches, aux_total)."""
     groups = cfg.scan_groups()
     aux_total = jnp.zeros((), jnp.float32)
@@ -210,7 +212,8 @@ def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
             for u, spec in enumerate(_g.unit):
                 xx, c_new, aux_u = apply_block(
                     cfg, spec, params_t[u], xx, positions=positions, sh=sh,
-                    cache=caches_t[u], mode=mode, cur_pos=cur_pos)
+                    cache=caches_t[u], mode=mode, cur_pos=cur_pos,
+                    decode_active=decode_active)
                 outs.append(c_new)
                 aux = aux + aux_u
             return (xx, aux), (tuple(outs) if caches is not None or mode == "prefill" else None)
@@ -300,16 +303,48 @@ def prefill(cfg: ModelConfig, params, batch: dict, sh=None,
     return logits, new_caches
 
 
-def decode(cfg: ModelConfig, params, caches, last_tokens, cur_pos, sh=None):
+def decode(cfg: ModelConfig, params, caches, last_tokens, cur_pos, sh=None,
+           active=None):
     """One decode step. last_tokens: (B, 1[, K]); cur_pos: scalar absolute
-    position (incl. meta/frontend prefix). Returns (logits (B, V[, K]), caches)."""
+    position (incl. meta/frontend prefix); active: optional (B,) bool — rows
+    where False leave their caches untouched (continuous batching with
+    chunked prefill in flight). Returns (logits (B, V[, K]), caches)."""
     x = embed(cfg, params["embed"], last_tokens)
     if sh is not None:
         x = sh.c(x, ("act_batch", None, "act_embed"))
     cp = jnp.asarray(cur_pos, jnp.int32)
     positions = cp if cp.ndim == 0 else cp[:, None]  # (B,) -> (B, 1) for rope
     x, new_caches, _ = apply_groups(cfg, params, x, positions=positions, sh=sh,
-                                    caches=caches, mode="decode", cur_pos=cp)
+                                    caches=caches, mode="decode", cur_pos=cp,
+                                    decode_active=active)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(cfg, params["embed"], x[:, 0])
+    return logits, new_caches
+
+
+def supports_extend(cfg: ModelConfig) -> bool:
+    """Chunked prefill (``extend``) is implemented for pure-attention
+    stacks; SSM/MLA/hybrid mixers keep whole-prompt prefill (DESIGN.md §3)."""
+    return all(spec.kind == "attn" for spec in cfg.layer_specs())
+
+
+def extend(cfg: ModelConfig, params, caches, tokens, offset, sh=None):
+    """Chunked-prefill continuation: process ``tokens`` (B, S[, K]) at
+    absolute positions ``offset + [0, S)`` against existing caches (which
+    already hold every earlier chunk). ``offset`` may be traced, so one
+    compiled executable serves every chunk of a given length.
+    Returns (last-position logits (B, V[, K]), updated caches)."""
+    if not supports_extend(cfg):
+        raise NotImplementedError(
+            f"chunked prefill requires an all-attention stack; "
+            f"{cfg.name} has other mixer kinds")
+    x = embed(cfg, params["embed"], tokens)
+    if sh is not None:
+        x = sh.c(x, ("act_batch", "act_seq_res", "act_embed"))
+    S = x.shape[1]
+    positions = jnp.asarray(offset, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    x, new_caches, _ = apply_groups(cfg, params, x, positions=positions, sh=sh,
+                                    caches=caches, mode="extend")
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params["embed"], x[:, -1])
     return logits, new_caches

@@ -1,6 +1,11 @@
-from repro.serving.engine import EngineConfig, ServeEngine
-from repro.serving.kv_cache import PagedKVManager
+from repro.serving.cluster import ClusterFrontend
+from repro.serving.engine import (ComputeBackend, EngineConfig, MemoryPlane,
+                                  PrefillChunk, ServeEngine, StepPlan,
+                                  StepReport)
+from repro.serving.kv_cache import PagedKVManager, PressureStats
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
-__all__ = ["EngineConfig", "ServeEngine", "PagedKVManager",
-           "ContinuousBatchScheduler", "Request"]
+__all__ = ["EngineConfig", "ServeEngine", "ComputeBackend", "MemoryPlane",
+           "StepPlan", "StepReport", "PrefillChunk", "PagedKVManager",
+           "PressureStats", "ContinuousBatchScheduler", "Request",
+           "ClusterFrontend"]

@@ -1,0 +1,126 @@
+"""Multi-replica cluster frontend over per-replica MRM control planes.
+
+The paper's deployment unit is a fleet: many accelerators, each with its
+own MRM stack, serving a shared request population (§2.2 "millions of
+users"). :class:`ClusterFrontend` fans requests across N
+:class:`~repro.serving.engine.ServeEngine` replicas:
+
+- **session-affinity routing** — requests carrying a ``session_key`` hash
+  to a sticky replica, so a user's repeated prompts hit the same replica's
+  prefix index (shared-prefix KV reuse is per-replica state);
+- **least-loaded routing** — keyless requests go to the replica with the
+  fewest queued+resident requests;
+- **shared simulated clock** — replicas execute a step in parallel; a
+  cluster round lasts as long as the slowest replica, and lagging replicas
+  advance to the fleet clock (servicing their refresh deadlines while
+  "waiting");
+- **aggregated fleet report** — tokens, per-tier bytes, energy and
+  capacity-pressure resolutions summed across replicas, with the
+  per-replica breakdown attached (conservation is testable).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.engine import ServeEngine
+
+
+class ClusterFrontend:
+    def __init__(self, engines: List[ServeEngine]):
+        if not engines:
+            raise ValueError("ClusterFrontend needs at least one replica")
+        self.engines = list(engines)
+        self.routes: Dict[str, int] = {}          # session_key -> replica
+        self.requests: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, local)
+        self._next_rid = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return max(e.mem.now for e in self.engines)
+
+    @property
+    def idle(self) -> bool:
+        return all(e.sched.idle for e in self.engines)
+
+    def route(self, session_key: Optional[str] = None) -> int:
+        if session_key is not None:
+            key = str(session_key)
+            if key not in self.routes:
+                h = int(hashlib.sha1(key.encode()).hexdigest(), 16)
+                self.routes[key] = h % len(self.engines)
+            return self.routes[key]
+        return min(range(len(self.engines)),
+                   key=lambda i: (len(self.engines[i].sched.queue) +
+                                  len(self.engines[i].sched.active), i))
+
+    def submit(self, prompt_tokens: list, max_new_tokens: int,
+               session_key: Optional[str] = None) -> int:
+        """Route and enqueue a request; returns a cluster-wide request id."""
+        replica = self.route(session_key)
+        local = self.engines[replica].submit(prompt_tokens, max_new_tokens)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = (replica, local)
+        return rid
+
+    def output(self, rid: int) -> list:
+        replica, local = self.requests[rid]
+        return self.engines[replica].outputs[local]
+
+    def replica_of(self, rid: int) -> int:
+        return self.requests[rid][0]
+
+    # ------------------------------------------------------------------
+    def step(self) -> dict:
+        """One cluster round: every busy replica runs an engine step in
+        parallel; the fleet clock advances to the slowest replica."""
+        busy = [e for e in self.engines if not e.sched.idle]
+        for e in busy:
+            e.step()
+        now = self.now
+        for e in self.engines:
+            if e.mem.now < now:
+                e.mem.advance(now - e.mem.now)
+        self.steps += 1
+        return {"now_s": now, "busy_replicas": len(busy)}
+
+    def run_until_idle(self, max_steps: int = 10000) -> dict:
+        while not self.idle and self.steps < max_steps:
+            self.step()
+        return self.report()
+
+    # ------------------------------------------------------------------
+    def report(self) -> dict:
+        reps = [e.report() for e in self.engines]
+        tokens = sum(r["tokens_generated"] for r in reps)
+        energy = sum(r["memory"]["total_energy_j"] for r in reps)
+        tiers: Dict[str, dict] = {}
+        for r in reps:
+            for name, t in r["memory"]["tiers"].items():
+                agg = tiers.setdefault(name, {"capacity_gb": 0.0,
+                                              "read_gb": 0.0, "write_gb": 0.0,
+                                              "refresh_gb": 0.0,
+                                              "energy_j": 0.0})
+                for k in agg:
+                    agg[k] += t[k]
+        pressure: Dict[str, int] = {}
+        for r in reps:
+            for k, v in r["pressure"].items():
+                pressure[k] = pressure.get(k, 0) + v
+        return {
+            "replicas": len(self.engines),
+            "cluster_steps": self.steps,
+            "sim_time_s": self.now,
+            "finished": sum(r["finished"] for r in reps),
+            "tokens_generated": tokens,
+            "fleet_tokens_per_s": tokens / max(self.now, 1e-9),
+            "energy_per_token_j": energy / max(tokens, 1),
+            "tiers": tiers,
+            "pressure": pressure,
+            "dropped_allocs": sum(r["dropped_allocs"] for r in reps),
+            "prefix_hits": sum(r["prefix_hits"] for r in reps),
+            "per_replica": reps,
+        }

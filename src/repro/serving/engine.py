@@ -1,20 +1,33 @@
 """Serving engine: continuous batching over fixed decode slots, with every
 byte routed through the MRM memory control plane.
 
-Compute path: the real JAX model (prefill per admitted request, one batched
-decode step per engine step over `max_slots` slots with per-slot positions).
-Memory control plane: weights live in a `weights` region of the chosen tier
-(written once at deploy, read wholesale every step — §2.2); KV pages go
-through `PagedKVManager` (DCM retention = expected session lifetime);
-refresh/migrate/drop deadlines are serviced as simulation time advances.
+The engine is an orchestrator over two subsystems that talk through an
+explicit :class:`StepPlan` / :class:`StepReport` interface:
 
-Step time (simulation) is modelled from the tier's read bandwidth and the
-bytes each phase actually moved — so tokens/s and tokens/J reflect the
-memory system under test, which is exactly the paper's figure of merit.
+- :class:`ComputeBackend` — the JAX compute path: per-slot ring caches,
+  bucketed jit prefill, chunked-prefill continuation (``extend``), and one
+  batched decode step per engine step with per-slot positions.
+- :class:`MemoryPlane`  — the MRM control plane: weights live in a region
+  of the chosen tier (written once at deploy, read wholesale every model
+  pass — §2.2); KV pages go through :class:`PagedKVManager` (DCM retention
+  = expected session lifetime, capacity pressure resolved by an explicit
+  eviction/spill/recompute policy); refresh/migrate/drop deadlines are
+  serviced as simulation time advances.
+
+Chunked prefill: prompts longer than ``chunk_tokens`` are fed to the model
+in pieces interleaved with decode rounds, bounding inter-token latency for
+resident sessions and admitting prompts beyond the bucketing ceiling
+(``max_cache_len``) — the ring caches keep the attention window's tail.
+
+Step time (simulation) is modelled per tier from the bytes each phase
+actually moved and each tier's read/write bandwidth (tiers progress in
+parallel; the slowest tier bounds the step) — so tokens/s and tokens/J
+reflect the memory system under test, which is exactly the paper's figure
+of merit.
 """
 from __future__ import annotations
 
-import dataclasses
+import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -41,57 +54,102 @@ class EngineConfig:
     eos_token: int = 1
     greedy: bool = True
     prefix_caching: bool = True  # share page-aligned prompt prefixes [53]
+    # chunked prefill: feed prompts in `chunk_tokens` pieces interleaved
+    # with decode rounds (None = whole-prompt prefill, the legacy path)
+    chunk_tokens: Optional[int] = None
+    # capacity-pressure policy for the KV tier (see PagedKVManager):
+    # "evict-lru" | "spill" | "recompute" | "none" (legacy silent drops)
+    kv_pressure_policy: str = "evict-lru"
+    kv_spill_tier: Optional[str] = None
+    kv_high_watermark: Optional[float] = 0.92
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, mem: MemorySystem,
-                 ecfg: EngineConfig, account_cfg: Optional[ModelConfig] = None):
-        """``account_cfg`` decouples the memory-accounting scale from the
-        compute scale: CPU tests run a reduced model for real token
-        generation while the control plane meters the *deployment-size*
-        config's weight/KV byte streams (the paper's figures of merit)."""
+# ---------------------------------------------------------------------------
+# StepPlan / StepReport: the contract between scheduler, compute and memory
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefillChunk:
+    """One piece of a (padded) prompt scheduled for this step."""
+    slot: int
+    request_id: int
+    tokens: np.ndarray
+    offset: int    # absolute start position (incl. meta/frontend prefix)
+    first: bool    # creates the slot's caches (runs full prefill)
+    last: bool     # completes the prompt (samples the first output token)
+
+
+@dataclass
+class StepPlan:
+    """What this engine step will do: the scheduler builds it, the
+    ComputeBackend executes it, the MemoryPlane meters it."""
+    prefill: List[PrefillChunk] = field(default_factory=list)
+    decode: List[int] = field(default_factory=list)  # slots
+
+
+@dataclass
+class StepReport:
+    """What an engine step did, with the per-tier byte/latency breakdown."""
+    step_s: float = 0.0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    finished: int = 0
+    bytes_by_tier: Dict[str, dict] = field(default_factory=dict)
+
+    @property
+    def bytes(self) -> float:
+        return sum(t["read_bytes"] + t["write_bytes"]
+                   for t in self.bytes_by_tier.values())
+
+
+@dataclass
+class _SlotPrefill:
+    """Continuation state of a chunked prefill (prefix-indices style: how
+    far into the padded prompt the slot's caches already reach)."""
+    req: Request
+    padded: np.ndarray
+    chunk: int
+    prefix_key: Optional[str]
+    done: int = 0   # tokens of `padded` already prefilled
+
+    def next_chunk(self, slot: int, prefix_len: int) -> PrefillChunk:
+        end = min(self.done + self.chunk, len(self.padded))
+        return PrefillChunk(slot, self.req.request_id,
+                            self.padded[self.done:end],
+                            offset=prefix_len + self.done,
+                            first=self.done == 0,
+                            last=end == len(self.padded))
+
+
+# ---------------------------------------------------------------------------
+# ComputeBackend: the JAX half
+# ---------------------------------------------------------------------------
+
+
+class ComputeBackend:
+    """Real-model compute over fixed decode slots: bucketed jit prefill,
+    chunked-prefill continuation (extend), batched decode. Owns the dense
+    ring caches and per-slot positions/tokens; knows nothing about tiers,
+    pages or retention."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
         self.cfg = cfg
-        self.acct_cfg = account_cfg or cfg
-        self.params = params
-        self.mem = mem
         self.ecfg = ecfg
-        self.sched = ContinuousBatchScheduler(ecfg.max_slots,
-                                              ecfg.max_prefills_per_step)
-        self.kv = PagedKVManager(self.acct_cfg, mem, ecfg.kv_tier,
-                                 ecfg.page_tokens, ecfg.expected_session_s)
-
-        # deploy weights into the weight tier (written once — §2 of paper)
-        counts = self.acct_cfg.param_counts()
-        self.weight_bytes = counts["total"] * 2  # bf16
-        self.active_weight_bytes = counts["active"] * 2
-        self.weight_region = mem.write_region(
-            ecfg.weight_tier, "weights", self.weight_bytes,
-            expected_lifetime_s=mem.devices[ecfg.weight_tier].tech.retention_s)
-
-        # fixed decode slots
+        self.params = params
         B = ecfg.max_slots
         self.caches = tfm.init_caches(cfg, B, ecfg.max_cache_len,
                                       jnp.dtype(cfg.dtype))
         self.positions = np.full((B,), -1, np.int64)  # last written position
         self.last_tokens = np.zeros((B, 1) if cfg.n_codebooks == 1
                                     else (B, 1, cfg.n_codebooks), np.int32)
-        self.outputs: Dict[int, list] = {}
         self._prefill_jit: Dict[int, callable] = {}
+        self._extend_jit: Dict[int, callable] = {}
         self._decode_jit = jax.jit(
-            lambda p, c, t, pos: tfm.decode(cfg, p, c, t, pos))
-        self.tokens_generated = 0
-        self.steps = 0
+            lambda p, c, t, pos, act: tfm.decode(cfg, p, c, t, pos, active=act))
 
-    # ------------------------------------------------------------------
-    def submit(self, prompt_tokens: list, max_new_tokens: int) -> int:
-        rid = len(self.outputs)
-        self.outputs[rid] = []
-        self.sched.submit(Request(rid, prompt_tokens, max_new_tokens,
-                                  self.mem.now))
-        return rid
-
-    # ------------------------------------------------------------------
-    def _bucket(self, n: int) -> int:
+    # -- jit bucketing -------------------------------------------------
+    def bucket(self, n: int) -> int:
         b = 16
         while b < n:
             b *= 2
@@ -108,121 +166,361 @@ class ServeEngine:
             self._prefill_jit[length] = jax.jit(fn)
         return self._prefill_jit[length]
 
+    def _extend_fn(self, length: int):
+        if length not in self._extend_jit:
+            cfg = self.cfg
+            # offset is a traced argument: one executable per chunk length
+            self._extend_jit[length] = jax.jit(
+                lambda p, c, t, off: tfm.extend(cfg, p, c, t, off))
+        return self._extend_jit[length]
+
+    # -- slot cache plumbing -------------------------------------------
     def _insert_slot(self, slot: int, new_caches) -> None:
-        """Copy a B=1 prefill cache into decode-slot `slot`."""
-        def ins(dst, src):
-            return dst.at[:, slot].set(src[:, 0])
+        """Copy a B=1 cache tree into decode-slot `slot`."""
+        self.caches = jax.tree.map(
+            lambda dst, src: dst.at[:, slot].set(src[:, 0]),
+            self.caches, new_caches)
 
-        def walk(dst, src):
-            if isinstance(dst, dict):
-                return {k: walk(dst[k], src[k]) for k in dst}
-            if isinstance(dst, (tuple, list)):
-                return type(dst)(walk(d, s) for d, s in zip(dst, src))
-            return ins(dst, src)
+    def _extract_slot(self, slot: int):
+        """View decode-slot `slot` as a B=1 cache tree (for extend)."""
+        return jax.tree.map(lambda a: a[:, slot:slot + 1], self.caches)
 
-        self.caches = walk(self.caches, new_caches)
-
-    def _prefix_len(self) -> int:
+    def prefix_len(self) -> int:
         return self.cfg.n_meta_tokens + (self.cfg.n_frontend_tokens
                                          if self.cfg.frontend == "vision" else 0)
 
-    # ------------------------------------------------------------------
-    def step(self) -> dict:
-        """One engine step: admissions (prefill) + one decode round."""
-        ecfg = self.ecfg
-        bytes_moved = 0.0
+    def sample(self, logits):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-        # --- admissions (prefill phase) ----------------------------------
-        for slot, req in self.sched.admissions():
-            toks = np.asarray(req.prompt_tokens, np.int32)
-            L = toks.shape[0]
-            pad = self._bucket(L) - L
-            # left-pad with token 0: padded keys are masked only by causality,
-            # acceptable for the functional demo; real serving uses bucketed
-            # compilation exactly like this but with an attention prefix mask.
-            padded = np.pad(toks, [(pad, 0)] + [(0, 0)] * (toks.ndim - 1))
-            batch = {"tokens": jnp.asarray(padded)[None]}
+    # -- StepPlan execution --------------------------------------------
+    def run_prefill_chunk(self, ck: PrefillChunk) -> Optional[np.ndarray]:
+        """Execute one prefill chunk. Returns the sampled next token when
+        the chunk completes the prompt, else None."""
+        toks = np.asarray(ck.tokens, np.int32)
+        if ck.first:
+            batch = {"tokens": jnp.asarray(toks)[None]}
             if self.cfg.frontend == "vision":
                 batch["image_embeds"] = jnp.zeros(
                     (1, self.cfg.n_frontend_tokens, self.cfg.d_model),
                     jnp.dtype(self.cfg.dtype))
-            logits, caches1 = self._prefill_fn(padded.shape[0])(self.params, batch)
-            self._insert_slot(slot, caches1)
-            next_tok = self._sample(logits)
-            self.last_tokens[slot] = next_tok
-            self.positions[slot] = self._prefix_len() + padded.shape[0] - 1
-            req.prefilled_at = self.mem.now
-            self.outputs[req.request_id].append(int(np.asarray(next_tok).flat[0]))
-            req.generated += 1
-            self.tokens_generated += 1
+            logits, caches1 = self._prefill_fn(toks.shape[0])(self.params, batch)
+        else:
+            caches1 = self._extract_slot(ck.slot)
+            logits, caches1 = self._extend_fn(toks.shape[0])(
+                self.params, caches1, jnp.asarray(toks)[None], ck.offset)
+        self._insert_slot(ck.slot, caches1)
+        if not ck.last:
+            return None
+        tok = np.asarray(self.sample(logits))
+        self.last_tokens[ck.slot] = tok
+        self.positions[ck.slot] = ck.offset + toks.shape[0] - 1
+        return tok
 
-            # memory control plane: prefill writes the prompt's KV — unless
-            # a shared prefix already holds the page-aligned leading pages
-            pkey = None
-            if ecfg.prefix_caching:
-                pkey = "p:" + str(hash(padded.tobytes()))
-            sess = self.kv.open_session(req.request_id, prefix_key=pkey)
-            new_tokens = (padded.shape[0] + self._prefix_len()) - sess.tokens
-            self.kv.append_tokens(req.request_id, max(new_tokens, 0))
-            if pkey is not None:
-                self.kv.register_prefix(req.request_id, pkey)
-            self.mem.read_region(self.weight_region, self.active_weight_bytes)
-            bytes_moved += self.active_weight_bytes
+    def run_decode(self, slots: List[int]) -> np.ndarray:
+        """One batched decode round over `slots` (other rows' caches are
+        left untouched via the active mask — a mid-prefill slot must not be
+        clobbered). Returns the sampled tokens for all B rows."""
+        B = self.ecfg.max_slots
+        act = np.zeros((B,), bool)
+        act[slots] = True
+        pos = jnp.asarray(np.maximum(self.positions + 1, 0), jnp.int32)
+        logits, self.caches = self._decode_jit(
+            self.params, self.caches, jnp.asarray(self.last_tokens), pos,
+            jnp.asarray(act))
+        next_np = np.asarray(self.sample(logits))
+        for slot in slots:
+            self.positions[slot] += 1
+            self.last_tokens[slot] = next_np[slot]
+        return next_np
 
-        # --- decode round --------------------------------------------------
-        slots = self.sched.decode_slots()
-        if slots:
-            pos = jnp.asarray(np.maximum(self.positions + 1, 0), jnp.int32)
-            logits, self.caches = self._decode_jit(
-                self.params, self.caches, jnp.asarray(self.last_tokens), pos)
-            next_np = np.asarray(self._sample(logits))
-            self.mem.read_region(self.weight_region, self.active_weight_bytes)
-            bytes_moved += self.active_weight_bytes
+    def free_slot(self, slot: int) -> None:
+        self.positions[slot] = -1
 
-            finished: List[int] = []
-            for slot in slots:
-                req = self.sched.active[slot]
-                tok = next_np[slot]
-                self.positions[slot] += 1
-                self.last_tokens[slot] = tok
-                self.outputs[req.request_id].append(int(np.asarray(tok).flat[0]))
-                req.generated += 1
-                self.tokens_generated += 1
-                bytes_moved += self.kv.read_all(req.request_id)
-                self.kv.append_tokens(req.request_id, 1)
-                done = (req.generated >= req.max_new_tokens or
-                        (self.cfg.n_codebooks == 1 and
-                         int(np.asarray(tok).flat[0]) == ecfg.eos_token))
-                if done:
-                    finished.append(slot)
-            for slot in finished:
-                req = self.sched.finish(slot, self.mem.now)
-                self.kv.close_session(req.request_id)
-                self.positions[slot] = -1
 
-        # --- advance simulated time by the modelled step latency ----------
-        tier = self.mem.devices[ecfg.kv_tier].tech
-        step_s = max(bytes_moved / (tier.read_bw_gbps * 1e9), 1e-4)
-        self.mem.advance(step_s)
-        self.steps += 1
-        return {"step_s": step_s, "bytes": bytes_moved,
-                "active": len(self.sched.active), "queued": len(self.sched.queue)}
+# ---------------------------------------------------------------------------
+# MemoryPlane: the MRM control-plane half
+# ---------------------------------------------------------------------------
 
-    def _sample(self, logits):
-        if self.cfg.n_codebooks > 1:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, K)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    # ------------------------------------------------------------------
+class MemoryPlane:
+    """Weight regions + paged KV + per-tier step metering. All placement,
+    retention and pressure decisions live here; the accounting scale
+    (``acct_cfg``) is decoupled from the compute scale."""
+
+    def __init__(self, acct_cfg: ModelConfig, mem: MemorySystem,
+                 ecfg: EngineConfig):
+        self.cfg = acct_cfg
+        self.mem = mem
+        self.ecfg = ecfg
+        self.kv = PagedKVManager(acct_cfg, mem, ecfg.kv_tier,
+                                 ecfg.page_tokens, ecfg.expected_session_s,
+                                 spill_tier=ecfg.kv_spill_tier,
+                                 policy=ecfg.kv_pressure_policy,
+                                 high_watermark=ecfg.kv_high_watermark)
+        counts = acct_cfg.param_counts()
+        self.weight_bytes = counts["total"] * 2  # bf16
+        self.active_weight_bytes = counts["active"] * 2
+        # deploy weights into the weight tier (written once — §2 of paper)
+        self.weight_region = self._deploy()
+        self._snap = None
+
+    def _deploy(self) -> Optional[int]:
+        return self.mem.write_region(
+            self.ecfg.weight_tier, "weights", self.weight_bytes,
+            expected_lifetime_s=self.mem.devices[
+                self.ecfg.weight_tier].tech.retention_s)
+
     def redeploy_weights(self) -> None:
         """Model update (paper §2/§3: bulk weight overwrite): release the
         old weight region and write the new one — the wear/endurance
         accounting of Figure 1's weight-update bars, from the system."""
         self.mem.release_region(self.weight_region)
-        self.weight_region = self.mem.write_region(
-            self.ecfg.weight_tier, "weights", self.weight_bytes,
-            expected_lifetime_s=self.mem.devices[
-                self.ecfg.weight_tier].tech.retention_s)
+        self.weight_region = self._deploy()
+
+    # -- per-step metering ---------------------------------------------
+    def begin_step(self) -> None:
+        self._snap = self.mem.snapshot()
+
+    def weight_pass(self) -> None:
+        """One model pass streams the active weights from the weight tier."""
+        self.mem.read_region(self.weight_region, self.active_weight_bytes)
+
+    def finish_step(self):
+        """Per-tier step latency: each tier's traffic at its own read/write
+        bandwidth, tiers in parallel -> the slowest bounds the step."""
+        return self.mem.step_latency_since(self._snap)
+
+    def report(self) -> dict:
+        return self.mem.report()
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: the orchestrator
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, mem: MemorySystem,
+                 ecfg: EngineConfig, account_cfg: Optional[ModelConfig] = None):
+        """``account_cfg`` decouples the memory-accounting scale from the
+        compute scale: CPU tests run a reduced model for real token
+        generation while the control plane meters the *deployment-size*
+        config's weight/KV byte streams (the paper's figures of merit)."""
+        self.cfg = cfg
+        self.acct_cfg = account_cfg or cfg
+        self.params = params
+        self.mem = mem
+        self.ecfg = ecfg
+        if ecfg.chunk_tokens is not None and not tfm.supports_extend(cfg):
+            raise ValueError(
+                f"chunk_tokens requires an all-attention stack; {cfg.name} "
+                f"has other mixer kinds (whole-prompt prefill only)")
+        self.sched = ContinuousBatchScheduler(ecfg.max_slots,
+                                              ecfg.max_prefills_per_step)
+        self.backend = ComputeBackend(cfg, params, ecfg)
+        self.memplane = MemoryPlane(self.acct_cfg, mem, ecfg)
+        self.outputs: Dict[int, list] = {}
+        self._inflight: Dict[int, _SlotPrefill] = {}  # slot -> chunk state
+        self.tokens_generated = 0
+        self.steps = 0
+        self.prefill_chunks_run = 0
+
+    # -- legacy surface (kept stable for callers/tests) ----------------
+    @property
+    def kv(self) -> PagedKVManager:
+        return self.memplane.kv
+
+    @property
+    def weight_bytes(self) -> float:
+        return self.memplane.weight_bytes
+
+    @property
+    def active_weight_bytes(self) -> float:
+        return self.memplane.active_weight_bytes
+
+    @property
+    def weight_region(self):
+        return self.memplane.weight_region
+
+    @property
+    def caches(self):
+        return self.backend.caches
+
+    @property
+    def positions(self):
+        return self.backend.positions
+
+    @property
+    def last_tokens(self):
+        return self.backend.last_tokens
+
+    def redeploy_weights(self) -> None:
+        self.memplane.redeploy_weights()
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt_tokens: list, max_new_tokens: int) -> int:
+        if (self.ecfg.chunk_tokens is None and
+                len(prompt_tokens) > self.ecfg.max_cache_len):
+            raise ValueError(
+                f"prompt of {len(prompt_tokens)} tokens exceeds the "
+                f"max_cache_len={self.ecfg.max_cache_len} bucketing ceiling; "
+                f"set chunk_tokens to admit it via chunked prefill")
+        rid = len(self.outputs)
+        self.outputs[rid] = []
+        self.sched.submit(Request(rid, prompt_tokens, max_new_tokens,
+                                  self.mem.now))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _min_ring_len(self) -> int:
+        """Smallest per-layer cache ring (windowed layers have rings of
+        cache_len_for(window, max_cache_len) < max_cache_len)."""
+        from repro.models.attention import cache_len_for
+        return min(cache_len_for(spec.window, self.ecfg.max_cache_len)
+                   for spec in self.cfg.layer_specs())
+
+    def _admit(self, slot: int, req: Request) -> _SlotPrefill:
+        ecfg = self.ecfg
+        toks = np.asarray(req.prompt_tokens, np.int32)
+        L = toks.shape[0]
+        if ecfg.chunk_tokens is None:
+            # legacy whole-prompt prefill (submit() already rejected
+            # prompts beyond the bucketing ceiling)
+            pad = self.backend.bucket(L) - L
+            chunk = L + pad
+        else:
+            # a chunk larger than the smallest per-layer ring would collide
+            # intra-chunk ring slots (duplicate scatter indices), so clamp;
+            # and once the prompt overflows the ring, halve the chunk so
+            # each extend still sees the previous chunks' tail
+            min_ring = self._min_ring_len()
+            chunk = min(ecfg.chunk_tokens, min_ring)
+            if L <= ecfg.max_cache_len:
+                pad = self.backend.bucket(L) - L
+            else:
+                chunk = min(chunk, max(16, min_ring // 2))
+                pad = -L % chunk
+            if L + pad + self.backend.prefix_len() > min_ring:
+                chunk = min(chunk, max(16, min_ring // 2))
+        # left-pad with token 0: padded keys are masked only by causality,
+        # acceptable for the functional demo; real serving uses bucketed
+        # compilation exactly like this but with an attention prefix mask.
+        padded = np.pad(toks, [(pad, 0)] + [(0, 0)] * (toks.ndim - 1))
+        pkey = None
+        if ecfg.prefix_caching:
+            # content digest, not hash(): stable across processes
+            # (PYTHONHASHSEED) and collision-resistant
+            digest = hashlib.sha1(padded.tobytes()).hexdigest()
+            pkey = f"p:{padded.shape[0]}:{digest}"
+        # the KV session opens when the first chunk *executes* (not at
+        # planning), so a prefix registered earlier in the same step is
+        # visible to later admissions
+        st = _SlotPrefill(req=req, padded=padded,
+                          chunk=min(chunk, padded.shape[0]), prefix_key=pkey)
+        self._inflight[slot] = st
+        self.sched.mark_prefilling(slot)
+        return st
+
+    def _plan_step(self) -> StepPlan:
+        """Scheduler half of the step: decide which prefill chunks run and
+        which slots decode. In-flight chunked prefills continue first
+        (bounding time-to-first-token for admitted requests), then new
+        admissions fill the remaining prefill budget."""
+        plan = StepPlan()
+        prefix_len = self.backend.prefix_len()
+        budget = self.ecfg.max_prefills_per_step
+        for slot in sorted(self._inflight):
+            if budget <= 0:
+                break
+            plan.prefill.append(self._inflight[slot].next_chunk(slot, prefix_len))
+            budget -= 1
+        if budget > 0:
+            for slot, req in self.sched.admissions(limit=budget):
+                st = self._admit(slot, req)
+                plan.prefill.append(st.next_chunk(slot, prefix_len))
+                budget -= 1
+        plan.decode = self.sched.decode_slots()
+        return plan
+
+    def _account_chunk_kv(self, st: _SlotPrefill, ck: PrefillChunk) -> None:
+        """This chunk's tokens enter the paged KV — unless a shared prefix
+        already holds them (prefix reuse is counted once at open)."""
+        target = ck.offset + len(ck.tokens)  # kv tokens incl. meta/frontend
+        cur = self.kv.sessions[ck.request_id].tokens
+        if target > cur:
+            self.kv.append_tokens(ck.request_id, target - cur)
+
+    # ------------------------------------------------------------------
+    def step(self) -> dict:
+        """One engine step: prefill chunks + one decode round, metered."""
+        plan = self._plan_step()
+        self.memplane.begin_step()
+        rpt = StepReport()
+
+        # --- prefill phase (whole prompts or chunks) ------------------
+        for ck in plan.prefill:
+            if ck.first:
+                self.kv.open_session(ck.request_id,
+                                     prefix_key=self._inflight[ck.slot].prefix_key)
+            tok = self.backend.run_prefill_chunk(ck)
+            self.memplane.weight_pass()
+            self.prefill_chunks_run += 1
+            self.sched.stats.prefill_chunks += 1
+            st = self._inflight[ck.slot]
+            self._account_chunk_kv(st, ck)
+            st.done += len(ck.tokens)
+            st.req.prompt_pos = min(st.done, st.req.prompt_len)
+            rpt.prefill_tokens += len(ck.tokens)
+            if ck.last:
+                req = st.req
+                req.prefilled_at = self.mem.now
+                self.outputs[req.request_id].append(int(np.asarray(tok).flat[0]))
+                req.generated += 1
+                self.tokens_generated += 1
+                if st.prefix_key is not None:
+                    self.kv.register_prefix(req.request_id, st.prefix_key)
+                self.sched.mark_decoding(ck.slot)
+                del self._inflight[ck.slot]
+
+        # --- decode round ---------------------------------------------
+        if plan.decode:
+            next_np = self.backend.run_decode(plan.decode)
+            self.memplane.weight_pass()
+            finished: List[int] = []
+            for slot in plan.decode:
+                req = self.sched.active[slot]
+                tok = next_np[slot]
+                self.outputs[req.request_id].append(int(np.asarray(tok).flat[0]))
+                req.generated += 1
+                self.tokens_generated += 1
+                rpt.decode_tokens += 1
+                self.sched.stats.decode_tokens += 1
+                self.kv.read_all(req.request_id)
+                self.kv.append_tokens(req.request_id, 1)
+                done = (req.generated >= req.max_new_tokens or
+                        (self.cfg.n_codebooks == 1 and
+                         int(np.asarray(tok).flat[0]) == self.ecfg.eos_token))
+                if done:
+                    finished.append(slot)
+            for slot in finished:
+                req = self.sched.finish(slot, self.mem.now)
+                self.kv.close_session(req.request_id)
+                self.backend.free_slot(slot)
+                rpt.finished += 1
+
+        # --- advance simulated time by the modelled step latency ------
+        step_s, per_tier = self.memplane.finish_step()
+        self.mem.advance(step_s)
+        self.steps += 1
+        rpt.step_s = step_s
+        rpt.bytes_by_tier = per_tier
+        return {"step_s": step_s, "bytes": rpt.bytes,
+                "bytes_by_tier": rpt.bytes_by_tier,
+                "prefill_tokens": rpt.prefill_tokens,
+                "decode_tokens": rpt.decode_tokens,
+                "finished": rpt.finished,
+                "active": len(self.sched.active),
+                "queued": len(self.sched.queue)}
 
     # ------------------------------------------------------------------
     def run_until_idle(self, max_steps: int = 10000) -> dict:
@@ -231,7 +529,7 @@ class ServeEngine:
         return self.report()
 
     def report(self) -> dict:
-        rep = self.mem.report()
+        rep = self.memplane.report()
         total_energy = rep["total_energy_j"]
         # steady-state read:write ratio: exclude the one-time model-deploy
         # write (it amortizes to ~0 over a device lifetime — §2.2's >1000:1
@@ -250,6 +548,8 @@ class ServeEngine:
             "memory": rep,
             "kv_live_pages": self.kv.live_pages(),
             "dropped_allocs": self.kv.dropped_allocs,
+            "pressure": self.kv.pressure_report(),
+            "prefill_chunks": self.prefill_chunks_run,
             "prefix_hits": self.kv.prefix_hits,
             "prefix_tokens_reused": self.kv.prefix_tokens_reused,
         }

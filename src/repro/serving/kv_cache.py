@@ -12,6 +12,21 @@ argument). Page *placement and lifetime* go through `repro.core`:
   and the open page region is rewritten (append-only write pattern);
 - session end -> regions released (soft state dropped, per §4).
 
+Capacity pressure (paper §2.2/§4: the *system* manages retention, placement
+and eviction of inference soft state): when the tier cannot serve an
+allocation — or utilization crosses the high watermark — the manager
+resolves it through an explicit policy chain instead of silently counting a
+drop:
+
+1. ``evict``     — LRU-evict shared-prefix index entries whose pages are
+                   only pinned by the index (frees capacity immediately);
+2. ``spill``     — place the page in a configured colder tier instead;
+3. ``recompute`` — drop the page as soft state; a later read re-materializes
+                   it (recompute-on-demand), metered as recompute tokens.
+
+Every failed allocation ends in exactly one recorded resolution; silent
+``dropped_allocs`` only remain under the legacy ``policy="none"``.
+
 The JAX compute path keeps its own dense ring caches (models/attention.py);
 this manager is the memory control plane that decides *where those bytes
 live* and meters the device traffic.
@@ -24,6 +39,8 @@ from typing import Dict, List, Optional
 from repro.configs.base import ModelConfig
 from repro.core.simulator import MemorySystem
 
+PRESSURE_POLICIES = ("none", "evict-lru", "spill", "recompute")
+
 
 @dataclass
 class Page:
@@ -33,6 +50,8 @@ class Page:
     sealed: bool = False
     refcount: int = 1          # >1 when shared via prefix caching
     prefix_key: Optional[str] = None
+    tier: str = ""             # where the page lives (spill may differ)
+    dropped: bool = False      # soft state dropped; recompute on read
 
 
 @dataclass
@@ -43,24 +62,62 @@ class SessionKV:
     shared_prefix_pages: int = 0
 
 
+@dataclass
+class PressureStats:
+    """Ledger of capacity-pressure events and their explicit resolutions.
+    Invariant: events == evict + spill + recompute + unresolved."""
+    events: int = 0
+    resolved_evict: int = 0
+    resolved_spill: int = 0
+    resolved_recompute: int = 0
+    unresolved: int = 0
+    prefix_evictions: int = 0      # index entries evicted (incl. watermark)
+    watermark_evictions: int = 0   # subset triggered proactively
+    recompute_tokens: int = 0      # tokens re-materialized on later reads
+
+    def as_dict(self) -> dict:
+        return {
+            "events": self.events,
+            "resolved_evict": self.resolved_evict,
+            "resolved_spill": self.resolved_spill,
+            "resolved_recompute": self.resolved_recompute,
+            "unresolved": self.unresolved,
+            "prefix_evictions": self.prefix_evictions,
+            "watermark_evictions": self.watermark_evictions,
+            "recompute_tokens": self.recompute_tokens,
+        }
+
+
 class PagedKVManager:
     def __init__(self, cfg: ModelConfig, mem: MemorySystem, tier: str,
                  page_tokens: int = 128,
-                 expected_session_s: float = 600.0):
+                 expected_session_s: float = 600.0,
+                 spill_tier: Optional[str] = None,
+                 policy: str = "none",
+                 high_watermark: Optional[float] = None):
+        if policy not in PRESSURE_POLICIES:
+            raise ValueError(f"policy {policy!r} not in {PRESSURE_POLICIES}")
+        if policy == "spill" and spill_tier is None:
+            raise ValueError("policy 'spill' requires spill_tier")
         self.cfg = cfg
         self.mem = mem
         self.tier = tier
         self.page_tokens = page_tokens
         self.expected_session_s = expected_session_s
+        self.spill_tier = spill_tier
+        self.policy = policy
+        self.high_watermark = high_watermark
         self.kv_bytes_token = cfg.kv_bytes_per_token()
         self.page_bytes = self.kv_bytes_token * page_tokens
         self.sessions: Dict[int, SessionKV] = {}
         self._next_page = 0
-        self.dropped_allocs = 0
+        self.dropped_allocs = 0            # legacy: truly-silent drops only
+        self.pressure = PressureStats()
         # automatic prefix caching (paper §2.2 cites vLLM's [53]): sealed
         # prefix pages are shared by key across sessions — repeated prompt
         # prefixes cost zero KV writes and zero extra MRM capacity
         self._prefix_index: Dict[str, List[Page]] = {}
+        self._prefix_lru: Dict[str, float] = {}   # key -> last-use sim time
         self.prefix_hits = 0
         self.prefix_tokens_reused = 0
 
@@ -80,6 +137,7 @@ class PagedKVManager:
             s.shared_prefix_pages = len(s.pages)
             self.prefix_hits += 1
             self.prefix_tokens_reused += s.tokens
+            self._prefix_lru[prefix_key] = self.mem.now
         return s
 
     def register_prefix(self, session_id: int, prefix_key: str) -> None:
@@ -88,21 +146,87 @@ class PagedKVManager:
         s = self.sessions[session_id]
         if prefix_key in self._prefix_index or s.shared_prefix_pages:
             return
-        sealed = [p for p in s.pages if p.sealed]
+        sealed = [p for p in s.pages if p.sealed and not p.dropped]
         if sealed:
             for p in sealed:
                 p.prefix_key = prefix_key
                 p.refcount += 1  # the index holds its own reference
             self._prefix_index[prefix_key] = sealed
+            self._prefix_lru[prefix_key] = self.mem.now
 
-    def _new_page(self, s: SessionKV, n_tokens: int) -> Page:
-        rid = self.mem.write_region(
-            self.tier, f"session:{s.session_id}",
-            n_tokens * self.kv_bytes_token,
-            expected_lifetime_s=self.expected_session_s)
-        if rid is None:
+    # -- capacity pressure ---------------------------------------------
+    def _lru_evictable_prefix(self) -> Optional[str]:
+        """Least-recently-used prefix entry whose pages are pinned only by
+        the index — evicting it frees capacity immediately."""
+        best, best_t = None, None
+        for key, pages in self._prefix_index.items():
+            if all(p.refcount == 1 for p in pages):
+                t = self._prefix_lru.get(key, 0.0)
+                if best_t is None or t < best_t:
+                    best, best_t = key, t
+        return best
+
+    def _alloc(self, owner: str, nbytes: float, tier: str) -> Optional[int]:
+        return self.mem.write_region(tier, owner, nbytes,
+                                     expected_lifetime_s=self.expected_session_s)
+
+    def _evict_and_retry(self, owner: str, nbytes: float) -> Optional[int]:
+        while True:
+            victim = self._lru_evictable_prefix()
+            if victim is None:
+                return None
+            self.evict_prefix(victim)
+            self.pressure.prefix_evictions += 1
+            rid = self._alloc(owner, nbytes, self.tier)
+            if rid is not None:
+                return rid
+
+    def _resolve_pressure(self, owner: str, nbytes: float):
+        """Allocation failed: decide what gives. Returns (region_id, tier,
+        dropped) with the resolution recorded — never a silent drop unless
+        the legacy policy 'none' is selected."""
+        self.pressure.events += 1
+        if self.policy == "none":
+            self.pressure.unresolved += 1
             self.dropped_allocs += 1
-        p = Page(self._next_page, rid, n_tokens)
+            return None, self.tier, False
+        if self.policy in ("evict-lru", "spill"):
+            rid = self._evict_and_retry(owner, nbytes)
+            if rid is not None:
+                self.pressure.resolved_evict += 1
+                return rid, self.tier, False
+        if self.policy == "spill":
+            rid = self._alloc(owner, nbytes, self.spill_tier)
+            if rid is not None:
+                self.pressure.resolved_spill += 1
+                return rid, self.spill_tier, False
+        # drop-and-recompute: the page's KV is soft state — admit the page
+        # with no backing region; a later read re-materializes it
+        self.pressure.resolved_recompute += 1
+        return None, self.tier, True
+
+    def _check_watermark(self) -> None:
+        if self.high_watermark is None or self.policy == "none":
+            return
+        while self.mem.utilization(self.tier) > self.high_watermark:
+            victim = self._lru_evictable_prefix()
+            if victim is None:
+                return
+            self.evict_prefix(victim)
+            self.pressure.prefix_evictions += 1
+            self.pressure.watermark_evictions += 1
+
+    # ------------------------------------------------------------------
+    def _new_page(self, s: SessionKV, n_tokens: int) -> Page:
+        self._check_watermark()
+        owner = f"session:{s.session_id}"
+        nbytes = n_tokens * self.kv_bytes_token
+        tier, dropped = self.tier, False
+        rid = self._alloc(owner, nbytes, self.tier)
+        if rid is None:
+            rid, tier, dropped = self._resolve_pressure(owner, nbytes)
+        p = Page(self._next_page, rid, n_tokens, tier=tier, dropped=dropped,
+                 sealed=n_tokens >= self.page_tokens)
         self._next_page += 1
         s.pages.append(p)
         return p
@@ -117,7 +241,7 @@ class PagedKVManager:
                 if take > 0:
                     # append-only rewrite of the open page region
                     if page.region_id is not None:
-                        self.mem.devices[self.tier].write(
+                        self.mem.devices[page.tier].write(
                             take * self.kv_bytes_token,
                             expected_lifetime_s=self.expected_session_s)
                     page.n_tokens += take
@@ -131,12 +255,35 @@ class PagedKVManager:
             s.tokens += take
             n -= take
 
+    def _rematerialize(self, s: SessionKV, page: Page) -> None:
+        """A dropped page was read: recompute its KV (metered) and try to
+        write it back; if the tier is still full it stays dropped and will
+        be recomputed again next read. This is *not* a new pressure event —
+        it services the recompute resolution already recorded when the page
+        was dropped, so only recompute_tokens accrues here."""
+        self.pressure.recompute_tokens += page.n_tokens
+        owner = f"session:{s.session_id}"
+        nbytes = page.n_tokens * self.kv_bytes_token
+        tier = page.tier
+        rid = self._alloc(owner, nbytes, tier)
+        if rid is None and self.policy in ("evict-lru", "spill"):
+            rid = self._evict_and_retry(owner, nbytes)
+        if rid is None and self.policy == "spill":
+            rid = self._alloc(owner, nbytes, self.spill_tier)
+            tier = self.spill_tier
+        if rid is not None:
+            page.region_id = rid
+            page.tier = tier
+            page.dropped = False
+
     def read_all(self, session_id: int) -> float:
         """One decode step reads the whole cache sequentially (paper §2.2).
-        Returns bytes read."""
+        Returns bytes read (recomputed pages included once re-materialized)."""
         s = self.sessions[session_id]
         total = 0.0
         for page in s.pages:
+            if page.dropped:
+                self._rematerialize(s, page)
             if page.region_id is not None:
                 self.mem.read_region(page.region_id,
                                      page.n_tokens * self.kv_bytes_token,
@@ -157,6 +304,7 @@ class PagedKVManager:
     def evict_prefix(self, prefix_key: str) -> None:
         """Capacity/retention policy hook: drop the index's reference."""
         pages = self._prefix_index.pop(prefix_key, None)
+        self._prefix_lru.pop(prefix_key, None)
         for page in pages or []:
             page.refcount -= 1
             if page.refcount <= 0 and page.region_id is not None:
@@ -169,3 +317,8 @@ class PagedKVManager:
 
     def live_tokens(self) -> int:
         return sum(s.tokens for s in self.sessions.values())
+
+    def pressure_report(self) -> dict:
+        rep = self.pressure.as_dict()
+        rep["dropped_allocs"] = self.dropped_allocs
+        return rep

@@ -2,14 +2,17 @@
 
 Splitwise-style ([34], cited by the paper) phase awareness: prefill work is
 admitted up to `max_prefills_per_step` per engine step so decode latency
-stays bounded; decode rounds run over all resident sessions. Deterministic
-(no wall clock — simulation time comes from the engine).
+stays bounded; decode rounds run over all resident sessions. With chunked
+prefill, a slot can be resident but still *prefilling* (its prompt is being
+fed in `chunk_tokens` pieces interleaved with decode rounds); such slots
+are excluded from decode until the engine marks them decoding.
+Deterministic (no wall clock — simulation time comes from the engine).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Set
 
 
 @dataclass
@@ -21,6 +24,7 @@ class Request:
     prefilled_at: Optional[float] = None
     finished_at: Optional[float] = None
     generated: int = 0
+    prompt_pos: int = 0       # prompt tokens prefilled so far (chunked prefill)
 
     @property
     def prompt_len(self) -> int:
@@ -34,6 +38,7 @@ class SchedulerStats:
     queue_peak: int = 0
     prefill_tokens: int = 0
     decode_tokens: int = 0
+    prefill_chunks: int = 0
 
 
 class ContinuousBatchScheduler:
@@ -43,17 +48,18 @@ class ContinuousBatchScheduler:
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self.free_slots: List[int] = list(range(max_batch_slots))
+        self.prefilling: Set[int] = set()     # slots mid-chunked-prefill
         self.stats = SchedulerStats()
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
         self.stats.queue_peak = max(self.stats.queue_peak, len(self.queue))
 
-    def admissions(self) -> List[tuple]:
-        """Pick (slot, request) pairs to prefill this step."""
+    def admissions(self, limit: Optional[int] = None) -> List[tuple]:
+        """Pick (slot, request) pairs to start prefilling this step."""
+        n = self.max_prefills if limit is None else min(limit, self.max_prefills)
         out = []
-        while (self.queue and self.free_slots and
-               len(out) < self.max_prefills):
+        while self.queue and self.free_slots and len(out) < n:
             req = self.queue.popleft()
             slot = self.free_slots.pop(0)
             self.active[slot] = req
@@ -62,11 +68,19 @@ class ContinuousBatchScheduler:
             out.append((slot, req))
         return out
 
+    # -- chunked-prefill phase tracking (engine-driven) ----------------
+    def mark_prefilling(self, slot: int) -> None:
+        self.prefilling.add(slot)
+
+    def mark_decoding(self, slot: int) -> None:
+        self.prefilling.discard(slot)
+
     def decode_slots(self) -> List[int]:
-        return sorted(self.active)
+        return sorted(s for s in self.active if s not in self.prefilling)
 
     def finish(self, slot: int, now: float) -> Request:
         req = self.active.pop(slot)
+        self.prefilling.discard(slot)
         req.finished_at = now
         self.free_slots.append(slot)
         self.free_slots.sort()

@@ -1,0 +1,39 @@
+"""Graceful degradation when `hypothesis` isn't installed: property tests
+skip (with a clear reason) instead of erroring the whole module at
+collection, so the deterministic tests in the same file still run.
+
+Usage in test modules:
+
+    from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when dep is absent
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `strategies`: any strategy call returns None, so
+        module-level `@given(st.lists(...))` decorations still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        def deco(_fn):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                                     "(pip install -r requirements-dev.txt)")
+            def _skipped():
+                pass
+            _skipped.__name__ = _fn.__name__
+            _skipped.__doc__ = _fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn

@@ -3,14 +3,14 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config, reduced
 from repro.core.memclass import HBM3E, MRM_RRAM
 from repro.core.simulator import MemorySystem
 from repro.models import init_params
-from repro.serving import (ContinuousBatchScheduler, EngineConfig,
-                           PagedKVManager, Request, ServeEngine)
+from repro.serving import (ClusterFrontend, ContinuousBatchScheduler,
+                           EngineConfig, PagedKVManager, Request, ServeEngine)
 
 
 def _mem(gb=8):
@@ -143,7 +143,10 @@ def test_engine_refresh_fires_during_long_sessions(small_engine_setup):
                                    weight_tier="hbm", kv_tier="mrm",
                                    expected_session_s=0.02),
                       account_cfg=full)
-    eng.submit(list(np.arange(2, 34)), 40)
+    # 80 decode steps x ~11.5 ms (weights stream from HBM at its own
+    # bandwidth under the per-tier step-latency model) comfortably crosses
+    # the DCM-floored 0.5 s refresh deadline
+    eng.submit(list(np.arange(2, 34)), 80)
     rep = eng.run_until_idle()
     assert rep["memory"]["refresh_stats"]["refresh"] >= 1
 
@@ -245,6 +248,287 @@ def test_engine_multicodebook_audio():
     assert rep["finished"] == 3
     assert rep["tokens_generated"] >= 15
     assert eng.last_tokens.shape[-1] == cfg.n_codebooks
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: equivalence vs whole-prompt, and prompts beyond the
+# bucketing ceiling
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def f32_engine_setup():
+    """fp32 compute keeps the (mathematically equivalent) extend path's
+    greedy argmax bit-stable vs whole-prompt prefill — bf16's residual
+    rounding can amplify fp32-accumulation-order differences."""
+    full = get_config("deepseek-7b")
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    return full, cfg, params
+
+
+def _run_engine(full, cfg, params, chunk_tokens, prompts, max_new=8, **ecfg_kw):
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    kw = dict(max_slots=3, max_cache_len=96, weight_tier="mrm", kv_tier="mrm",
+              eos_token=-1, chunk_tokens=chunk_tokens)
+    kw.update(ecfg_kw)
+    eng = ServeEngine(cfg, params, mem, EngineConfig(**kw), account_cfg=full)
+    for p in prompts:
+        eng.submit(list(p), max_new)
+    rep = eng.run_until_idle()
+    return eng, rep
+
+
+def test_chunked_prefill_token_equivalence(f32_engine_setup):
+    """A long prompt split across steps produces exactly the tokens the
+    whole-prompt prefill produces."""
+    full, cfg, params = f32_engine_setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, 400, n) for n in (41, 70, 23, 55)]
+    eng_a, rep_a = _run_engine(full, cfg, params, None, prompts)
+    eng_b, rep_b = _run_engine(full, cfg, params, 16, prompts)
+    assert rep_a["finished"] == rep_b["finished"] == 4
+    assert {k: list(v) for k, v in eng_a.outputs.items()} == \
+           {k: list(v) for k, v in eng_b.outputs.items()}
+    # chunking actually happened, and interleaved with decode rounds
+    assert rep_b["prefill_chunks"] > rep_a["prefill_chunks"] == 4
+    assert rep_b["steps"] > rep_a["steps"]
+
+
+def test_chunked_prefill_admits_prompt_beyond_cache_bucketing(small_engine_setup):
+    """Prompts >> max_cache_len are admitted via chunked prefill (ring
+    caches keep the attention tail); whole-prompt prefill cannot even pad
+    such a prompt into its bucket."""
+    full, cfg, params = small_engine_setup
+    rng = np.random.default_rng(4)
+    long_prompt = rng.integers(2, 400, 210)  # max_cache_len is 96
+    eng, rep = _run_engine(full, cfg, params, 32, [long_prompt], max_new=6)
+    assert rep["finished"] == 1
+    assert rep["tokens_generated"] >= 6
+    assert rep["prefill_chunks"] >= 7
+    assert rep["kv_live_pages"] == 0
+
+
+def test_chunked_prefill_interleaves_decode(small_engine_setup):
+    """While one request's prompt is still being chunked in, resident
+    sessions keep decoding (bounded inter-token latency)."""
+    full, cfg, params = small_engine_setup
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=2, max_cache_len=96,
+                                   weight_tier="mrm", kv_tier="mrm",
+                                   eos_token=-1, chunk_tokens=16,
+                                   max_prefills_per_step=1),
+                      account_cfg=full)
+    eng.submit(list(np.arange(2, 14)), 24)     # short: decoding quickly
+    eng.submit(list(np.arange(2, 90)), 4)      # long: ~6 chunks
+    saw_interleave = False
+    while not eng.sched.idle and eng.steps < 200:
+        out = eng.step()
+        if out["prefill_tokens"] > 0 and out["decode_tokens"] > 0:
+            saw_interleave = True
+    assert saw_interleave
+    assert eng.sched.stats.finished == 2
+
+
+def test_unchunked_long_prompt_rejected_clearly(small_engine_setup):
+    """Without chunked prefill, prompts beyond the bucketing ceiling get a
+    clear submit-time error (legacy behavior was a padding crash mid-step)."""
+    full, cfg, params = small_engine_setup
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=2, max_cache_len=64,
+                                   weight_tier="mrm", kv_tier="mrm"),
+                      account_cfg=full)
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        eng.submit(list(range(2, 102)), 4)
+
+
+def test_chunked_prefill_windowed_config_clamps_chunk():
+    """Sliding-window layers have per-layer rings smaller than
+    max_cache_len; a requested chunk larger than the smallest ring must be
+    clamped (an oversized chunk would collide ring slots intra-chunk)."""
+    full = get_config("gemma2-27b")   # alternating local(64)/global reduced
+    cfg = reduced(full)
+    params = init_params(cfg, jax.random.key(0))
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=2, max_cache_len=128,
+                                   weight_tier="mrm", kv_tier="mrm",
+                                   eos_token=-1, chunk_tokens=128),
+                      account_cfg=full)
+    rng = np.random.default_rng(11)
+    for _ in range(2):
+        eng.submit(list(rng.integers(2, 400, 100)), 4)
+    rep = eng.run_until_idle()
+    assert rep["finished"] == 2
+    assert rep["tokens_generated"] >= 8
+    # the 128-token request was actually split (min ring is 64)
+    assert rep["prefill_chunks"] > 2
+
+
+# ---------------------------------------------------------------------------
+# Capacity pressure: explicit eviction/spill/recompute, never silent drops
+# ---------------------------------------------------------------------------
+
+
+def _tiny_mem(kv_bytes=1 << 26):
+    return MemorySystem({"mrm": (MRM_RRAM, kv_bytes), "hbm": (HBM3E, 16 << 30)})
+
+
+def test_pressure_prefix_lru_eviction_no_silent_drops(small_engine_setup):
+    """A capacity-constrained KV tier forces evictions; every failed
+    allocation is resolved by an explicit decision and the ledger balances."""
+    full, cfg, params = small_engine_setup
+    eng = ServeEngine(cfg, params, _tiny_mem(),
+                      EngineConfig(max_slots=3, max_cache_len=64,
+                                   weight_tier="hbm", kv_tier="mrm",
+                                   eos_token=-1,
+                                   kv_pressure_policy="evict-lru",
+                                   kv_high_watermark=0.9),
+                      account_cfg=full)
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        eng.submit(list(rng.integers(2, 400, 40)), 8)
+    rep = eng.run_until_idle()
+    p = rep["pressure"]
+    assert rep["finished"] == 10
+    assert p["events"] > 0, "tier was supposed to be capacity-constrained"
+    assert p["events"] == (p["resolved_evict"] + p["resolved_spill"] +
+                           p["resolved_recompute"] + p["unresolved"])
+    assert p["unresolved"] == 0 and rep["dropped_allocs"] == 0
+
+
+def test_pressure_spill_tier(small_engine_setup):
+    """'spill' policy migrates overflow pages to the colder tier: the spill
+    device sees KV write traffic it never sees in the uncontended run."""
+    full, cfg, params = small_engine_setup
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 26), "hbm": (HBM3E, 16 << 30),
+                        "ddr": (MRM_RRAM, 64 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=3, max_cache_len=64,
+                                   weight_tier="hbm", kv_tier="mrm",
+                                   eos_token=-1, prefix_caching=False,
+                                   kv_pressure_policy="spill",
+                                   kv_spill_tier="ddr"),
+                      account_cfg=full)
+    rng = np.random.default_rng(6)
+    for _ in range(10):
+        eng.submit(list(rng.integers(2, 400, 40)), 8)
+    rep = eng.run_until_idle()
+    p = rep["pressure"]
+    assert p["events"] > 0 and p["resolved_spill"] > 0
+    assert rep["dropped_allocs"] == 0
+    assert mem.devices["ddr"].stats.write_bytes > 0
+
+
+def test_pressure_recompute_policy_meters_recompute(small_engine_setup):
+    """'recompute' drops soft state and re-materializes it on read, metered
+    as recompute tokens (the paper's drop-and-recompute arm)."""
+    full, cfg, params = small_engine_setup
+    eng = ServeEngine(cfg, params, _tiny_mem(1 << 25),
+                      EngineConfig(max_slots=3, max_cache_len=64,
+                                   weight_tier="hbm", kv_tier="mrm",
+                                   eos_token=-1, prefix_caching=False,
+                                   kv_pressure_policy="recompute"),
+                      account_cfg=full)
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        eng.submit(list(rng.integers(2, 400, 40)), 8)
+    rep = eng.run_until_idle()
+    p = rep["pressure"]
+    assert rep["finished"] == 8
+    assert p["resolved_recompute"] > 0
+    assert p["recompute_tokens"] > 0
+    assert rep["dropped_allocs"] == 0
+
+
+def test_kv_manager_legacy_none_policy_counts_drops():
+    cfg = get_config("qwen3-8b")
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 22), "hbm": (HBM3E, 1 << 30)})
+    kv = PagedKVManager(cfg, mem, "mrm", page_tokens=64, policy="none")
+    kv.open_session(0)
+    kv.append_tokens(0, 64 * 50)
+    assert kv.dropped_allocs > 0  # legacy silent counting is opt-in only
+    assert kv.pressure.unresolved == kv.dropped_allocs
+
+
+# ---------------------------------------------------------------------------
+# Cluster frontend: N replicas, affinity routing, conserving fleet report
+# ---------------------------------------------------------------------------
+
+
+def _mk_engine(full, cfg, params, **kw):
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    ecfg = dict(max_slots=2, max_cache_len=64, weight_tier="mrm",
+                kv_tier="mrm", eos_token=-1, page_tokens=16)
+    ecfg.update(kw)
+    return ServeEngine(cfg, params, mem, EngineConfig(**ecfg), account_cfg=full)
+
+
+def test_cluster_frontend_conserves_tokens_and_bytes(small_engine_setup):
+    full, cfg, params = small_engine_setup
+    fe = ClusterFrontend([_mk_engine(full, cfg, params) for _ in range(3)])
+    rng = np.random.default_rng(8)
+    n = 9
+    for i in range(n):
+        fe.submit(list(rng.integers(2, 400, 12)), 5)
+    rep = fe.run_until_idle()
+    assert rep["replicas"] == 3
+    assert rep["finished"] == n
+    assert rep["tokens_generated"] == n * 5
+    # conservation: fleet aggregates == sum of replica reports
+    assert rep["tokens_generated"] == sum(
+        r["tokens_generated"] for r in rep["per_replica"])
+    for tier in ("mrm", "hbm"):
+        assert rep["tiers"][tier]["read_gb"] == pytest.approx(sum(
+            r["memory"]["tiers"][tier]["read_gb"] for r in rep["per_replica"]))
+        assert rep["tiers"][tier]["write_gb"] == pytest.approx(sum(
+            r["memory"]["tiers"][tier]["write_gb"] for r in rep["per_replica"]))
+    # shared simulated clock: all replicas ended at the fleet time
+    assert all(abs(e.mem.now - rep["sim_time_s"]) < 1e-9 for e in fe.engines)
+    # least-loaded routing spread work across every replica
+    assert all(r["tokens_generated"] > 0 for r in rep["per_replica"])
+
+
+def test_cluster_session_affinity_routes_sticky(small_engine_setup):
+    full, cfg, params = small_engine_setup
+    fe = ClusterFrontend([_mk_engine(full, cfg, params) for _ in range(3)])
+    rng = np.random.default_rng(9)
+    prompt = list(rng.integers(2, 400, 16))
+    rids = {k: [fe.submit(list(prompt), 4, session_key=k) for _ in range(3)]
+            for k in ("alice", "bob")}
+    fe.run_until_idle()
+    for k, ids in rids.items():
+        assert len({fe.replica_of(r) for r in ids}) == 1
+    # affinity means the repeated prompt hit the same replica's prefix index
+    assert sum(e.kv.prefix_hits for e in fe.engines) >= 4
+
+
+# ---------------------------------------------------------------------------
+# Per-tier step-latency model + O(1) region lookup
+# ---------------------------------------------------------------------------
+
+
+def test_step_latency_is_per_tier():
+    """Traffic on a slow tier must not be charged at the fast tier's
+    bandwidth: the slowest tier bounds the step."""
+    from repro.core.memclass import get_technology
+    mrm = get_technology("mrm_rram")
+    mem = MemorySystem({"mrm": (mrm, 16 << 30), "hbm": (HBM3E, 16 << 30)})
+    snap = mem.snapshot()
+    rid = mem.write_region("mrm", "x", 6e9, expected_lifetime_s=10.0)
+    step_s, per_tier = mem.step_latency_since(snap)
+    expect = 6e9 / (mrm.write_bw_gbps * 1e9)
+    assert step_s == pytest.approx(expect, rel=1e-6)
+    assert per_tier["mrm"]["write_bytes"] == pytest.approx(6e9)
+    assert per_tier["hbm"]["latency_s"] == 0.0
+    # reads charged at read bandwidth, on the region's own tier, O(1) lookup
+    snap = mem.snapshot()
+    mem.read_region(rid, 8e9)
+    step_s, per_tier = mem.step_latency_since(snap)
+    assert step_s == pytest.approx(8e9 / (mrm.read_bw_gbps * 1e9), rel=1e-6)
+    assert mem.region(rid).tier == "mrm"
 
 
 def test_engine_vlm_frontend_stub():

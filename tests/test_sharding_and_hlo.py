@@ -2,7 +2,7 @@
 AbstractMesh) and the trip-count-aware HLO analyzer."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 from jax.sharding import AbstractMesh, PartitionSpec as P
@@ -11,8 +11,15 @@ from repro.launch.hlo_analysis import (analyze, exec_counts, parse_module,
                                        roofline_terms, shape_bytes, shape_dims)
 from repro.runtime.sharding import DEFAULT_RULES, mesh_axis_size, spec_for
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh(sizes, names)
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_spec_for_basic():
@@ -134,5 +141,8 @@ def test_analyzer_matches_xla_on_loop_free_graph():
     b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
     compiled = jax.jit(f).lower(a, b).compile()
     ana = analyze(compiled.as_text(), 1)
-    xla = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [dict]
+        ca = ca[0]
+    xla = ca["flops"]
     assert ana["dot_flops"] == pytest.approx(xla, rel=0.01)
