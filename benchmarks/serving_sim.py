@@ -7,6 +7,11 @@
    chunked prefill — every failed KV allocation must be resolved by an
    explicit eviction/spill/recompute decision (zero silent drops), and the
    fleet report aggregates tokens/bytes across replicas.
+3. Prefix-reuse sweep: shared-prefix traffic (multi-turn chat, shared
+   system prompts, RAG fan-out) with the radix prefix tree on vs off —
+   reuse must cut prefill tokens computed and KV-tier write bytes by
+   >= 30% at equal (identical) output tokens, and the hit rate / tokens
+   reused / TTFT land in the JSON trajectory.
 """
 from __future__ import annotations
 
@@ -14,6 +19,97 @@ import time
 
 import jax
 import numpy as np
+
+
+def prefix_workloads(rng, vocab: int, n_users: int = 3, turns: int = 2,
+                     fanout: int = 4) -> list:
+    """Shared-prefix traffic at three granularities. Returns
+    ``[(prompt_tokens, max_new, session_key), ...]``:
+
+    - **shared system prompt** — one 48-token head, distinct 16-token asks;
+    - **multi-turn chat** — each user's context grows turn over turn (the
+      next prompt extends the previous one, radix-matchable because the
+      serving path keeps prompts unpadded / position-aligned);
+    - **RAG fan-out** — one 64-token document, `fanout` question variants.
+    """
+    reqs = []
+    system = list(rng.integers(2, vocab, 48))
+    for i in range(5):
+        reqs.append((system + list(rng.integers(2, vocab, 16)), 6, f"sys-{i}"))
+    for u in range(n_users):
+        hist = list(rng.integers(2, vocab, 24))
+        for _ in range(turns):
+            reqs.append((list(hist), 6, f"chat-{u}"))
+            hist = hist + list(rng.integers(2, vocab, 12))  # model reply etc.
+    doc = list(rng.integers(2, vocab, 64))
+    for q in range(fanout):
+        reqs.append((doc + list(rng.integers(2, vocab, 12)), 6, f"rag-{q}"))
+    return reqs
+
+
+def prefix_reuse(arch="deepseek-7b") -> dict:
+    """Radix prefix reuse on shared-prefix traffic vs prefix_caching=False:
+    identical decoded tokens, >= 30% fewer prefill tokens computed and
+    >= 30% fewer KV-tier write bytes (the acceptance bar)."""
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServeEngine
+
+    full = get_config(arch)
+    # fp32 keeps extend-from-the-match-boundary greedy argmax bit-equal to
+    # the cold prefill (bf16 amplifies accumulation-order differences)
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    reqs = prefix_workloads(np.random.default_rng(0), cfg.vocab_size)
+
+    def run_one(prefix_caching: bool):
+        mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40),
+                            "hbm": (HBM3E, 1 << 37)})
+        eng = ServeEngine(cfg, params, mem,
+                          EngineConfig(max_slots=2, max_cache_len=96,
+                                       weight_tier="hbm", kv_tier="mrm",
+                                       eos_token=-1, chunk_tokens=16,
+                                       page_tokens=16,
+                                       prefix_caching=prefix_caching,
+                                       radix_hot_threshold=2),
+                          account_cfg=full)
+        for prompt, max_new, _key in reqs:
+            eng.submit(list(prompt), max_new)
+        rep = eng.run_until_idle()
+        return eng, rep
+
+    eng_on, on = run_one(True)
+    eng_off, off = run_one(False)
+    assert on["tokens_generated"] == off["tokens_generated"]
+    outs_on = {k: list(v) for k, v in eng_on.outputs.items()}
+    outs_off = {k: list(v) for k, v in eng_off.outputs.items()}
+    assert outs_on == outs_off, "prefix reuse changed decoded tokens"
+    kv_w_on = on["memory"]["tiers"]["mrm"]["write_gb"]
+    kv_w_off = off["memory"]["tiers"]["mrm"]["write_gb"]
+    prefill_cut = 1 - on["prefill_tokens_computed"] / off["prefill_tokens_computed"]
+    kv_write_cut = 1 - kv_w_on / kv_w_off
+    assert prefill_cut >= 0.30, f"prefill cut {prefill_cut:.2%} < 30%"
+    assert kv_write_cut >= 0.30, f"KV write cut {kv_write_cut:.2%} < 30%"
+    return {
+        "requests": len(reqs),
+        "prefix_hits": on["prefix_hits"],
+        "prefix_hit_rate": on["prefix_hits"] / len(reqs),
+        "tokens_reused": on["prefix_tokens_reused"],
+        "tokens_skipped_compute": on["prefill_tokens_skipped"],
+        "prefill_tokens_computed": on["prefill_tokens_computed"],
+        "prefill_tokens_cold": off["prefill_tokens_computed"],
+        "prefill_cut": prefill_cut,
+        "kv_write_gb": kv_w_on,
+        "kv_write_gb_cold": kv_w_off,
+        "kv_write_cut": kv_write_cut,
+        "retention_promotions": on["prefix"]["retention_promotions"],
+        "ttft_p50_s": on["latency"]["ttft_p50"],
+        "ttft_p95_s": on["latency"]["ttft_p95"],
+        "ttft_p50_cold_s": off["latency"]["ttft_p50"],
+        "itl_p50_s": on["latency"]["itl_p50"],
+    }
 
 
 def compute(arch="deepseek-7b") -> dict:
@@ -104,6 +200,10 @@ def cluster_sweep(arch="deepseek-7b", replica_counts=(1, 2),
             "prefix_evictions": p["prefix_evictions"],
             "recompute_tokens": p["recompute_tokens"],
             "dropped_allocs": rep["dropped_allocs"],
+            "prefix_hits": rep["prefix_hits"],
+            "prefix_tokens_reused": rep["prefix_tokens_reused"],
+            "radix_routed": rep["radix_routed"],
+            "ttft_p50_s": rep["latency"]["ttft_p50"],
         }
     return out
 
@@ -125,6 +225,16 @@ def run(csv=True):
             print(f"serving_sim/{k}_fleet_tokens_per_s,{dt:.1f},{v['fleet_tokens_per_s']:.4f}")
             print(f"serving_sim/{k}_pressure_events,{dt:.1f},{v['pressure_events']}")
             print(f"serving_sim/{k}_dropped_allocs,{dt:.1f},{v['dropped_allocs']}")
+    t0 = time.perf_counter()
+    reuse = prefix_reuse()
+    dt = (time.perf_counter() - t0) * 1e6
+    out["prefix_reuse"] = reuse
+    if csv:
+        print(f"serving_sim/prefix_hit_rate,{dt:.1f},{reuse['prefix_hit_rate']:.4f}")
+        print(f"serving_sim/prefix_tokens_reused,{dt:.1f},{reuse['tokens_reused']}")
+        print(f"serving_sim/prefix_prefill_cut,{dt:.1f},{reuse['prefill_cut']:.4f}")
+        print(f"serving_sim/prefix_kv_write_cut,{dt:.1f},{reuse['kv_write_cut']:.4f}")
+        print(f"serving_sim/prefix_ttft_p50_s,{dt:.1f},{reuse['ttft_p50_s']:.6f}")
     return out
 
 

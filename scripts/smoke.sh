@@ -17,6 +17,11 @@ rep = json.load(open("/tmp/smoke_serving.json"))
 assert not rep["failures"], rep["failures"]
 fleet = rep["suites"]["serving"]["replicas_2"]
 assert fleet["dropped_allocs"] == 0, fleet
+reuse = rep["suites"]["serving"]["prefix_reuse"]
+assert reuse["prefill_cut"] >= 0.30, reuse
+assert reuse["kv_write_cut"] >= 0.30, reuse
 print("smoke OK:", {k: fleet[k] for k in ("finished", "tokens_generated",
                                           "pressure_events", "dropped_allocs")})
+print("prefix reuse:", {k: round(reuse[k], 4) for k in
+                        ("prefix_hit_rate", "prefill_cut", "kv_write_cut")})
 EOF

@@ -1,12 +1,14 @@
 """Serving driver: a reduced model computes real tokens while the MRM
 control plane meters the deployment-size memory system. With --replicas N
 a :class:`ClusterFrontend` fans requests across N engine replicas
-(session-affinity routing, shared simulated clock, aggregated fleet
-report).
+(radix-prefix-affinity routing, shared simulated clock, aggregated fleet
+report). --shared-prefix-tokens K makes the generated traffic share a
+K-token prompt head, exercising radix prefix reuse end to end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
       --requests 8 --max-new 16 --kv-tier mrm_rram --weight-tier mrm_rram \
-      --replicas 2 --chunk-tokens 32 --kv-policy evict-lru
+      --replicas 2 --chunk-tokens 32 --kv-policy evict-lru \
+      --shared-prefix-tokens 32 --radix-hot-tier auto
 """
 from __future__ import annotations
 
@@ -33,10 +35,15 @@ def build_engine(args, cfg, full, params):
         cfg, params, mem,
         EngineConfig(max_slots=args.slots, max_cache_len=128,
                      weight_tier=args.weight_tier, kv_tier=args.kv_tier,
+                     page_tokens=args.page_tokens,
                      expected_session_s=args.session_s,
                      chunk_tokens=args.chunk_tokens,
                      kv_pressure_policy=args.kv_policy,
-                     kv_spill_tier=args.spill_tier),
+                     kv_spill_tier=args.spill_tier,
+                     prefix_caching=not args.no_prefix_caching,
+                     radix_hot_threshold=args.radix_hot_threshold,
+                     radix_hot_tier=args.radix_hot_tier,
+                     radix_cold_ttl_s=args.radix_cold_ttl),
         account_cfg=full)
 
 
@@ -61,6 +68,19 @@ def main(argv=None):
                     help="colder tier for the 'spill' pressure policy")
     ap.add_argument("--sessions", type=int, default=3,
                     help="distinct session keys for affinity routing")
+    ap.add_argument("--page-tokens", type=int, default=32,
+                    help="KV page size in tokens (radix match granularity)")
+    ap.add_argument("--no-prefix-caching", action="store_true",
+                    help="disable the radix prefix tree (cold baseline)")
+    ap.add_argument("--shared-prefix-tokens", type=int, default=0,
+                    help="generated prompts share a head of this many "
+                         "tokens (shared system prompt traffic)")
+    ap.add_argument("--radix-hot-threshold", type=int, default=4,
+                    help="reuse count promoting a prefix to long retention")
+    ap.add_argument("--radix-hot-tier", default=None,
+                    help="tier for hot prefixes ('auto' = placement solve)")
+    ap.add_argument("--radix-cold-ttl", type=float, default=None,
+                    help="idle seconds before a cold prefix leaf decays")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced
@@ -75,12 +95,21 @@ def main(argv=None):
                for _ in range(max(args.replicas, 1))]
     rng = np.random.default_rng(args.seed)
 
+    if cfg.n_codebooks > 1:
+        shared_head = [list(rng.integers(0, cfg.vocab_size, cfg.n_codebooks))
+                       for _ in range(args.shared_prefix_tokens)]
+    else:
+        shared_head = list(rng.integers(2, cfg.vocab_size,
+                                        args.shared_prefix_tokens))
+
     def gen_prompt():
-        prompt = list(rng.integers(2, cfg.vocab_size, rng.integers(8, 48)))
+        n = rng.integers(8, 48)
         if cfg.n_codebooks > 1:
-            prompt = [list(rng.integers(0, cfg.vocab_size, cfg.n_codebooks))
-                      for _ in range(len(prompt))]
-        return prompt
+            tail = [list(rng.integers(0, cfg.vocab_size, cfg.n_codebooks))
+                    for _ in range(n)]
+        else:
+            tail = list(rng.integers(2, cfg.vocab_size, n))
+        return shared_head + tail
 
     if len(engines) == 1:
         eng = engines[0]

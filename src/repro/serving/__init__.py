@@ -1,11 +1,14 @@
 from repro.serving.cluster import ClusterFrontend
 from repro.serving.engine import (ComputeBackend, EngineConfig, MemoryPlane,
                                   PrefillChunk, ServeEngine, StepPlan,
-                                  StepReport)
-from repro.serving.kv_cache import PagedKVManager, PressureStats
+                                  StepReport, choose_hot_tier,
+                                  latency_percentiles)
+from repro.serving.kv_cache import PagedKVManager, PressureStats, RadixStats
+from repro.serving.radix import PrefixMatch, RadixKVIndex, RadixNode
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 __all__ = ["EngineConfig", "ServeEngine", "ComputeBackend", "MemoryPlane",
            "StepPlan", "StepReport", "PrefillChunk", "PagedKVManager",
-           "PressureStats", "ContinuousBatchScheduler", "Request",
-           "ClusterFrontend"]
+           "PressureStats", "RadixStats", "ContinuousBatchScheduler",
+           "Request", "ClusterFrontend", "RadixKVIndex", "RadixNode",
+           "PrefixMatch", "choose_hot_tier", "latency_percentiles"]

@@ -5,25 +5,34 @@ own MRM stack, serving a shared request population (§2.2 "millions of
 users"). :class:`ClusterFrontend` fans requests across N
 :class:`~repro.serving.engine.ServeEngine` replicas:
 
-- **session-affinity routing** — requests carrying a ``session_key`` hash
-  to a sticky replica, so a user's repeated prompts hit the same replica's
-  prefix index (shared-prefix KV reuse is per-replica state);
-- **least-loaded routing** — keyless requests go to the replica with the
-  fewest queued+resident requests;
+- **radix-affinity routing** — a request is routed to the replica whose
+  radix prefix tree already holds the longest page-aligned prefix of its
+  prompt (so the hit is real: shared pages attach, prefill compute is
+  skipped). This replaces whole-key sha1 hashing — a prompt that shares a
+  system prompt or conversation history finds the replica that served it,
+  whatever its session key;
+- **session-affinity fallback** — requests carrying a ``session_key`` with
+  no radix match anywhere go to their sticky replica (first pick recorded),
+  so a user's *first* follow-up still lands where their prefix will be;
+- **least-loaded routing** — keyless, matchless requests go to the replica
+  with the fewest queued+resident requests; ties break on KV capacity
+  pressure (live KV bytes vs the KV tier's capacity), so a replica with a
+  saturated KV tier no longer wins ties on queue length alone;
 - **shared simulated clock** — replicas execute a step in parallel; a
   cluster round lasts as long as the slowest replica, and lagging replicas
   advance to the fleet clock (servicing their refresh deadlines while
   "waiting");
-- **aggregated fleet report** — tokens, per-tier bytes, energy and
-  capacity-pressure resolutions summed across replicas, with the
-  per-replica breakdown attached (conservation is testable).
+- **aggregated fleet report** — tokens, per-tier bytes, energy,
+  capacity-pressure resolutions, prefix-reuse counters and pooled TTFT/ITL
+  percentiles summed across replicas, with the per-replica breakdown
+  attached (conservation is testable).
 """
 from __future__ import annotations
 
 import hashlib
 from typing import Dict, List, Optional, Tuple
 
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ServeEngine, latency_percentiles
 
 
 class ClusterFrontend:
@@ -35,6 +44,7 @@ class ClusterFrontend:
         self.requests: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, local)
         self._next_rid = 0
         self.steps = 0
+        self.radix_routed = 0      # requests placed by prefix affinity
 
     # ------------------------------------------------------------------
     @property
@@ -45,21 +55,45 @@ class ClusterFrontend:
     def idle(self) -> bool:
         return all(e.sched.idle for e in self.engines)
 
-    def route(self, session_key: Optional[str] = None) -> int:
+    def _load_key(self, i: int) -> tuple:
+        """Replica load for routing: queue+resident first, then KV capacity
+        pressure (live KV bytes vs the KV tier's capacity) so a saturated
+        KV tier loses ties, then index for determinism."""
+        e = self.engines[i]
+        load = len(e.sched.queue) + len(e.sched.active)
+        cap = e.mem.devices[e.ecfg.kv_tier].capacity
+        kv_pressure = e.kv.live_kv_bytes() / max(cap, 1.0)
+        return (load, round(kv_pressure, 9), i)
+
+    def route(self, session_key: Optional[str] = None,
+              prompt_tokens: Optional[list] = None) -> int:
+        # 1) radix-match-length affinity: the replica already holding the
+        #    longest prefix of this prompt wins (load breaks ties)
+        if prompt_tokens is not None:
+            matches = [e.prefix_match_len(prompt_tokens) for e in self.engines]
+            best = max(matches)
+            if best > 0:
+                i = min((i for i, m in enumerate(matches) if m == best),
+                        key=self._load_key)
+                self.radix_routed += 1
+                if session_key is not None:
+                    self.routes[str(session_key)] = i
+                return i
+        # 2) sticky session fallback (the user's first follow-up lands
+        #    where their prefix will be, before the tree has seen it)
         if session_key is not None:
             key = str(session_key)
             if key not in self.routes:
                 h = int(hashlib.sha1(key.encode()).hexdigest(), 16)
                 self.routes[key] = h % len(self.engines)
             return self.routes[key]
-        return min(range(len(self.engines)),
-                   key=lambda i: (len(self.engines[i].sched.queue) +
-                                  len(self.engines[i].sched.active), i))
+        # 3) least-loaded (KV-pressure-aware)
+        return min(range(len(self.engines)), key=self._load_key)
 
     def submit(self, prompt_tokens: list, max_new_tokens: int,
                session_key: Optional[str] = None) -> int:
         """Route and enqueue a request; returns a cluster-wide request id."""
-        replica = self.route(session_key)
+        replica = self.route(session_key, prompt_tokens)
         local = self.engines[replica].submit(prompt_tokens, max_new_tokens)
         rid = self._next_rid
         self._next_rid += 1
@@ -110,6 +144,7 @@ class ClusterFrontend:
         for r in reps:
             for k, v in r["pressure"].items():
                 pressure[k] = pressure.get(k, 0) + v
+        records = [rec for e in self.engines for rec in e.sched.latency]
         return {
             "replicas": len(self.engines),
             "cluster_steps": self.steps,
@@ -122,5 +157,12 @@ class ClusterFrontend:
             "pressure": pressure,
             "dropped_allocs": sum(r["dropped_allocs"] for r in reps),
             "prefix_hits": sum(r["prefix_hits"] for r in reps),
+            "prefix_tokens_reused": sum(r["prefix_tokens_reused"] for r in reps),
+            "prefill_tokens_computed": sum(r["prefill_tokens_computed"]
+                                           for r in reps),
+            "prefill_tokens_skipped": sum(r["prefill_tokens_skipped"]
+                                          for r in reps),
+            "radix_routed": self.radix_routed,
+            "latency": latency_percentiles(records),
             "per_replica": reps,
         }

@@ -14,6 +14,17 @@ explicit :class:`StepPlan` / :class:`StepReport` interface:
   eviction/spill/recompute policy); refresh/migrate/drop deadlines are
   serviced as simulation time advances.
 
+Prefix reuse is *real* in both planes (DESIGN.md §6): at admission the
+prompt is matched against the radix prefix tree; on a hit the matched
+page-aligned tokens are attached in the memory plane (no KV writes) AND
+skipped in the compute plane — the slot's ring caches are seeded from the
+donor's published cache snapshot and prefill continues via ``extend`` from
+the match boundary. A hit therefore cuts prefill chunks, metered KV
+writes, and step latency together. With ``prefix_caching`` enabled prompts
+are *unpadded* so token ``i`` sits at position ``prefix_len + i`` for every
+request — shared prefixes are position-aligned across prompt lengths
+(multi-turn chat, shared system prompts, RAG fan-out all match).
+
 Chunked prefill: prompts longer than ``chunk_tokens`` are fed to the model
 in pieces interleaved with decode rounds, bounding inter-token latency for
 resident sessions and admitting prompts beyond the bucketing ceiling
@@ -27,7 +38,6 @@ of merit.
 """
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -39,6 +49,7 @@ from repro.configs.base import ModelConfig
 from repro.core.simulator import MemorySystem
 from repro.models import transformer as tfm
 from repro.serving.kv_cache import PagedKVManager
+from repro.serving.radix import PrefixMatch
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 
@@ -53,7 +64,10 @@ class EngineConfig:
     expected_session_s: float = 600.0
     eos_token: int = 1
     greedy: bool = True
-    prefix_caching: bool = True  # share page-aligned prompt prefixes [53]
+    # radix prefix reuse [53]: match page-aligned prompt prefixes, share
+    # their KV pages, and skip their prefill compute (prompts run unpadded
+    # so prefixes stay position-aligned across lengths)
+    prefix_caching: bool = True
     # chunked prefill: feed prompts in `chunk_tokens` pieces interleaved
     # with decode rounds (None = whole-prompt prefill, the legacy path)
     chunk_tokens: Optional[int] = None
@@ -62,6 +76,15 @@ class EngineConfig:
     kv_pressure_policy: str = "evict-lru"
     kv_spill_tier: Optional[str] = None
     kv_high_watermark: Optional[float] = 0.92
+    # reuse -> retention programming (paper §4): a radix node reused
+    # `radix_hot_threshold` times is promoted to `radix_hot_retention_s`
+    # DCM retention, placed in `radix_hot_tier` when set ("auto" lets
+    # core.tiering.solve_placement pick it); unlocked leaves idle past
+    # `radix_cold_ttl_s` decay (spill when a spill tier exists, else drop)
+    radix_hot_threshold: int = 4
+    radix_hot_retention_s: float = 3600.0
+    radix_hot_tier: Optional[str] = None
+    radix_cold_ttl_s: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -71,7 +94,7 @@ class EngineConfig:
 
 @dataclass
 class PrefillChunk:
-    """One piece of a (padded) prompt scheduled for this step."""
+    """One piece of a prompt scheduled for this step."""
     slot: int
     request_id: int
     tokens: np.ndarray
@@ -105,13 +128,15 @@ class StepReport:
 
 @dataclass
 class _SlotPrefill:
-    """Continuation state of a chunked prefill (prefix-indices style: how
-    far into the padded prompt the slot's caches already reach)."""
+    """Continuation state of a (possibly radix-shortened) chunked prefill:
+    how far into the prompt the slot's caches already reach — a prefix hit
+    starts `done` at the match boundary instead of 0."""
     req: Request
-    padded: np.ndarray
+    padded: np.ndarray            # prompt tokens (padded only when bucketed)
     chunk: int
-    prefix_key: Optional[str]
-    done: int = 0   # tokens of `padded` already prefilled
+    key: Optional[np.ndarray]     # radix key: prefix_len sentinels + tokens
+    match: Optional[PrefixMatch]
+    done: int = 0   # tokens of `padded` already in the slot's caches
 
     def next_chunk(self, slot: int, prefix_len: int) -> PrefillChunk:
         end = min(self.done + self.chunk, len(self.padded))
@@ -185,6 +210,18 @@ class ComputeBackend:
         """View decode-slot `slot` as a B=1 cache tree (for extend)."""
         return jax.tree.map(lambda a: a[:, slot:slot + 1], self.caches)
 
+    def snapshot_slot(self, slot: int):
+        """Immutable B=1 snapshot of a slot's ring caches (jax arrays are
+        immutable, so the sliced tree is a stable donor handle)."""
+        return self._extract_slot(slot)
+
+    def seed_slot(self, slot: int, snapshot) -> None:
+        """Seed a slot's ring caches from a donor snapshot (prefix hit).
+        Donor entries beyond the matched prefix are harmless: masking is
+        position-based (`cache_pos <= cur`), so stale positions stay masked
+        until this request overwrites them via extend/decode."""
+        self._insert_slot(slot, snapshot)
+
     def prefix_len(self) -> int:
         return self.cfg.n_meta_tokens + (self.cfg.n_frontend_tokens
                                          if self.cfg.frontend == "vision" else 0)
@@ -242,6 +279,35 @@ class ComputeBackend:
 # ---------------------------------------------------------------------------
 
 
+def choose_hot_tier(mem: MemorySystem, cfg: ModelConfig,
+                    ecfg: EngineConfig) -> Optional[str]:
+    """Pick the tier hot (frequently reused) prefix KV should live in, via
+    the paper-§4 placement solver: a read-heavy, rarely-rewritten,
+    long-lived data class over the engine's actual tiers. Returns a tier
+    *name*, or None when the solve is infeasible. solve_placement speaks
+    technology names, so each tier's tech is aliased to its tier name —
+    two tiers sharing one technology stay distinguishable."""
+    import dataclasses
+
+    from repro.core.memclass import YEAR
+    from repro.core.tiering import DataClassProfile, Tier, solve_placement
+
+    tiers = [Tier(tech=dataclasses.replace(d.tech, name=name),
+                  capacity_bytes=d.capacity)
+             for name, d in mem.devices.items()]
+    size = 0.25 * mem.devices[ecfg.kv_tier].capacity
+    hot = DataClassProfile(
+        name="kv_prefix_hot", size_bytes=size,
+        read_bw_bytes_s=size,                        # reread ~once per second
+        write_bw_bytes_s=size / ecfg.radix_hot_retention_s,  # rewritten per retention
+        lifetime_s=ecfg.radix_hot_retention_s, soft_state=True)
+    res = solve_placement([hot], tiers, device_life_s=5 * YEAR)
+    if not res.feasible:
+        return None
+    name = res.assignment["kv_prefix_hot"]
+    return name if name in mem.devices else None
+
+
 class MemoryPlane:
     """Weight regions + paged KV + per-tier step metering. All placement,
     retention and pressure decisions live here; the accounting scale
@@ -252,11 +318,22 @@ class MemoryPlane:
         self.cfg = acct_cfg
         self.mem = mem
         self.ecfg = ecfg
+        hot_tier = ecfg.radix_hot_tier
+        if hot_tier == "auto":
+            hot_tier = choose_hot_tier(mem, acct_cfg, ecfg)
+        elif hot_tier is not None and hot_tier not in mem.devices:
+            raise ValueError(f"radix_hot_tier {hot_tier!r} is not a tier "
+                             f"({sorted(mem.devices)})")
+        self.hot_tier = hot_tier
         self.kv = PagedKVManager(acct_cfg, mem, ecfg.kv_tier,
                                  ecfg.page_tokens, ecfg.expected_session_s,
                                  spill_tier=ecfg.kv_spill_tier,
                                  policy=ecfg.kv_pressure_policy,
-                                 high_watermark=ecfg.kv_high_watermark)
+                                 high_watermark=ecfg.kv_high_watermark,
+                                 hot_threshold=ecfg.radix_hot_threshold,
+                                 hot_retention_s=ecfg.radix_hot_retention_s,
+                                 hot_tier=hot_tier,
+                                 cold_ttl_s=ecfg.radix_cold_ttl_s)
         counts = acct_cfg.param_counts()
         self.weight_bytes = counts["total"] * 2  # bf16
         self.active_weight_bytes = counts["active"] * 2
@@ -321,9 +398,13 @@ class ServeEngine:
         self.memplane = MemoryPlane(self.acct_cfg, mem, ecfg)
         self.outputs: Dict[int, list] = {}
         self._inflight: Dict[int, _SlotPrefill] = {}  # slot -> chunk state
+        self._prep_cache: Dict[int, tuple] = {}  # rid -> (padded, chunk, key)
         self.tokens_generated = 0
         self.steps = 0
         self.prefill_chunks_run = 0
+        self.prefill_tokens_computed = 0   # tokens that ran through the model
+        self.prefill_tokens_skipped = 0    # tokens a radix hit skipped
+        self.prefix_compute_hits = 0       # admissions seeded from a donor
 
     # -- legacy surface (kept stable for callers/tests) ----------------
     @property
@@ -379,44 +460,98 @@ class ServeEngine:
         return min(cache_len_for(spec.window, self.ecfg.max_cache_len)
                    for spec in self.cfg.layer_specs())
 
-    def _admit(self, slot: int, req: Request) -> _SlotPrefill:
+    def _pad_plan(self, toks: np.ndarray) -> tuple:
+        """(padded_tokens, chunk) for a prompt. Chunked prefill and the
+        prefix-caching path run *unpadded* — token i sits at position
+        prefix_len + i for every request, so shared prefixes are
+        position-aligned and radix-matchable across prompt lengths (the
+        tail chunk compiles per distinct length; acceptable for the sim).
+        Only whole-prompt prefill without prefix caching keeps the legacy
+        bucketed left-pad that bounds the jit compile count."""
         ecfg = self.ecfg
-        toks = np.asarray(req.prompt_tokens, np.int32)
         L = toks.shape[0]
+        min_ring = self._min_ring_len()
         if ecfg.chunk_tokens is None:
-            # legacy whole-prompt prefill (submit() already rejected
-            # prompts beyond the bucketing ceiling)
-            pad = self.backend.bucket(L) - L
+            pad = 0 if ecfg.prefix_caching else self.backend.bucket(L) - L
             chunk = L + pad
         else:
             # a chunk larger than the smallest per-layer ring would collide
             # intra-chunk ring slots (duplicate scatter indices), so clamp;
             # and once the prompt overflows the ring, halve the chunk so
             # each extend still sees the previous chunks' tail
-            min_ring = self._min_ring_len()
+            pad = 0
             chunk = min(ecfg.chunk_tokens, min_ring)
-            if L <= ecfg.max_cache_len:
-                pad = self.backend.bucket(L) - L
-            else:
+            if L + self.backend.prefix_len() > min_ring:
                 chunk = min(chunk, max(16, min_ring // 2))
-                pad = -L % chunk
-            if L + pad + self.backend.prefix_len() > min_ring:
-                chunk = min(chunk, max(16, min_ring // 2))
-        # left-pad with token 0: padded keys are masked only by causality,
-        # acceptable for the functional demo; real serving uses bucketed
-        # compilation exactly like this but with an attention prefix mask.
         padded = np.pad(toks, [(pad, 0)] + [(0, 0)] * (toks.ndim - 1))
-        pkey = None
+        return padded, min(chunk, padded.shape[0])
+
+    def _radix_key(self, padded: np.ndarray) -> np.ndarray:
+        """Radix tokens in *position space*: the meta/frontend prefix is a
+        run of sentinel tokens shared by every request on this engine, so
+        page boundaries in the tree line up with KV page boundaries."""
+        plen = self.backend.prefix_len()
+        if plen == 0:
+            return padded
+        sent = np.full((plen,) + padded.shape[1:], -1, padded.dtype)
+        return np.concatenate([sent, padded], axis=0)
+
+    def _prep(self, req: Request) -> tuple:
+        """(padded, chunk, radix_key) for a request, memoized while it sits
+        in the queue (prefix-aware admission rescoring would otherwise
+        rebuild the arrays per scheduling round)."""
+        ent = self._prep_cache.get(req.request_id)
+        if ent is None:
+            toks = np.asarray(req.prompt_tokens, np.int32)
+            padded, chunk = self._pad_plan(toks)
+            key = self._radix_key(padded) if self.ecfg.prefix_caching else None
+            ent = (padded, chunk, key)
+            self._prep_cache[req.request_id] = ent
+        return ent
+
+    def prefix_match_len(self, prompt_tokens: list) -> int:
+        """Longest radix-matchable prefix (in position-space tokens) this
+        engine holds for `prompt_tokens` — side-effect-free; the cluster
+        router and prefix-aware scheduler score with this."""
+        if not self.ecfg.prefix_caching:
+            return 0
+        toks = np.asarray(prompt_tokens, np.int32)
+        padded, _ = self._pad_plan(toks)
+        return self.kv.match_len(self._radix_key(padded))
+
+    def _compute_reuse(self, match: PrefixMatch, padded: np.ndarray) -> int:
+        """Tokens of `padded` the compute plane may skip: requires a donor
+        snapshot, an extend-capable stack, and a match covering the whole
+        meta/frontend region (extend cannot restart mid-meta). At least
+        one token always runs — the last position's logits seed the first
+        sampled token. (Compute reuse needs no page alignment: the donor
+        snapshot covers every matched position.)"""
+        if match.payload is None or not tfm.supports_extend(self.cfg):
+            return 0
+        reuse = match.tokens - self.backend.prefix_len()
+        return max(0, min(reuse, padded.shape[0] - 1))
+
+    def _admit(self, slot: int, req: Request) -> _SlotPrefill:
+        ecfg = self.ecfg
+        padded, chunk, key = self._prep(req)
+        self._prep_cache.pop(req.request_id, None)
+        match = None
+        reuse = 0
         if ecfg.prefix_caching:
-            # content digest, not hash(): stable across processes
-            # (PYTHONHASHSEED) and collision-resistant
-            digest = hashlib.sha1(padded.tobytes()).hexdigest()
-            pkey = f"p:{padded.shape[0]}:{digest}"
-        # the KV session opens when the first chunk *executes* (not at
-        # planning), so a prefix registered earlier in the same step is
-        # visible to later admissions
-        st = _SlotPrefill(req=req, padded=padded,
-                          chunk=min(chunk, padded.shape[0]), prefix_key=pkey)
+            match = self.kv.match_prefix(key)
+            reuse = self._compute_reuse(match, padded)
+        st = _SlotPrefill(req=req, padded=padded, chunk=chunk,
+                          key=key, match=match, done=reuse)
+        if reuse:
+            # the hit is real in the compute plane: seed the slot's ring
+            # caches from the donor snapshot and extend from the boundary
+            self.backend.seed_slot(slot, match.payload)
+            self.prefix_compute_hits += 1
+            self.prefill_tokens_skipped += reuse
+            req.prompt_pos = min(reuse, req.prompt_len)
+        # open (and pin) the KV session at admission so matched radix
+        # nodes cannot be evicted between planning and execution
+        self.kv.open_session(req.request_id, match=match)
         self._inflight[slot] = st
         self.sched.mark_prefilling(slot)
         return st
@@ -425,7 +560,8 @@ class ServeEngine:
         """Scheduler half of the step: decide which prefill chunks run and
         which slots decode. In-flight chunked prefills continue first
         (bounding time-to-first-token for admitted requests), then new
-        admissions fill the remaining prefill budget."""
+        admissions fill the remaining prefill budget — preferring queued
+        requests that share a hot prefix (prefix-aware admission)."""
         plan = StepPlan()
         prefix_len = self.backend.prefix_len()
         budget = self.ecfg.max_prefills_per_step
@@ -435,12 +571,19 @@ class ServeEngine:
             plan.prefill.append(self._inflight[slot].next_chunk(slot, prefix_len))
             budget -= 1
         if budget > 0:
-            for slot, req in self.sched.admissions(limit=budget):
+            match_len = (self._sched_match_len if self.ecfg.prefix_caching
+                         else None)
+            for slot, req in self.sched.admissions(limit=budget,
+                                                   match_len=match_len):
                 st = self._admit(slot, req)
                 plan.prefill.append(st.next_chunk(slot, prefix_len))
                 budget -= 1
         plan.decode = self.sched.decode_slots()
         return plan
+
+    def _sched_match_len(self, req: Request) -> int:
+        _, _, key = self._prep(req)
+        return self.kv.match_len(key)
 
     def _account_chunk_kv(self, st: _SlotPrefill, ck: PrefillChunk) -> None:
         """This chunk's tokens enter the paged KV — unless a shared prefix
@@ -456,12 +599,10 @@ class ServeEngine:
         plan = self._plan_step()
         self.memplane.begin_step()
         rpt = StepReport()
+        first_token_reqs: List[Request] = []
 
         # --- prefill phase (whole prompts or chunks) ------------------
         for ck in plan.prefill:
-            if ck.first:
-                self.kv.open_session(ck.request_id,
-                                     prefix_key=self._inflight[ck.slot].prefix_key)
             tok = self.backend.run_prefill_chunk(ck)
             self.memplane.weight_pass()
             self.prefill_chunks_run += 1
@@ -471,14 +612,26 @@ class ServeEngine:
             st.done += len(ck.tokens)
             st.req.prompt_pos = min(st.done, st.req.prompt_len)
             rpt.prefill_tokens += len(ck.tokens)
+            self.prefill_tokens_computed += len(ck.tokens)
             if ck.last:
                 req = st.req
                 req.prefilled_at = self.mem.now
+                first_token_reqs.append(req)
                 self.outputs[req.request_id].append(int(np.asarray(tok).flat[0]))
                 req.generated += 1
                 self.tokens_generated += 1
-                if st.prefix_key is not None:
-                    self.kv.register_prefix(req.request_id, st.prefix_key)
+                if st.key is not None:
+                    # a prompt that overflowed the smallest ring wrapped it:
+                    # its snapshot no longer holds the early positions a
+                    # shorter borrower would need, so it cannot donate
+                    # compute (pages still publish for memory-plane reuse)
+                    can_donate = (tfm.supports_extend(self.cfg) and
+                                  self.backend.prefix_len() + len(st.padded)
+                                  <= self._min_ring_len())
+                    snap = (self.backend.snapshot_slot(ck.slot)
+                            if can_donate else None)
+                    self.kv.register_prefix(req.request_id, st.key,
+                                            payload=snap)
                 self.sched.mark_decoding(ck.slot)
                 del self._inflight[ck.slot]
 
@@ -511,6 +664,11 @@ class ServeEngine:
         # --- advance simulated time by the modelled step latency ------
         step_s, per_tier = self.memplane.finish_step()
         self.mem.advance(step_s)
+        # the first token is out when the step that computed it completes:
+        # TTFT includes this step's modelled latency
+        for req in first_token_reqs:
+            req.first_token_at = self.mem.now
+        self.kv.maintain()   # cold-leaf decay runs on the advanced clock
         self.steps += 1
         rpt.step_s = step_s
         rpt.bytes_by_tier = per_tier
@@ -537,6 +695,10 @@ class ServeEngine:
         reads = sum(d.stats.read_bytes for d in self.mem.devices.values())
         writes = sum(d.stats.write_bytes for d in self.mem.devices.values())
         steady_writes = max(writes - self.weight_bytes, 1e-9)
+        prefix = self.kv.prefix_report()
+        prefix["compute_hits"] = self.prefix_compute_hits
+        prefix["tokens_skipped_compute"] = self.prefill_tokens_skipped
+        prefix["hot_tier"] = self.memplane.hot_tier
         return {
             "steps": self.steps,
             "tokens_generated": self.tokens_generated,
@@ -550,6 +712,22 @@ class ServeEngine:
             "dropped_allocs": self.kv.dropped_allocs,
             "pressure": self.kv.pressure_report(),
             "prefill_chunks": self.prefill_chunks_run,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "prefix_hits": self.kv.prefix_hits,
             "prefix_tokens_reused": self.kv.prefix_tokens_reused,
+            "prefix": prefix,
+            "latency": latency_percentiles(self.sched.latency),
         }
+
+
+def latency_percentiles(records: List[dict]) -> dict:
+    """TTFT/ITL percentiles over finished-request latency records (the
+    cluster frontend pools records across replicas through this too)."""
+    out = {"n": len(records)}
+    ttft = [r["ttft"] for r in records if r["ttft"] is not None]
+    itl = [r["itl"] for r in records if r["itl"] is not None]
+    for name, xs in (("ttft", ttft), ("itl", itl)):
+        for p in (50, 95, 99):
+            out[f"{name}_p{p}"] = (float(np.percentile(xs, p)) if xs else None)
+    return out

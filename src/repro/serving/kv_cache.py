@@ -12,14 +12,30 @@ argument). Page *placement and lifetime* go through `repro.core`:
   and the open page region is rewritten (append-only write pattern);
 - session end -> regions released (soft state dropped, per §4).
 
+Shared prefixes live in a :class:`~repro.serving.radix.RadixKVIndex`
+(DESIGN.md §6): a token-level radix tree over page-aligned prefixes.
+``match_prefix`` finds the longest page-aligned prefix a new prompt shares
+with any published prompt; ``open_session`` attaches those pages
+(refcounted, path pinned) so repeated prefixes cost zero KV writes and zero
+extra MRM capacity; ``register_prefix`` publishes a finished prompt's
+sealed leading pages into the tree.
+
+Retention is programmed from *observed reuse* (paper §4): a node whose hit
+count crosses ``hot_threshold`` is promoted — its page regions are
+re-programmed to ``hot_retention_s`` (metered as a reprogram write) and,
+when a ``hot_tier`` is configured, migrated there. Cold unlocked leaves
+decay after ``cold_ttl_s``: spilled to the colder tier when one is
+configured, else dropped (a later identical prompt recomputes — KV is soft
+state).
+
 Capacity pressure (paper §2.2/§4: the *system* manages retention, placement
 and eviction of inference soft state): when the tier cannot serve an
 allocation — or utilization crosses the high watermark — the manager
 resolves it through an explicit policy chain instead of silently counting a
 drop:
 
-1. ``evict``     — LRU-evict shared-prefix index entries whose pages are
-                   only pinned by the index (frees capacity immediately);
+1. ``evict``     — leaf-LRU-evict radix nodes pinned only by the index
+                   (frees capacity immediately);
 2. ``spill``     — place the page in a configured colder tier instead;
 3. ``recompute`` — drop the page as soft state; a later read re-materializes
                    it (recompute-on-demand), metered as recompute tokens.
@@ -34,10 +50,11 @@ live* and meters the device traffic.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.core.simulator import MemorySystem
+from repro.serving.radix import PrefixMatch, RadixKVIndex, RadixNode
 
 PRESSURE_POLICIES = ("none", "evict-lru", "spill", "recompute")
 
@@ -48,8 +65,7 @@ class Page:
     region_id: Optional[int]   # MemorySystem region (None = dropped/expired)
     n_tokens: int
     sealed: bool = False
-    refcount: int = 1          # >1 when shared via prefix caching
-    prefix_key: Optional[str] = None
+    refcount: int = 1          # >1 when shared via the radix prefix index
     tier: str = ""             # where the page lives (spill may differ)
     dropped: bool = False      # soft state dropped; recompute on read
 
@@ -60,6 +76,7 @@ class SessionKV:
     pages: List[Page] = field(default_factory=list)
     tokens: int = 0
     shared_prefix_pages: int = 0
+    radix_node: Optional[RadixNode] = None  # pinned path in the prefix tree
 
 
 @dataclass
@@ -71,7 +88,7 @@ class PressureStats:
     resolved_spill: int = 0
     resolved_recompute: int = 0
     unresolved: int = 0
-    prefix_evictions: int = 0      # index entries evicted (incl. watermark)
+    prefix_evictions: int = 0      # radix leaves evicted (incl. watermark)
     watermark_evictions: int = 0   # subset triggered proactively
     recompute_tokens: int = 0      # tokens re-materialized on later reads
 
@@ -88,13 +105,37 @@ class PressureStats:
         }
 
 
+@dataclass
+class RadixStats:
+    """Reuse -> retention programming ledger (paper §4: the system manages
+    retention of soft state from what it observes)."""
+    retention_promotions: int = 0  # nodes promoted to long retention
+    promoted_pages: int = 0        # pages re-programmed in place
+    migrated_pages: int = 0        # pages moved into the hot tier
+    cold_decays: int = 0           # cold leaves dropped after cold_ttl_s
+    cold_spilled_pages: int = 0    # cold pages demoted to the spill tier
+
+    def as_dict(self) -> dict:
+        return {
+            "retention_promotions": self.retention_promotions,
+            "promoted_pages": self.promoted_pages,
+            "migrated_pages": self.migrated_pages,
+            "cold_decays": self.cold_decays,
+            "cold_spilled_pages": self.cold_spilled_pages,
+        }
+
+
 class PagedKVManager:
     def __init__(self, cfg: ModelConfig, mem: MemorySystem, tier: str,
                  page_tokens: int = 128,
                  expected_session_s: float = 600.0,
                  spill_tier: Optional[str] = None,
                  policy: str = "none",
-                 high_watermark: Optional[float] = None):
+                 high_watermark: Optional[float] = None,
+                 hot_threshold: int = 4,
+                 hot_retention_s: float = 3600.0,
+                 hot_tier: Optional[str] = None,
+                 cold_ttl_s: Optional[float] = None):
         if policy not in PRESSURE_POLICIES:
             raise ValueError(f"policy {policy!r} not in {PRESSURE_POLICIES}")
         if policy == "spill" and spill_tier is None:
@@ -107,79 +148,194 @@ class PagedKVManager:
         self.spill_tier = spill_tier
         self.policy = policy
         self.high_watermark = high_watermark
+        self.hot_threshold = hot_threshold
+        self.hot_retention_s = hot_retention_s
+        self.hot_tier = hot_tier
+        self.cold_ttl_s = cold_ttl_s
         self.kv_bytes_token = cfg.kv_bytes_per_token()
         self.page_bytes = self.kv_bytes_token * page_tokens
         self.sessions: Dict[int, SessionKV] = {}
         self._next_page = 0
         self.dropped_allocs = 0            # legacy: truly-silent drops only
         self.pressure = PressureStats()
-        # automatic prefix caching (paper §2.2 cites vLLM's [53]): sealed
-        # prefix pages are shared by key across sessions — repeated prompt
-        # prefixes cost zero KV writes and zero extra MRM capacity
-        self._prefix_index: Dict[str, List[Page]] = {}
-        self._prefix_lru: Dict[str, float] = {}   # key -> last-use sim time
+        self.radix_stats = RadixStats()
+        # the one prefix abstraction every serving layer shares: a radix
+        # tree over page-aligned prefixes (replaces the flat whole-prompt
+        # sha1 index — partial prefixes now match)
+        self.radix = RadixKVIndex(page_tokens)
         self.prefix_hits = 0
         self.prefix_tokens_reused = 0
 
-    # ------------------------------------------------------------------
-    def open_session(self, session_id: int, prefix_key: Optional[str] = None,
-                     prefix_tokens: int = 0) -> SessionKV:
-        """``prefix_key``: stable identity of the prompt's page-aligned
-        prefix; if the index holds it, its sealed pages are attached
-        (refcounted) instead of re-written."""
+    # -- prefix tree ---------------------------------------------------
+    def match_prefix(self, tokens: Sequence,
+                     max_tokens: Optional[int] = None) -> PrefixMatch:
+        """Longest page-aligned prefix of `tokens` present in the tree.
+        Bumps hit counts and promotes nodes whose observed reuse crossed
+        ``hot_threshold`` (reuse -> retention programming). The match is
+        not yet pinned — pass it to :meth:`open_session` to attach it."""
+        m = self.radix.match(tokens, self.mem.now, max_tokens=max_tokens)
+        if m.tokens:
+            self._maybe_promote(m.node)
+        return m
+
+    def match_len(self, tokens: Sequence,
+                  max_tokens: Optional[int] = None) -> int:
+        """Side-effect-free match length (scheduler / router scoring)."""
+        return self.radix.match_len(tokens, max_tokens=max_tokens)
+
+    def open_session(self, session_id: int,
+                     match: Optional[PrefixMatch] = None) -> SessionKV:
+        """Open a session; when a :class:`PrefixMatch` is supplied its
+        pages are attached (refcounted) and the matched path is pinned, so
+        the shared tokens cost no new KV writes and can never be evicted
+        under this session."""
         s = SessionKV(session_id)
         self.sessions[session_id] = s
-        if prefix_key is not None and prefix_key in self._prefix_index:
-            for page in self._prefix_index[prefix_key]:
+        if match is not None and match.tokens:
+            for page in match.pages:
                 page.refcount += 1
                 s.pages.append(page)
                 s.tokens += page.n_tokens
-            s.shared_prefix_pages = len(s.pages)
+            s.shared_prefix_pages = len(match.pages)
+            s.radix_node = match.node
+            self.radix.lock(match.node)
             self.prefix_hits += 1
             self.prefix_tokens_reused += s.tokens
-            self._prefix_lru[prefix_key] = self.mem.now
         return s
 
-    def register_prefix(self, session_id: int, prefix_key: str) -> None:
-        """Publish this session's sealed leading pages under ``prefix_key``
-        (call after the prompt's KV has been appended)."""
+    def register_prefix(self, session_id: int, tokens: Sequence,
+                        payload: Any = None) -> int:
+        """Publish this session's sealed leading pages into the radix tree
+        under the token path (call after the prompt's KV is appended).
+        ``tokens[i*page_tokens:(i+1)*page_tokens]`` must be what the i-th
+        page covers. The session's pin moves to the deepest node so its
+        freshly published prefix cannot be evicted under it. Returns the
+        number of newly inserted pages."""
         s = self.sessions[session_id]
-        if prefix_key in self._prefix_index or s.shared_prefix_pages:
+        run: List[Page] = []
+        for p in s.pages:
+            if p.sealed and not p.dropped:
+                run.append(p)
+            else:
+                break
+        n = min(len(run), len(tokens) // self.page_tokens)
+        if n == 0:
+            return 0
+        _, inserted, node = self.radix.insert(
+            tokens[:n * self.page_tokens], run[:n], self.mem.now,
+            payload=payload)
+        for p in inserted:
+            p.refcount += 1  # the tree holds its own reference
+        if node is not self.radix.root:
+            self.radix.lock(node)
+            if s.radix_node is not None:
+                self.radix.unlock(s.radix_node)
+            s.radix_node = node
+        return len(inserted)
+
+    # -- reuse -> retention programming --------------------------------
+    def _maybe_promote(self, node: Optional[RadixNode]) -> None:
+        """Walk the matched path; nodes whose hit count crossed the
+        threshold get long-retention DCM programming (a metered reprogram
+        write) and, when a hot tier is configured, placement there."""
+        while node is not None and node.parent is not None:
+            if not node.hot and node.hits >= self.hot_threshold:
+                node.hot = True
+                self.radix_stats.retention_promotions += 1
+                for page in node.pages:
+                    self._promote_page(page)
+            node = node.parent
+
+    def _promote_page(self, page: Page) -> None:
+        if page.region_id is None:
             return
-        sealed = [p for p in s.pages if p.sealed and not p.dropped]
-        if sealed:
-            for p in sealed:
-                p.prefix_key = prefix_key
-                p.refcount += 1  # the index holds its own reference
-            self._prefix_index[prefix_key] = sealed
-            self._prefix_lru[prefix_key] = self.mem.now
+        nbytes = page.n_tokens * self.kv_bytes_token
+        if self.hot_tier and page.tier != self.hot_tier:
+            rid = self.mem.write_region(self.hot_tier, "prefix:hot", nbytes,
+                                        expected_lifetime_s=self.hot_retention_s)
+            if rid is not None:
+                self.mem.read_region(page.region_id, nbytes)  # migration read
+                self.mem.release_region(page.region_id)
+                page.region_id = rid
+                page.tier = self.hot_tier
+                self.radix_stats.migrated_pages += 1
+                return
+        # re-program retention in place: a DCM retention change is a block
+        # rewrite (metered as reprogram/refresh traffic, not steady writes)
+        r = self.mem.tracker.get(page.region_id)
+        if r is None:
+            return
+        op = self.mem.devices[page.tier].write(
+            nbytes, expected_lifetime_s=self.hot_retention_s, refresh=True)
+        self.mem.tracker.rearm(r, self.mem.now, retention_s=op.retention_s)
+        self.radix_stats.promoted_pages += 1
+
+    def maintain(self) -> None:
+        """Cold-leaf decay (call once per engine step): unlocked leaves not
+        reused for ``cold_ttl_s`` are demoted — spilled to the colder tier
+        when one is configured, else dropped from the tree (soft state; an
+        identical future prompt recomputes)."""
+        if self.cold_ttl_s is None:
+            return
+        now = self.mem.now
+        for leaf in self.radix.evictable_leaves():
+            if now - leaf.last_access <= self.cold_ttl_s:
+                continue
+            if self.spill_tier and self.spill_tier != self.tier:
+                self._spill_cold_leaf(leaf, now)
+            elif self.radix.pop_leaf(leaf) is not None:
+                for page in leaf.pages:
+                    self._unref_page(page)
+                self.radix_stats.cold_decays += 1
+
+    def _spill_cold_leaf(self, leaf: RadixNode, now: float) -> None:
+        moved = 0
+        for page in leaf.pages:
+            if page.region_id is None or page.tier == self.spill_tier:
+                continue
+            nbytes = page.n_tokens * self.kv_bytes_token
+            rid = self.mem.write_region(self.spill_tier, "prefix:cold", nbytes,
+                                        expected_lifetime_s=self.expected_session_s)
+            if rid is None:
+                continue
+            self.mem.read_region(page.region_id, nbytes)  # migration read
+            self.mem.release_region(page.region_id)
+            page.region_id = rid
+            page.tier = self.spill_tier
+            moved += 1
+        if moved:
+            self.radix_stats.cold_spilled_pages += moved
+            leaf.last_access = now  # demoted; don't re-trigger next step
 
     # -- capacity pressure ---------------------------------------------
-    def _lru_evictable_prefix(self) -> Optional[str]:
-        """Least-recently-used prefix entry whose pages are pinned only by
-        the index — evicting it frees capacity immediately."""
-        best, best_t = None, None
-        for key, pages in self._prefix_index.items():
-            if all(p.refcount == 1 for p in pages):
-                t = self._prefix_lru.get(key, 0.0)
-                if best_t is None or t < best_t:
-                    best, best_t = key, t
-        return best
+    def _unref_page(self, page: Page) -> None:
+        page.refcount -= 1
+        if page.refcount <= 0 and page.region_id is not None:
+            self.mem.release_region(page.region_id)
+            page.region_id = None
+
+    def _evict_one_prefix_leaf(self) -> bool:
+        """Leaf-LRU eviction: unlocked leaves hold pages pinned only by
+        the tree (live sessions pin their paths), so evicting one frees
+        capacity immediately."""
+        victim = self.radix.pop_lru_leaf()
+        if victim is None:
+            return False
+        for page in victim.pages:
+            self._unref_page(page)
+        self.pressure.prefix_evictions += 1
+        return True
 
     def _alloc(self, owner: str, nbytes: float, tier: str) -> Optional[int]:
         return self.mem.write_region(tier, owner, nbytes,
                                      expected_lifetime_s=self.expected_session_s)
 
     def _evict_and_retry(self, owner: str, nbytes: float) -> Optional[int]:
-        while True:
-            victim = self._lru_evictable_prefix()
-            if victim is None:
-                return None
-            self.evict_prefix(victim)
-            self.pressure.prefix_evictions += 1
+        while self._evict_one_prefix_leaf():
             rid = self._alloc(owner, nbytes, self.tier)
             if rid is not None:
                 return rid
+        return None
 
     def _resolve_pressure(self, owner: str, nbytes: float):
         """Allocation failed: decide what gives. Returns (region_id, tier,
@@ -209,11 +365,8 @@ class PagedKVManager:
         if self.high_watermark is None or self.policy == "none":
             return
         while self.mem.utilization(self.tier) > self.high_watermark:
-            victim = self._lru_evictable_prefix()
-            if victim is None:
+            if not self._evict_one_prefix_leaf():
                 return
-            self.evict_prefix(victim)
-            self.pressure.prefix_evictions += 1
             self.pressure.watermark_evictions += 1
 
     # ------------------------------------------------------------------
@@ -295,25 +448,27 @@ class PagedKVManager:
         s = self.sessions.pop(session_id, None)
         if s is None:
             return
+        if s.radix_node is not None:
+            self.radix.unlock(s.radix_node)
         for page in s.pages:
-            page.refcount -= 1
-            if page.refcount <= 0 and page.region_id is not None:
-                self.mem.release_region(page.region_id)
-                page.region_id = None
+            self._unref_page(page)
 
-    def evict_prefix(self, prefix_key: str) -> None:
-        """Capacity/retention policy hook: drop the index's reference."""
-        pages = self._prefix_index.pop(prefix_key, None)
-        self._prefix_lru.pop(prefix_key, None)
-        for page in pages or []:
-            page.refcount -= 1
-            if page.refcount <= 0 and page.region_id is not None:
-                self.mem.release_region(page.region_id)
-                page.region_id = None
+    def evict_prefixes(self, max_n: Optional[int] = None) -> int:
+        """Capacity/retention policy hook: leaf-LRU-evict up to ``max_n``
+        unlocked radix leaves (all of them when None). Returns the count."""
+        n = 0
+        while (max_n is None or n < max_n) and self._evict_one_prefix_leaf():
+            n += 1
+        return n
 
     # ------------------------------------------------------------------
     def live_pages(self) -> int:
         return sum(len(s.pages) for s in self.sessions.values())
+
+    def live_kv_bytes(self) -> float:
+        """Bytes of KV the live sessions pin (capacity-pressure signal for
+        the cluster router)."""
+        return sum(s.tokens for s in self.sessions.values()) * self.kv_bytes_token
 
     def live_tokens(self) -> int:
         return sum(s.tokens for s in self.sessions.values())
@@ -321,4 +476,16 @@ class PagedKVManager:
     def pressure_report(self) -> dict:
         rep = self.pressure.as_dict()
         rep["dropped_allocs"] = self.dropped_allocs
+        return rep
+
+    def prefix_report(self) -> dict:
+        rep = {
+            "hits": self.prefix_hits,
+            "tokens_reused": self.prefix_tokens_reused,
+            "radix_nodes": self.radix.n_nodes(),
+            "radix_tokens": self.radix.total_tokens(),
+            "radix_pages": self.radix.total_pages(),
+            "evictions": self.pressure.prefix_evictions,
+        }
+        rep.update(self.radix_stats.as_dict())
         return rep

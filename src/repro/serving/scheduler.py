@@ -6,13 +6,21 @@ stays bounded; decode rounds run over all resident sessions. With chunked
 prefill, a slot can be resident but still *prefilling* (its prompt is being
 fed in `chunk_tokens` pieces interleaved with decode rounds); such slots
 are excluded from decode until the engine marks them decoding.
+
+Prefix-aware admission: when the engine supplies a ``match_len`` scorer
+(longest radix prefix the KV tree already holds for a request),
+``admissions`` prefers the queued request with the longest match — requests
+sharing a hot prefix batch together, so the shared pages are attached while
+still pinned-hot instead of after eviction. FIFO breaks ties, and a
+request bypassed ``max_skip`` times is admitted regardless (no starvation).
+
 Deterministic (no wall clock — simulation time comes from the engine).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Set
+from typing import Callable, Deque, Dict, List, Optional, Set
 
 
 @dataclass
@@ -22,9 +30,11 @@ class Request:
     max_new_tokens: int
     submitted_at: float
     prefilled_at: Optional[float] = None
+    first_token_at: Optional[float] = None  # TTFT = this - submitted_at
     finished_at: Optional[float] = None
     generated: int = 0
     prompt_pos: int = 0       # prompt tokens prefilled so far (chunked prefill)
+    sched_skipped: int = 0    # times bypassed by prefix-aware admission
 
     @property
     def prompt_len(self) -> int:
@@ -39,28 +49,54 @@ class SchedulerStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefill_chunks: int = 0
+    prefix_reorders: int = 0  # admissions that jumped the FIFO order
 
 
 class ContinuousBatchScheduler:
-    def __init__(self, max_batch_slots: int, max_prefills_per_step: int = 2):
+    def __init__(self, max_batch_slots: int, max_prefills_per_step: int = 2,
+                 max_skip: int = 4):
         self.max_slots = max_batch_slots
         self.max_prefills = max_prefills_per_step
+        self.max_skip = max_skip
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self.free_slots: List[int] = list(range(max_batch_slots))
         self.prefilling: Set[int] = set()     # slots mid-chunked-prefill
         self.stats = SchedulerStats()
+        self.latency: List[dict] = []         # per-finished-request records
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
         self.stats.queue_peak = max(self.stats.queue_peak, len(self.queue))
 
-    def admissions(self, limit: Optional[int] = None) -> List[tuple]:
+    def _pick(self, match_len: Optional[Callable[[Request], int]]) -> Request:
+        """Next request to admit: FIFO head, unless prefix-aware scoring
+        finds a longer-match request further back (bounded by max_skip)."""
+        if match_len is None or len(self.queue) == 1:
+            return self.queue.popleft()
+        head = self.queue[0]
+        if head.sched_skipped >= self.max_skip:
+            return self.queue.popleft()
+        scores = [match_len(r) for r in self.queue]
+        best = max(scores)
+        idx = scores.index(best)  # earliest submitter among ties (FIFO)
+        if idx == 0 or best <= 0:
+            return self.queue.popleft()
+        req = self.queue[idx]
+        del self.queue[idx]
+        for r in list(self.queue)[:idx]:
+            r.sched_skipped += 1
+        self.stats.prefix_reorders += 1
+        return req
+
+    def admissions(self, limit: Optional[int] = None,
+                   match_len: Optional[Callable[[Request], int]] = None
+                   ) -> List[tuple]:
         """Pick (slot, request) pairs to start prefilling this step."""
         n = self.max_prefills if limit is None else min(limit, self.max_prefills)
         out = []
         while self.queue and self.free_slots and len(out) < n:
-            req = self.queue.popleft()
+            req = self._pick(match_len)
             slot = self.free_slots.pop(0)
             self.active[slot] = req
             self.stats.admitted += 1
@@ -85,8 +121,21 @@ class ContinuousBatchScheduler:
         self.free_slots.append(slot)
         self.free_slots.sort()
         self.stats.finished += 1
+        self.latency.append(_latency_record(req))
         return req
 
     @property
     def idle(self) -> bool:
         return not self.queue and not self.active
+
+
+def _latency_record(req: Request) -> dict:
+    """TTFT/ITL sample for one finished request (simulated seconds)."""
+    ttft = (req.first_token_at - req.submitted_at
+            if req.first_token_at is not None else None)
+    itl = None
+    if (req.first_token_at is not None and req.finished_at is not None
+            and req.generated > 1):
+        itl = (req.finished_at - req.first_token_at) / (req.generated - 1)
+    return {"request_id": req.request_id, "ttft": ttft, "itl": itl,
+            "generated": req.generated}

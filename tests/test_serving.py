@@ -160,23 +160,28 @@ def test_prefix_caching_shares_pages():
     cfg = get_config("qwen3-8b")
     mem = _mem(32)
     kv = PagedKVManager(cfg, mem, "mrm", page_tokens=64)
+    prompt = list(range(100, 300))        # 200 tokens
     w0 = mem.devices["mrm"].stats.write_bytes
-    kv.open_session(0, prefix_key="promptA")
-    kv.append_tokens(0, 200)          # 3 pages: 64+64+64 sealed + 8 open
-    kv.register_prefix(0, "promptA")
+    kv.open_session(0, match=kv.match_prefix(prompt))
+    kv.append_tokens(0, 200)              # 3 sealed 64-token pages + 8 open
+    kv.register_prefix(0, prompt)
     w_first = mem.devices["mrm"].stats.write_bytes - w0
-    s1 = kv.open_session(1, prefix_key="promptA")
+    s1 = kv.open_session(1, match=kv.match_prefix(prompt))
     assert s1.shared_prefix_pages == 3 and s1.tokens == 192
     kv.append_tokens(1, 200 - s1.tokens)  # only the tail is written
     w_second = mem.devices["mrm"].stats.write_bytes - w0 - w_first
     assert w_second < w_first * 0.2
     assert kv.prefix_hits == 1 and kv.prefix_tokens_reused == 192
+    # a *partial* prefix (radix, not whole-key) also matches, page-aligned
+    s2 = kv.open_session(2, match=kv.match_prefix(prompt[:150]))
+    assert s2.tokens == 128 and s2.shared_prefix_pages == 2
     # shared pages survive the first session's close, die with eviction
     kv.close_session(0)
     assert kv.read_all(1) == 200 * cfg.kv_bytes_per_token()
     kv.close_session(1)
-    kv.evict_prefix("promptA")
-    assert kv.live_pages() == 0
+    kv.close_session(2)
+    assert kv.evict_prefixes() > 0        # leaf-LRU-evict the whole tree
+    assert kv.live_pages() == 0 and kv.radix.n_nodes() == 0
 
 
 def test_engine_prefix_caching_end_to_end(small_engine_setup):
@@ -187,13 +192,17 @@ def test_engine_prefix_caching_end_to_end(small_engine_setup):
                                    weight_tier="mrm", kv_tier="mrm",
                                    eos_token=-1, prefix_caching=True),
                       account_cfg=full)
-    prompt = list(range(2, 70))  # 68 tokens -> padded to 128? bucket -> 96
+    prompt = list(range(2, 70))  # 68 tokens, unpadded under prefix caching
     for _ in range(4):
         eng.submit(list(prompt), 4)
     rep = eng.run_until_idle()
     assert rep["finished"] == 4
-    assert rep["prefix_hits"] >= 3
+    # the first two admissions share a step (both cold); the rest hit
+    assert rep["prefix_hits"] >= 2
     assert rep["prefix_tokens_reused"] > 0
+    # the hit is real in the compute plane: prefill tokens were skipped
+    assert rep["prefill_tokens_skipped"] > 0
+    assert rep["prefix"]["compute_hits"] >= 2
     # identical prompts must still produce identical outputs
     outs = [tuple(v) for v in eng.outputs.values()]
     assert len(set(outs)) == 1
@@ -331,6 +340,157 @@ def test_chunked_prefill_interleaves_decode(small_engine_setup):
     assert eng.sched.stats.finished == 2
 
 
+def test_prefix_hit_decodes_identically_to_cold_start(f32_engine_setup):
+    """Acceptance: a radix prefix hit (slot caches seeded from the donor
+    snapshot, prefill extended from the match boundary) must decode the
+    exact tokens a cold start decodes — on the same engine (hit vs its own
+    cold donor) and vs a fresh engine that never saw the prefix."""
+    full, cfg, params = f32_engine_setup
+    rng = np.random.default_rng(21)
+    shared = list(rng.integers(2, 400, 40))
+    prompts = [shared + list(rng.integers(2, 400, 8)) for _ in range(3)]
+
+    eng, rep = _run_engine(full, cfg, params, 16, [], max_new=8,
+                           page_tokens=8)
+    for p in prompts:          # sequential: each later prompt hits
+        eng.submit(list(p), 8)
+        eng.run_until_idle()
+    assert eng.kv.prefix_hits >= 2
+    assert eng.prefill_tokens_skipped > 0   # compute actually shortened
+
+    # cold baseline: same engine config, but the tree is drained between
+    # requests, so every prompt prefills from scratch
+    cold, _ = _run_engine(full, cfg, params, 16, [], max_new=8,
+                          page_tokens=8)
+    for p in prompts:
+        cold.submit(list(p), 8)
+        cold.run_until_idle()
+        cold.kv.evict_prefixes()
+        assert cold.kv.radix.n_nodes() == 0
+    assert cold.kv.prefix_hits == 0
+    assert {k: list(v) for k, v in eng.outputs.items()} == \
+           {k: list(v) for k, v in cold.outputs.items()}
+
+
+def test_wrapped_donor_never_donates_compute(f32_engine_setup):
+    """A donor prompt that overflowed the smallest ring wrapped it — its
+    snapshot lost the early positions a shorter borrower needs, so it must
+    publish pages only (memory reuse), never a compute snapshot. The
+    borrower prefills in full and decodes exactly like a cold start."""
+    full, cfg, params = f32_engine_setup
+    rng = np.random.default_rng(23)
+    head = list(rng.integers(2, 400, 32))
+    long_donor = head + list(rng.integers(2, 400, 108))  # 140 > ring (96)
+    borrower = head + list(rng.integers(2, 400, 16))     # 48, shares 32
+
+    eng, _ = _run_engine(full, cfg, params, 16, [], max_new=6, page_tokens=16)
+    eng.submit(list(long_donor), 6)
+    eng.run_until_idle()
+    assert eng.kv.radix.n_nodes() > 0       # pages published...
+    eng.submit(list(borrower), 6)
+    eng.run_until_idle()
+    assert eng.kv.prefix_hits >= 1          # ...and memory reuse happened
+    assert eng.prefill_tokens_skipped == 0  # ...but no compute donation
+
+    cold, _ = _run_engine(full, cfg, params, 16,
+                          [long_donor, borrower], max_new=6,
+                          page_tokens=16, prefix_caching=False)
+    assert {k: list(v) for k, v in eng.outputs.items()} == \
+           {k: list(v) for k, v in cold.outputs.items()}
+
+
+def test_radix_reuse_cuts_prefill_and_kv_writes(f32_engine_setup):
+    """Shared-prefix traffic: radix reuse must cut both the prefill tokens
+    computed and the KV-tier write bytes at equal output tokens."""
+    full, cfg, params = f32_engine_setup
+    rng = np.random.default_rng(22)
+    shared = list(rng.integers(2, 400, 48))
+    prompts = [shared + list(rng.integers(2, 400, 16)) for _ in range(6)]
+    kw = dict(page_tokens=16, weight_tier="hbm")
+    eng_on, rep_on = _run_engine(full, cfg, params, 16, prompts, max_new=6, **kw)
+    eng_off, rep_off = _run_engine(full, cfg, params, 16, prompts, max_new=6,
+                                   prefix_caching=False, **kw)
+    assert rep_on["tokens_generated"] == rep_off["tokens_generated"]
+    assert {k: list(v) for k, v in eng_on.outputs.items()} == \
+           {k: list(v) for k, v in eng_off.outputs.items()}
+    # >= 30% fewer prefill tokens through the model...
+    assert rep_on["prefill_tokens_computed"] <= \
+        0.7 * rep_off["prefill_tokens_computed"]
+    # ...and >= 30% fewer KV write bytes on the KV tier (weights in hbm)
+    w_on = rep_on["memory"]["tiers"]["mrm"]["write_gb"]
+    w_off = rep_off["memory"]["tiers"]["mrm"]["write_gb"]
+    assert w_on <= 0.7 * w_off
+
+
+def test_radix_hot_promotion_programs_retention(small_engine_setup):
+    """Observed reuse programs retention: a node hit `hot_threshold` times
+    is promoted (reprogram write metered, refresh deadline extended)."""
+    full, cfg, params = small_engine_setup
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=2, max_cache_len=96,
+                                   weight_tier="hbm", kv_tier="mrm",
+                                   eos_token=-1, page_tokens=16,
+                                   chunk_tokens=16,
+                                   radix_hot_threshold=2,
+                                   radix_hot_retention_s=7200.0),
+                      account_cfg=full)
+    prompt = list(range(2, 50))
+    for _ in range(5):
+        eng.submit(list(prompt), 4)
+        eng.run_until_idle()
+    rep = eng.report()
+    assert rep["prefix"]["retention_promotions"] >= 1
+    assert rep["prefix"]["promoted_pages"] >= 1
+    # reprogram writes are metered as refresh traffic, not steady writes
+    assert rep["memory"]["tiers"]["mrm"]["refresh_gb"] > 0
+
+
+def test_radix_auto_hot_tier_solves_placement(small_engine_setup):
+    """radix_hot_tier='auto' runs the §4 placement solver over the
+    engine's tiers and promotion migrates hot prefix pages there."""
+    full, cfg, params = small_engine_setup
+    mem = MemorySystem({"mrm": (MRM_RRAM, 4 << 30), "hbm": (HBM3E, 8 << 30),
+                        "mrm_cold": (MRM_RRAM, 64 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=2, max_cache_len=96,
+                                   weight_tier="hbm", kv_tier="mrm",
+                                   eos_token=-1, page_tokens=16,
+                                   radix_hot_threshold=2,
+                                   radix_hot_tier="auto"),
+                      account_cfg=full)
+    assert eng.memplane.hot_tier in mem.devices
+    prompt = list(range(2, 50))
+    for _ in range(4):
+        eng.submit(list(prompt), 4)
+        eng.run_until_idle()
+    rep = eng.report()
+    assert rep["prefix"]["retention_promotions"] >= 1
+    if eng.memplane.hot_tier != "mrm":
+        assert rep["prefix"]["migrated_pages"] >= 1
+
+
+def test_radix_cold_leaves_decay(small_engine_setup):
+    """Unlocked leaves idle past cold_ttl_s decay out of the tree (soft
+    state: an identical future prompt recomputes)."""
+    full, cfg, params = small_engine_setup
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=2, max_cache_len=96,
+                                   weight_tier="hbm", kv_tier="mrm",
+                                   eos_token=-1, page_tokens=16,
+                                   radix_cold_ttl_s=0.5),
+                      account_cfg=full)
+    eng.submit(list(range(2, 50)), 4)
+    eng.run_until_idle()
+    assert eng.kv.radix.n_nodes() > 0
+    # let simulated time pass the TTL; maintenance runs on advance
+    eng.mem.advance(1.0)
+    eng.kv.maintain()
+    assert eng.kv.radix.n_nodes() == 0
+    assert eng.kv.radix_stats.cold_decays >= 1
+
+
 def test_unchunked_long_prompt_rejected_clearly(small_engine_setup):
     """Without chunked prefill, prompts beyond the bucketing ceiling get a
     clear submit-time error (legacy behavior was a padding crash mid-step)."""
@@ -383,13 +543,13 @@ def test_pressure_prefix_lru_eviction_no_silent_drops(small_engine_setup):
     eng = ServeEngine(cfg, params, _tiny_mem(),
                       EngineConfig(max_slots=3, max_cache_len=64,
                                    weight_tier="hbm", kv_tier="mrm",
-                                   eos_token=-1,
+                                   eos_token=-1, page_tokens=16,
                                    kv_pressure_policy="evict-lru",
                                    kv_high_watermark=0.9),
                       account_cfg=full)
     rng = np.random.default_rng(5)
     for _ in range(10):
-        eng.submit(list(rng.integers(2, 400, 40)), 8)
+        eng.submit(list(rng.integers(2, 400, 64)), 8)
     rep = eng.run_until_idle()
     p = rep["pressure"]
     assert rep["finished"] == 10
@@ -502,7 +662,69 @@ def test_cluster_session_affinity_routes_sticky(small_engine_setup):
     for k, ids in rids.items():
         assert len({fe.replica_of(r) for r in ids}) == 1
     # affinity means the repeated prompt hit the same replica's prefix index
-    assert sum(e.kv.prefix_hits for e in fe.engines) >= 4
+    assert sum(e.kv.prefix_hits for e in fe.engines) >= 2
+
+
+def test_cluster_radix_affinity_beats_key_hash(small_engine_setup):
+    """A request sharing a served prompt's prefix must be routed to the
+    replica holding it — whatever its session key hashes to — and arrive
+    as a real prefix hit."""
+    full, cfg, params = small_engine_setup
+    fe = ClusterFrontend([_mk_engine(full, cfg, params, page_tokens=8)
+                          for _ in range(3)])
+    rng = np.random.default_rng(10)
+    prompt = list(rng.integers(2, 400, 24))
+    r0 = fe.submit(list(prompt), 4, session_key="alice")
+    fe.run_until_idle()
+    home = fe.replica_of(r0)
+    assert fe.engines[home].kv.radix.n_nodes() > 0
+    # different users, shared prefix (e.g. a common system prompt)
+    rids = [fe.submit(list(prompt) + [500 + i], 4, session_key=f"user-{i}")
+            for i in range(4)]
+    fe.run_until_idle()
+    assert all(fe.replica_of(r) == home for r in rids)
+    assert fe.radix_routed >= 4
+    assert fe.engines[home].kv.prefix_hits >= 4
+
+
+def test_cluster_least_loaded_includes_kv_pressure(small_engine_setup):
+    """A replica with a saturated KV tier must lose least-loaded ties to
+    an equally-queued replica with free KV capacity."""
+    full, cfg, params = small_engine_setup
+    busy = _mk_engine(full, cfg, params, prefix_caching=False)
+    idle = _mk_engine(full, cfg, params, prefix_caching=False)
+    fe = ClusterFrontend([busy, idle])
+    # occupy replica 0's KV with a live session (equal queue lengths)
+    busy.kv.open_session(999)
+    busy.kv.append_tokens(999, 512)
+    assert fe.route() == 1  # tie on load -> KV pressure breaks it
+    busy.kv.close_session(999)
+    assert fe.route() == 0  # pressure gone -> index order
+
+
+def test_ttft_itl_percentiles_reported(small_engine_setup):
+    full, cfg, params = small_engine_setup
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    eng = ServeEngine(cfg, params, mem,
+                      EngineConfig(max_slots=2, max_cache_len=64,
+                                   weight_tier="mrm", kv_tier="mrm",
+                                   eos_token=-1),
+                      account_cfg=full)
+    rng = np.random.default_rng(12)
+    for _ in range(4):
+        eng.submit(list(rng.integers(2, 400, 12)), 6)
+    rep = eng.run_until_idle()
+    lat = rep["latency"]
+    assert lat["n"] == 4
+    assert lat["ttft_p50"] is not None and lat["ttft_p50"] > 0
+    assert lat["itl_p50"] is not None and lat["itl_p50"] > 0
+    assert lat["ttft_p95"] >= lat["ttft_p50"]
+    # every finished request recorded a first-token time
+    for r in eng.sched.latency:
+        assert r["ttft"] is not None and r["ttft"] >= 0
+    # the cluster fleet report pools the same records
+    fe = ClusterFrontend([eng])
+    assert fe.report()["latency"]["n"] == 4
 
 
 # ---------------------------------------------------------------------------
