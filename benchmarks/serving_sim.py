@@ -12,6 +12,12 @@
    reuse must cut prefill tokens computed and KV-tier write bytes by
    >= 30% at equal (identical) output tokens, and the hit rate / tokens
    reused / TTFT land in the JSON trajectory.
+4. Fleet-reuse sweep: N replicas x shared-prefix fan-out with the fleet
+   prefix directory + cross-replica migration on vs the per-replica radix
+   baseline (each replica recomputes the shared head cold) — must show a
+   cross-replica hit rate > 0, a >= 20% fleet prefill-token cut at
+   identical decoded tokens, non-zero metered interconnect traffic, and
+   zero pressure-ledger imbalance.
 """
 from __future__ import annotations
 
@@ -208,6 +214,99 @@ def cluster_sweep(arch="deepseek-7b", replica_counts=(1, 2),
     return out
 
 
+def fleet_reuse(arch="deepseek-7b", replicas=3, fanout=12) -> dict:
+    """Fleet-level prefix reuse: a shared system-prompt head fanned out
+    across a cluster. With the fleet directory + migration on, the head
+    is computed cold exactly once and then *moved* (metered interconnect
+    transfer) wherever load sends its traffic; the per-replica baseline
+    (no fleet awareness: sticky/least-loaded routing, per-replica radix
+    trees) recomputes it cold on every replica it lands on."""
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import ClusterFrontend, EngineConfig, ServeEngine
+
+    full = get_config(arch)
+    # fp32: the migrated-hit extend path must stay bit-equal to cold
+    # prefill (same policy as prefix_reuse above)
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    head = list(rng.integers(2, cfg.vocab_size, 64))
+    seed_tail = list(rng.integers(2, cfg.vocab_size, 16))
+    tails = [list(rng.integers(2, cfg.vocab_size, 16)) for _ in range(fanout)]
+
+    def run_one(fleet: bool):
+        engines = []
+        for _ in range(replicas):
+            mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40),
+                                "hbm": (HBM3E, 1 << 37)})
+            engines.append(ServeEngine(
+                cfg, params, mem,
+                EngineConfig(max_slots=2, max_cache_len=96,
+                             weight_tier="hbm", kv_tier="mrm",
+                             eos_token=-1, chunk_tokens=16, page_tokens=16,
+                             radix_hot_threshold=2),
+                account_cfg=full))
+        fe = ClusterFrontend(engines, migrate_prefixes=fleet,
+                             interconnect_gbps=50.0, migrate_load_gap=1,
+                             prefix_affinity=fleet)
+        # wave 1 establishes the hot head on one replica...
+        fe.submit(head + seed_tail, 6, session_key="seed")
+        fe.run_until_idle()
+        # ...then the fan-out wave arrives as a burst of distinct users
+        for i, tail in enumerate(tails):
+            fe.submit(head + tail, 6, session_key=f"fan-{i}")
+        rep = fe.run_until_idle()
+        outs = {r: list(fe.output(r)) for r in range(fanout + 1)}
+        return fe, rep, outs
+
+    fe_on, on, outs_on = run_one(True)
+    fe_off, off, outs_off = run_one(False)
+    assert on["tokens_generated"] == off["tokens_generated"]
+    assert outs_on == outs_off, "fleet migration changed decoded tokens"
+
+    def imbalance(rep):
+        return sum(abs(r["pressure"]["events"]
+                       - (r["pressure"]["resolved_evict"]
+                          + r["pressure"]["resolved_spill"]
+                          + r["pressure"]["resolved_recompute"]
+                          + r["pressure"]["unresolved"]))
+                   for r in rep["per_replica"])
+
+    ledger_imbalance = imbalance(on) + imbalance(off)
+    prefill_cut = 1 - (on["prefill_tokens_computed"]
+                       / off["prefill_tokens_computed"])
+    inter = on["interconnect"]
+    assert ledger_imbalance == 0, (on["pressure"], off["pressure"])
+    assert on["dropped_allocs"] == off["dropped_allocs"] == 0
+    assert inter["migrations"] > 0 and inter["migration_bytes"] > 0, inter
+    assert on["prefix_hits_migrated"] > 0, "no cross-replica hits"
+    assert prefill_cut >= 0.20, f"fleet prefill cut {prefill_cut:.2%} < 20%"
+    n_reqs = fanout + 1
+    return {
+        "replicas": replicas,
+        "requests": n_reqs,
+        "prefill_tokens_fleet": on["prefill_tokens_computed"],
+        "prefill_tokens_baseline": off["prefill_tokens_computed"],
+        "prefill_cut": prefill_cut,
+        "cross_replica_hits": on["prefix_hits_migrated"],
+        "cross_replica_hit_rate": on["prefix_hits_migrated"] / n_reqs,
+        "prefix_hits": on["prefix_hits"],
+        "migrations": inter["migrations"],
+        "migrated_tokens": inter["migrated_tokens"],
+        "migration_bytes": inter["migration_bytes"],
+        "migration_s": inter["migration_s"],
+        "snapshot_bytes": on["snapshot_bytes"],
+        "directory_entries": on["directory"]["entries"],
+        "ledger_imbalance": ledger_imbalance,
+        "dropped_allocs": on["dropped_allocs"],
+        "ttft_p50_s": on["latency"]["ttft_p50"],
+        "ttft_p50_baseline_s": off["latency"]["ttft_p50"],
+    }
+
+
 def run(csv=True):
     t0 = time.perf_counter()
     out = compute()
@@ -235,6 +334,16 @@ def run(csv=True):
         print(f"serving_sim/prefix_prefill_cut,{dt:.1f},{reuse['prefill_cut']:.4f}")
         print(f"serving_sim/prefix_kv_write_cut,{dt:.1f},{reuse['kv_write_cut']:.4f}")
         print(f"serving_sim/prefix_ttft_p50_s,{dt:.1f},{reuse['ttft_p50_s']:.6f}")
+    t0 = time.perf_counter()
+    fleet_r = fleet_reuse()
+    dt = (time.perf_counter() - t0) * 1e6
+    out["fleet_reuse"] = fleet_r
+    if csv:
+        print(f"serving_sim/fleet_prefill_cut,{dt:.1f},{fleet_r['prefill_cut']:.4f}")
+        print(f"serving_sim/fleet_cross_replica_hits,{dt:.1f},{fleet_r['cross_replica_hits']}")
+        print(f"serving_sim/fleet_migrations,{dt:.1f},{fleet_r['migrations']}")
+        print(f"serving_sim/fleet_migration_gb,{dt:.1f},{fleet_r['migration_bytes'] / 1e9:.4f}")
+        print(f"serving_sim/fleet_ledger_imbalance,{dt:.1f},{fleet_r['ledger_imbalance']}")
     return out
 
 

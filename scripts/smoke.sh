@@ -20,8 +20,21 @@ assert fleet["dropped_allocs"] == 0, fleet
 reuse = rep["suites"]["serving"]["prefix_reuse"]
 assert reuse["prefill_cut"] >= 0.30, reuse
 assert reuse["kv_write_cut"] >= 0.30, reuse
+# fleet-level reuse: the prefix directory + cross-replica migration must
+# cut fleet prefill tokens >= 20% vs the per-replica radix baseline, with
+# real metered interconnect traffic and balanced pressure ledgers — a
+# cross-replica reuse regression fails the build here
+fr = rep["suites"]["serving"]["fleet_reuse"]
+assert fr["prefill_cut"] >= 0.20, fr
+assert fr["ledger_imbalance"] == 0, fr
+assert fr["cross_replica_hits"] > 0, fr
+assert fr["migration_bytes"] > 0, fr
+assert fr["dropped_allocs"] == 0, fr
 print("smoke OK:", {k: fleet[k] for k in ("finished", "tokens_generated",
                                           "pressure_events", "dropped_allocs")})
 print("prefix reuse:", {k: round(reuse[k], 4) for k in
                         ("prefix_hit_rate", "prefill_cut", "kv_write_cut")})
+print("fleet reuse:", {k: round(fr[k], 4) for k in
+                       ("prefill_cut", "cross_replica_hit_rate",
+                        "migrations", "migration_bytes")})
 EOF

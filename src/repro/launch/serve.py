@@ -1,9 +1,12 @@
 """Serving driver: a reduced model computes real tokens while the MRM
 control plane meters the deployment-size memory system. With --replicas N
 a :class:`ClusterFrontend` fans requests across N engine replicas
-(radix-prefix-affinity routing, shared simulated clock, aggregated fleet
+(fleet prefix-directory routing, shared simulated clock, aggregated fleet
 report). --shared-prefix-tokens K makes the generated traffic share a
-K-token prompt head, exercising radix prefix reuse end to end.
+K-token prompt head, exercising radix prefix reuse end to end;
+--migrate-prefixes additionally lets the directory *move* a hot prefix
+(pages + compute snapshot) to a less-loaded replica at --interconnect-gbps
+instead of queueing every match on its owner.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
       --requests 8 --max-new 16 --kv-tier mrm_rram --weight-tier mrm_rram \
@@ -81,6 +84,15 @@ def main(argv=None):
                     help="tier for hot prefixes ('auto' = placement solve)")
     ap.add_argument("--radix-cold-ttl", type=float, default=None,
                     help="idle seconds before a cold prefix leaf decays")
+    ap.add_argument("--migrate-prefixes", action="store_true",
+                    help="fleet prefix directory migrates a hot prefix to "
+                         "a less-loaded replica instead of queueing on the "
+                         "owner (metered inter-replica transfer)")
+    ap.add_argument("--interconnect-gbps", type=float, default=50.0,
+                    help="inter-replica transfer bandwidth in GBYTES/s — "
+                         "the same unit as the memclass tier "
+                         "read_bw_gbps/write_bw_gbps fields (the "
+                         "prefix-migration cost model)")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced
@@ -117,7 +129,9 @@ def main(argv=None):
             eng.submit(gen_prompt(), max_new_tokens=args.max_new)
         rep = eng.run_until_idle()
     else:
-        fe = ClusterFrontend(engines)
+        fe = ClusterFrontend(engines,
+                             migrate_prefixes=args.migrate_prefixes,
+                             interconnect_gbps=args.interconnect_gbps)
         for i in range(args.requests):
             fe.submit(gen_prompt(), max_new_tokens=args.max_new,
                       session_key=f"session-{i % max(args.sessions, 1)}")

@@ -1,7 +1,7 @@
-from repro.serving.cluster import ClusterFrontend
+from repro.serving.cluster import ClusterFrontend, PrefixDirectory
 from repro.serving.engine import (ComputeBackend, EngineConfig, MemoryPlane,
-                                  PrefillChunk, ServeEngine, StepPlan,
-                                  StepReport, choose_hot_tier,
+                                  PrefillChunk, ServeEngine, SnapshotHandle,
+                                  StepPlan, StepReport, choose_hot_tier,
                                   latency_percentiles)
 from repro.serving.kv_cache import PagedKVManager, PressureStats, RadixStats
 from repro.serving.radix import PrefixMatch, RadixKVIndex, RadixNode
@@ -10,5 +10,6 @@ from repro.serving.scheduler import ContinuousBatchScheduler, Request
 __all__ = ["EngineConfig", "ServeEngine", "ComputeBackend", "MemoryPlane",
            "StepPlan", "StepReport", "PrefillChunk", "PagedKVManager",
            "PressureStats", "RadixStats", "ContinuousBatchScheduler",
-           "Request", "ClusterFrontend", "RadixKVIndex", "RadixNode",
-           "PrefixMatch", "choose_hot_tier", "latency_percentiles"]
+           "Request", "ClusterFrontend", "PrefixDirectory", "RadixKVIndex",
+           "RadixNode", "PrefixMatch", "SnapshotHandle", "choose_hot_tier",
+           "latency_percentiles"]

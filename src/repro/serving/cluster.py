@@ -1,50 +1,167 @@
-"""Multi-replica cluster frontend over per-replica MRM control planes.
+"""Multi-replica cluster frontend over per-replica MRM control planes,
+with a fleet-level prefix directory and cross-replica KV migration.
 
 The paper's deployment unit is a fleet: many accelerators, each with its
 own MRM stack, serving a shared request population (§2.2 "millions of
-users"). :class:`ClusterFrontend` fans requests across N
-:class:`~repro.serving.engine.ServeEngine` replicas:
+users"). PR 2 made prefix reuse real *inside* one replica; this module
+turns the per-replica radix trees into one coherent fleet memory plane
+(DESIGN.md §7): KV state is read-dominated and rewrite-tolerant, so
+*moving* a hot prefix's pages between replicas is cheap relative to
+recomputing them cold.
 
-- **radix-affinity routing** — a request is routed to the replica whose
-  radix prefix tree already holds the longest page-aligned prefix of its
-  prompt (so the hit is real: shared pages attach, prefill compute is
-  skipped). This replaces whole-key sha1 hashing — a prompt that shares a
-  system prompt or conversation history finds the replica that served it,
-  whatever its session key;
-- **session-affinity fallback** — requests carrying a ``session_key`` with
-  no radix match anywhere go to their sticky replica (first pick recorded),
-  so a user's *first* follow-up still lands where their prefix will be;
-- **least-loaded routing** — keyless, matchless requests go to the replica
-  with the fewest queued+resident requests; ties break on KV capacity
-  pressure (live KV bytes vs the KV tier's capacity), so a replica with a
-  saturated KV tier no longer wins ties on queue length alone;
-- **shared simulated clock** — replicas execute a step in parallel; a
-  cluster round lasts as long as the slowest replica, and lagging replicas
-  advance to the fleet clock (servicing their refresh deadlines while
-  "waiting");
-- **aggregated fleet report** — tokens, per-tier bytes, energy,
-  capacity-pressure resolutions, prefix-reuse counters and pooled TTFT/ITL
-  percentiles summed across replicas, with the per-replica breakdown
-  attached (conservation is testable).
+- **PrefixDirectory** — a fleet-level map from page-aligned prefix keys
+  (position-space token tuples) to the replicas whose radix trees hold
+  them. Ownership is registered when a replica publishes a path
+  (``register_prefix`` / ``adopt_prefix``) and invalidated when a leaf
+  leaves a tree (pressure eviction, watermark, cold decay) — the evicted
+  run's prefixes are dropped, ancestor prefixes stay owned.
+- **route-first, migrate-on-miss** — :meth:`ClusterFrontend.route`
+  consults the directory: the least-loaded owner of the longest
+  registered prefix wins while it has headroom; when every owner is
+  overloaded (load gap above ``migrate_load_gap`` vs the least-loaded
+  replica) the donor's pages and compute snapshot are *pulled* into the
+  target replica as a metered inter-replica transfer — bytes charged at
+  ``interconnect_gbps`` into the simulated clock, page writes metered
+  against the receiving tiers, retention re-programmed on arrival (a
+  donor-hot prefix lands in the receiver's hot tier at long retention).
+- **session-affinity fallback** — requests carrying a ``session_key``
+  with no directory match go to their sticky replica;
+- **least-loaded routing** — keyless, matchless requests go to the
+  replica with the fewest queued+resident requests; ties break on the KV
+  tier's physical occupancy (live session pages, directory-owned
+  radix-resident prefixes and metered snapshots all count, so a replica
+  stuffed with pinned shared prefixes is not treated as empty);
+- **shared simulated clock** — a cluster round lasts as long as the
+  slowest replica; lagging replicas advance to the fleet clock;
+- **aggregated fleet report** — tokens, per-tier bytes, energy, pressure
+  resolutions, prefix-reuse and interconnect counters, pooled TTFT/ITL
+  percentiles, with the per-replica breakdown attached (conservation is
+  testable).
 """
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.serving.engine import ServeEngine, latency_percentiles
+from repro.serving.radix import _flat
+
+
+class PrefixDirectory:
+    """Fleet-level map: page-aligned prefix key -> owning replicas.
+
+    Keys are position-space token tuples (sentinel meta prefix + prompt
+    tokens, exactly the radix tree's keys) at page granularity, so a
+    lookup agrees with what ``RadixKVIndex.match_len`` would find on the
+    owner. Every page-aligned prefix of a registered path gets an entry
+    (idempotent), which makes invalidation exact: an evicted leaf drops
+    ownership of precisely the run it covered."""
+
+    def __init__(self, page_tokens: int):
+        if page_tokens < 1:
+            raise ValueError("page_tokens must be >= 1")
+        self.page_tokens = page_tokens
+        self.owners: Dict[tuple, Set[int]] = {}
+        self.registrations = 0
+        self.invalidations = 0
+
+    @staticmethod
+    def _key(tokens: Sequence) -> list:
+        return _flat(tokens)
+
+    def register(self, replica: int, tokens: Sequence) -> None:
+        """Replica ``replica`` now holds every page-aligned prefix of
+        ``tokens`` in its radix tree."""
+        flat = self._key(tokens)
+        pt = self.page_tokens
+        n = (len(flat) // pt) * pt
+        for end in range(pt, n + 1, pt):
+            self.owners.setdefault(tuple(flat[:end]), set()).add(replica)
+        if n:
+            self.registrations += 1
+
+    def invalidate(self, replica: int, tokens: Sequence,
+                   tail_tokens: int) -> None:
+        """A leaf covering the last ``tail_tokens`` of path ``tokens``
+        left ``replica``'s tree: drop its ownership of the prefixes that
+        run covered (ancestor prefixes remain owned — they are still in
+        the tree)."""
+        flat = self._key(tokens)
+        pt = self.page_tokens
+        n = (len(flat) // pt) * pt
+        start = max(n - tail_tokens, 0)
+        for end in range(start + pt, n + 1, pt):
+            key = tuple(flat[:end])
+            owners = self.owners.get(key)
+            if owners is None:
+                continue
+            owners.discard(replica)
+            if not owners:
+                del self.owners[key]
+        self.invalidations += 1
+
+    def lookup(self, tokens: Sequence) -> Tuple[int, Optional[Set[int]]]:
+        """Longest registered page-aligned prefix of ``tokens``:
+        ``(matched_tokens, owner_replicas)`` — ``(0, None)`` on miss."""
+        flat = self._key(tokens)
+        pt = self.page_tokens
+        n = (len(flat) // pt) * pt
+        for end in range(n, 0, -pt):
+            owners = self.owners.get(tuple(flat[:end]))
+            if owners:
+                return end, owners
+        return 0, None
+
+    def owned_by(self, replica: int) -> int:
+        return sum(1 for o in self.owners.values() if replica in o)
+
+    def n_entries(self) -> int:
+        return len(self.owners)
 
 
 class ClusterFrontend:
-    def __init__(self, engines: List[ServeEngine]):
+    def __init__(self, engines: List[ServeEngine],
+                 migrate_prefixes: bool = False,
+                 interconnect_gbps: float = 50.0,
+                 migrate_load_gap: int = 2,
+                 prefix_affinity: bool = True):
         if not engines:
             raise ValueError("ClusterFrontend needs at least one replica")
+        if interconnect_gbps <= 0:
+            raise ValueError("interconnect_gbps must be > 0")
         self.engines = list(engines)
+        self.migrate_prefixes = migrate_prefixes
+        # GBYTES/s — deliberately the same (historically misnamed) unit as
+        # memclass's read_bw_gbps/write_bw_gbps tier fields
+        self.interconnect_gbps = interconnect_gbps
+        self.migrate_load_gap = migrate_load_gap
+        self.prefix_affinity = prefix_affinity
         self.routes: Dict[str, int] = {}          # session_key -> replica
         self.requests: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, local)
         self._next_rid = 0
         self.steps = 0
         self.radix_routed = 0      # requests placed by prefix affinity
+        self.migrations = 0        # cross-replica prefix transfers
+        self.migrated_tokens = 0   # tokens newly backed on a receiver
+        self.migration_bytes = 0.0  # KV + snapshot bytes over the wire
+        self.migration_s = 0.0      # interconnect time charged
+        self._last_migrated = 0    # tokens grafted for the pending submit
+        # deferred interconnect charges (replica -> seconds): applied
+        # *after* the triggering request is enqueued, so its submitted_at
+        # predates the transfer and its TTFT pays for the migration wait
+        self._pending_transfer: Dict[int, float] = {}
+        # fleet-level prefix directory: every replica's publishes and
+        # evictions flow in through the manager hooks; pre-existing tree
+        # content (engines that served before this frontend) bootstraps in
+        self.directory = PrefixDirectory(engines[0].ecfg.page_tokens)
+        for i, e in enumerate(self.engines):
+            e.kv.on_prefix_insert = (
+                lambda tokens, _i=i: self.directory.register(_i, tokens))
+            e.kv.on_prefix_evict = (
+                lambda tokens, tail, _i=i:
+                    self.directory.invalidate(_i, tokens, tail))
+            for node in e.kv.radix.nodes():
+                self.directory.register(i, e.kv.radix.full_key(node))
 
     # ------------------------------------------------------------------
     @property
@@ -55,46 +172,118 @@ class ClusterFrontend:
     def idle(self) -> bool:
         return all(e.sched.idle for e in self.engines)
 
-    def _load_key(self, i: int) -> tuple:
-        """Replica load for routing: queue+resident first, then KV capacity
-        pressure (live KV bytes vs the KV tier's capacity) so a saturated
-        KV tier loses ties, then index for determinism."""
+    def _load(self, i: int) -> int:
         e = self.engines[i]
-        load = len(e.sched.queue) + len(e.sched.active)
-        cap = e.mem.devices[e.ecfg.kv_tier].capacity
-        kv_pressure = e.kv.live_kv_bytes() / max(cap, 1.0)
-        return (load, round(kv_pressure, 9), i)
+        return len(e.sched.queue) + len(e.sched.active)
+
+    def _load_key(self, i: int) -> tuple:
+        """Replica load for routing: queue+resident first, then the KV
+        tier's *physical* occupancy (allocator utilization: live session
+        pages, directory-owned radix-resident prefixes AND metered
+        snapshots all occupy it) — so a replica stuffed with pinned hot
+        prefixes loses ties to an equally-queued replica with free KV —
+        then index for determinism. O(1) per replica: no session or tree
+        walk on the routing path."""
+        e = self.engines[i]
+        return (self._load(i),
+                round(e.mem.utilization(e.ecfg.kv_tier), 9), i)
+
+    # -- the directory protocol: route first, migrate on miss ----------
+    def _migrate(self, donor: int, target: int, key) -> int:
+        """Pull the donor's published prefix (pages + compute snapshot)
+        into the target replica as a metered inter-replica transfer.
+        Returns the tokens now matched on the target (0 = nothing moved)."""
+        exp = self.engines[donor].export_prefix(key)
+        if exp is None:
+            return 0
+        e = self.engines[target]
+        imp = e.import_prefix(exp["tokens"], caches=exp["caches"],
+                              hot=exp["hot"], hits=exp["hits"])
+        if imp["total_tokens"] == 0:
+            return 0
+        moved = (imp["new_tokens"] * e.kv.kv_bytes_token
+                 + imp["snapshot_bytes"])
+        if moved > 0:
+            # the transfer occupies the interconnect: the receiving
+            # replica's clock advances by bytes / interconnect bandwidth
+            # (refresh deadlines serviced while it waits). The charge is
+            # deferred until the triggering request is enqueued so its
+            # TTFT includes the migration wait (see _flush_transfer).
+            transfer_s = moved / (self.interconnect_gbps * 1e9)
+            self._pending_transfer[target] = (
+                self._pending_transfer.get(target, 0.0) + transfer_s)
+            self.migrations += 1
+            self.migrated_tokens += imp["new_tokens"]
+            self.migration_bytes += moved
+            self.migration_s += transfer_s
+        return imp["total_tokens"]
+
+    def _flush_transfer(self, i: int) -> None:
+        t = self._pending_transfer.pop(i, 0.0)
+        if t > 0:
+            self.engines[i].mem.advance(t)
+
+    def _route_by_prefix(self, prompt_tokens: list,
+                         session_key: Optional[str]) -> Optional[int]:
+        """Directory consult: the least-loaded owner of the longest
+        registered prefix wins while it has headroom; otherwise the
+        prefix is migrated to the least-loaded replica and the request
+        follows it."""
+        if not self.prefix_affinity:
+            return None
+        key = self.engines[0].radix_key_for(prompt_tokens)
+        if key is None:
+            return None
+        matched, owners = self.directory.lookup(key)
+        if not matched or not owners:
+            return None
+        live = [i for i in owners if i < len(self.engines)]
+        if not live:
+            return None
+        choice = min(live, key=self._load_key)
+        if self.migrate_prefixes and len(self.engines) > 1:
+            least = min(range(len(self.engines)), key=self._load_key)
+            if (least not in live and
+                    self._load(choice) - self._load(least)
+                    > self.migrate_load_gap):
+                got = self._migrate(choice, least, key)
+                if got > 0:
+                    self._last_migrated = got
+                    choice = least
+        self.radix_routed += 1
+        if session_key is not None:
+            self.routes[str(session_key)] = choice
+        return choice
 
     def route(self, session_key: Optional[str] = None,
               prompt_tokens: Optional[list] = None) -> int:
-        # 1) radix-match-length affinity: the replica already holding the
-        #    longest prefix of this prompt wins (load breaks ties)
+        # 1) fleet prefix directory: owner affinity, migrate on overload
         if prompt_tokens is not None:
-            matches = [e.prefix_match_len(prompt_tokens) for e in self.engines]
-            best = max(matches)
-            if best > 0:
-                i = min((i for i, m in enumerate(matches) if m == best),
-                        key=self._load_key)
-                self.radix_routed += 1
-                if session_key is not None:
-                    self.routes[str(session_key)] = i
+            i = self._route_by_prefix(prompt_tokens, session_key)
+            if i is not None:
                 return i
         # 2) sticky session fallback (the user's first follow-up lands
-        #    where their prefix will be, before the tree has seen it)
+        #    where their prefix will be, before the directory has seen it)
         if session_key is not None:
             key = str(session_key)
             if key not in self.routes:
                 h = int(hashlib.sha1(key.encode()).hexdigest(), 16)
                 self.routes[key] = h % len(self.engines)
             return self.routes[key]
-        # 3) least-loaded (KV-pressure-aware)
+        # 3) least-loaded (KV-pressure-aware, hot-prefix bytes included)
         return min(range(len(self.engines)), key=self._load_key)
 
     def submit(self, prompt_tokens: list, max_new_tokens: int,
                session_key: Optional[str] = None) -> int:
         """Route and enqueue a request; returns a cluster-wide request id."""
+        self._last_migrated = 0
         replica = self.route(session_key, prompt_tokens)
-        local = self.engines[replica].submit(prompt_tokens, max_new_tokens)
+        local = self.engines[replica].submit(
+            prompt_tokens, max_new_tokens,
+            migrated_tokens=self._last_migrated)
+        # charge the migration this submit triggered *after* enqueue:
+        # submitted_at predates the transfer, so TTFT pays the wait
+        self._flush_transfer(replica)
         rid = self._next_rid
         self._next_rid += 1
         self.requests[rid] = (replica, local)
@@ -111,6 +300,8 @@ class ClusterFrontend:
     def step(self) -> dict:
         """One cluster round: every busy replica runs an engine step in
         parallel; the fleet clock advances to the slowest replica."""
+        for i in list(self._pending_transfer):
+            self._flush_transfer(i)   # migrations via direct route() calls
         busy = [e for e in self.engines if not e.sched.idle]
         for e in busy:
             e.step()
@@ -157,12 +348,27 @@ class ClusterFrontend:
             "pressure": pressure,
             "dropped_allocs": sum(r["dropped_allocs"] for r in reps),
             "prefix_hits": sum(r["prefix_hits"] for r in reps),
+            "prefix_hits_migrated": sum(e.kv.prefix_hits_migrated
+                                        for e in self.engines),
             "prefix_tokens_reused": sum(r["prefix_tokens_reused"] for r in reps),
             "prefill_tokens_computed": sum(r["prefill_tokens_computed"]
                                            for r in reps),
             "prefill_tokens_skipped": sum(r["prefill_tokens_skipped"]
                                           for r in reps),
+            "snapshot_bytes": sum(r["snapshot_bytes"] for r in reps),
             "radix_routed": self.radix_routed,
+            "directory": {
+                "entries": self.directory.n_entries(),
+                "registrations": self.directory.registrations,
+                "invalidations": self.directory.invalidations,
+            },
+            "interconnect": {
+                "gbps": self.interconnect_gbps,
+                "migrations": self.migrations,
+                "migrated_tokens": self.migrated_tokens,
+                "migration_bytes": self.migration_bytes,
+                "migration_s": self.migration_s,
+            },
             "latency": latency_percentiles(records),
             "per_replica": reps,
         }

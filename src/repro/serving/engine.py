@@ -127,6 +127,32 @@ class StepReport:
 
 
 @dataclass
+class SnapshotHandle:
+    """A donor slot's ring-cache snapshot with its metered backing region.
+
+    The compute-plane arrays used to be held as unmetered Python-side JAX
+    arrays (ROADMAP: snapshot memory accounting); they are now carved from
+    the KV tier budget — a metered region write at publication (actual
+    array bytes, compute scale: the acct-scale KV bytes already live in
+    the paged manager, metering both would double-count the same state),
+    released when the owning radix node leaves the tree. The manager
+    releases via duck-typed ``release()`` so it stays payload-agnostic."""
+    caches: object
+    nbytes: float
+    mem: MemorySystem
+    region_id: Optional[int]
+
+    def release(self) -> None:
+        if self.region_id is not None:
+            self.mem.release_region(self.region_id)
+            self.region_id = None
+
+    @property
+    def live(self) -> bool:
+        return self.region_id is not None
+
+
+@dataclass
 class _SlotPrefill:
     """Continuation state of a (possibly radix-shortened) chunked prefill:
     how far into the prompt the slot's caches already reach — a prefix hit
@@ -405,6 +431,8 @@ class ServeEngine:
         self.prefill_tokens_computed = 0   # tokens that ran through the model
         self.prefill_tokens_skipped = 0    # tokens a radix hit skipped
         self.prefix_compute_hits = 0       # admissions seeded from a donor
+        self.snapshots_published = 0       # metered donor snapshots created
+        self._snap_spec = None             # cached foreign-snapshot template
 
     # -- legacy surface (kept stable for callers/tests) ----------------
     @property
@@ -439,7 +467,12 @@ class ServeEngine:
         self.memplane.redeploy_weights()
 
     # ------------------------------------------------------------------
-    def submit(self, prompt_tokens: list, max_new_tokens: int) -> int:
+    def submit(self, prompt_tokens: list, max_new_tokens: int,
+               migrated_tokens: int = 0) -> int:
+        """``migrated_tokens`` marks how many leading tokens a cross-replica
+        migration just grafted into this replica's tree for this request —
+        the scheduler counts them as a match for prefix-aware admission
+        even if the grafted leaf is evicted before the request is picked."""
         if (self.ecfg.chunk_tokens is None and
                 len(prompt_tokens) > self.ecfg.max_cache_len):
             raise ValueError(
@@ -449,7 +482,8 @@ class ServeEngine:
         rid = len(self.outputs)
         self.outputs[rid] = []
         self.sched.submit(Request(rid, prompt_tokens, max_new_tokens,
-                                  self.mem.now))
+                                  self.mem.now,
+                                  migrated_tokens=migrated_tokens))
         return rid
 
     # ------------------------------------------------------------------
@@ -509,15 +543,23 @@ class ServeEngine:
             self._prep_cache[req.request_id] = ent
         return ent
 
+    def radix_key_for(self, prompt_tokens: list) -> Optional[np.ndarray]:
+        """Position-space radix key for a raw prompt (sentinel meta prefix
+        + unpadded tokens) — the key the tree, the fleet prefix directory
+        and cross-replica migration all share. None with prefix caching
+        off."""
+        if not self.ecfg.prefix_caching:
+            return None
+        toks = np.asarray(prompt_tokens, np.int32)
+        padded, _ = self._pad_plan(toks)
+        return self._radix_key(padded)
+
     def prefix_match_len(self, prompt_tokens: list) -> int:
         """Longest radix-matchable prefix (in position-space tokens) this
         engine holds for `prompt_tokens` — side-effect-free; the cluster
         router and prefix-aware scheduler score with this."""
-        if not self.ecfg.prefix_caching:
-            return 0
-        toks = np.asarray(prompt_tokens, np.int32)
-        padded, _ = self._pad_plan(toks)
-        return self.kv.match_len(self._radix_key(padded))
+        key = self.radix_key_for(prompt_tokens)
+        return 0 if key is None else self.kv.match_len(key)
 
     def _compute_reuse(self, match: PrefixMatch, padded: np.ndarray) -> int:
         """Tokens of `padded` the compute plane may skip: requires a donor
@@ -545,7 +587,7 @@ class ServeEngine:
         if reuse:
             # the hit is real in the compute plane: seed the slot's ring
             # caches from the donor snapshot and extend from the boundary
-            self.backend.seed_slot(slot, match.payload)
+            self.backend.seed_slot(slot, match.payload.caches)
             self.prefix_compute_hits += 1
             self.prefill_tokens_skipped += reuse
             req.prompt_pos = min(reuse, req.prompt_len)
@@ -584,6 +626,98 @@ class ServeEngine:
     def _sched_match_len(self, req: Request) -> int:
         _, _, key = self._prep(req)
         return self.kv.match_len(key)
+
+    # -- compute-plane snapshots & cross-replica migration -------------
+    @staticmethod
+    def _tree_nbytes(caches) -> float:
+        return float(sum(a.size * a.dtype.itemsize
+                         for a in jax.tree.leaves(caches)))
+
+    def _publish_snapshot(self, caches) -> Optional[SnapshotHandle]:
+        """Carve a donor ring-cache snapshot out of the KV tier budget
+        (metered write). If the tier has no headroom the snapshot is not
+        published — the prefix still shares pages, it just cannot donate
+        compute. Never a pressure-ledger event: a snapshot is an optional
+        acceleration, not required state."""
+        nbytes = self._tree_nbytes(caches)
+        rid = self.mem.write_region(self.ecfg.kv_tier, "kv:snapshot", nbytes,
+                                    expected_lifetime_s=self.ecfg.expected_session_s)
+        if rid is None:
+            return None
+        self.snapshots_published += 1
+        return SnapshotHandle(caches, nbytes, self.mem, rid)
+
+    def _snapshot_compatible(self, caches) -> bool:
+        """A foreign snapshot is seedable only when its tree matches this
+        backend's per-slot cache template exactly (identical replicas).
+        The template spec (structure + leaf shapes/dtypes) is derived once
+        from the resident caches — no per-import slot materialization."""
+        if self._snap_spec is None:
+            self._snap_spec = (
+                jax.tree.structure(self.backend.caches),
+                [((a.shape[0], 1) + a.shape[2:], a.dtype)
+                 for a in jax.tree.leaves(self.backend.caches)])
+        structure, leaves = self._snap_spec
+        if structure != jax.tree.structure(caches):
+            return False
+        return all(a.shape == shape and a.dtype == dtype
+                   for a, (shape, dtype) in zip(jax.tree.leaves(caches),
+                                                leaves))
+
+    def export_prefix(self, key_tokens) -> Optional[dict]:
+        """Donor half of a cross-replica prefix migration: match the
+        longest published prefix of ``key_tokens`` (position-space), read
+        its pages and covering snapshot out of this replica's tiers
+        (metered reads — the transfer is not free for the donor), and
+        return the page metadata + compute snapshot for the receiver."""
+        if not self.ecfg.prefix_caching:
+            return None
+        # non-bumping walk: a migration probe is not local reuse — it must
+        # not feed the donor's hit counts / hot promotion / LRU order (the
+        # traffic is being moved AWAY) nor inflate the hit count it exports
+        m = self.kv.radix.match(key_tokens, self.mem.now,
+                                bump_hits=False, bump_lru=False)
+        if m.tokens == 0:
+            return None
+        kv_bytes = 0.0
+        for p in m.pages:
+            nb = p.n_tokens * self.kv.kv_bytes_token
+            if p.region_id is not None:
+                self.mem.read_region(p.region_id, nb, sequential=True)
+            kv_bytes += nb
+        caches, snap_bytes = None, 0.0
+        if isinstance(m.payload, SnapshotHandle) and m.payload.live:
+            self.mem.read_region(m.payload.region_id, m.payload.nbytes)
+            caches, snap_bytes = m.payload.caches, m.payload.nbytes
+        return {"tokens": np.asarray(key_tokens)[:m.tokens],
+                "n_tokens": m.tokens, "kv_bytes": kv_bytes,
+                "caches": caches, "snapshot_bytes": snap_bytes,
+                "hot": m.node.hot, "hits": m.node.hits}
+
+    def import_prefix(self, tokens, caches=None, hot: bool = False,
+                      hits: int = 0) -> dict:
+        """Receiver half: adopt the pages (metered writes into this
+        replica's tiers; a donor-hot prefix lands in the hot tier with
+        long retention — placement re-solved on arrival) and re-publish
+        the donor's compute snapshot under a locally-metered handle."""
+        new_tokens, total, node = self.kv.adopt_prefix(tokens, hot=hot,
+                                                       hits=hits)
+        snap_bytes = 0.0
+        if (node is not None and node.payload is None and caches is not None
+                and tfm.supports_extend(self.cfg)
+                and self._snapshot_compatible(caches)):
+            handle = self._publish_snapshot(caches)
+            if handle is not None:
+                node.payload = handle
+                snap_bytes = handle.nbytes
+        return {"new_tokens": new_tokens, "total_tokens": total,
+                "snapshot_bytes": snap_bytes}
+
+    def live_snapshot_bytes(self) -> float:
+        """Bytes of metered donor snapshots currently resident in the KV
+        tier (the engine-report ``snapshot_bytes`` figure)."""
+        return sum(n.payload.nbytes for n in self.kv.radix.nodes()
+                   if isinstance(n.payload, SnapshotHandle) and n.payload.live)
 
     def _account_chunk_kv(self, st: _SlotPrefill, ck: PrefillChunk) -> None:
         """This chunk's tokens enter the paged KV — unless a shared prefix
@@ -628,10 +762,14 @@ class ServeEngine:
                     can_donate = (tfm.supports_extend(self.cfg) and
                                   self.backend.prefix_len() + len(st.padded)
                                   <= self._min_ring_len())
-                    snap = (self.backend.snapshot_slot(ck.slot)
-                            if can_donate else None)
+                    # factory, not value: the metered snapshot region is
+                    # only written if the radix node's payload slot is free
+                    slot = ck.slot
+                    snap_fn = ((lambda: self._publish_snapshot(
+                                    self.backend.snapshot_slot(slot)))
+                               if can_donate else None)
                     self.kv.register_prefix(req.request_id, st.key,
-                                            payload=snap)
+                                            payload=snap_fn)
                 self.sched.mark_decoding(ck.slot)
                 del self._inflight[ck.slot]
 
@@ -695,10 +833,13 @@ class ServeEngine:
         reads = sum(d.stats.read_bytes for d in self.mem.devices.values())
         writes = sum(d.stats.write_bytes for d in self.mem.devices.values())
         steady_writes = max(writes - self.weight_bytes, 1e-9)
+        snapshot_bytes = self.live_snapshot_bytes()
         prefix = self.kv.prefix_report()
         prefix["compute_hits"] = self.prefix_compute_hits
         prefix["tokens_skipped_compute"] = self.prefill_tokens_skipped
         prefix["hot_tier"] = self.memplane.hot_tier
+        prefix["snapshots_published"] = self.snapshots_published
+        prefix["snapshot_bytes"] = snapshot_bytes
         return {
             "steps": self.steps,
             "tokens_generated": self.tokens_generated,
@@ -709,6 +850,7 @@ class ServeEngine:
             "steady_rw_ratio": reads / steady_writes,
             "memory": rep,
             "kv_live_pages": self.kv.live_pages(),
+            "snapshot_bytes": snapshot_bytes,
             "dropped_allocs": self.kv.dropped_allocs,
             "pressure": self.kv.pressure_report(),
             "prefill_chunks": self.prefill_chunks_run,

@@ -50,7 +50,7 @@ live* and meters the device traffic.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.simulator import MemorySystem
@@ -114,6 +114,8 @@ class RadixStats:
     migrated_pages: int = 0        # pages moved into the hot tier
     cold_decays: int = 0           # cold leaves dropped after cold_ttl_s
     cold_spilled_pages: int = 0    # cold pages demoted to the spill tier
+    adopted_pages: int = 0         # pages grafted from another replica
+    adopted_tokens: int = 0        # tokens those pages cover
 
     def as_dict(self) -> dict:
         return {
@@ -122,6 +124,8 @@ class RadixStats:
             "migrated_pages": self.migrated_pages,
             "cold_decays": self.cold_decays,
             "cold_spilled_pages": self.cold_spilled_pages,
+            "adopted_pages": self.adopted_pages,
+            "adopted_tokens": self.adopted_tokens,
         }
 
 
@@ -165,6 +169,12 @@ class PagedKVManager:
         self.radix = RadixKVIndex(page_tokens)
         self.prefix_hits = 0
         self.prefix_tokens_reused = 0
+        self.prefix_hits_migrated = 0      # hits landing on a grafted path
+        # fleet-directory hooks (ClusterFrontend wires these): fired with
+        # the full position-space token path on publish, and with
+        # (full_path, tail_tokens) when a leaf leaves the tree
+        self.on_prefix_insert: Optional[Callable[[Sequence], None]] = None
+        self.on_prefix_evict: Optional[Callable[[tuple, int], None]] = None
 
     # -- prefix tree ---------------------------------------------------
     def match_prefix(self, tokens: Sequence,
@@ -201,6 +211,12 @@ class PagedKVManager:
             self.radix.lock(match.node)
             self.prefix_hits += 1
             self.prefix_tokens_reused += s.tokens
+            node = match.node
+            while node is not None:
+                if node.migrated:   # the hit landed on cross-replica data
+                    self.prefix_hits_migrated += 1
+                    break
+                node = node.parent
         return s
 
     def register_prefix(self, session_id: int, tokens: Sequence,
@@ -209,8 +225,11 @@ class PagedKVManager:
         under the token path (call after the prompt's KV is appended).
         ``tokens[i*page_tokens:(i+1)*page_tokens]`` must be what the i-th
         page covers. The session's pin moves to the deepest node so its
-        freshly published prefix cannot be evicted under it. Returns the
-        number of newly inserted pages."""
+        freshly published prefix cannot be evicted under it. ``payload``
+        may be the compute handle itself or a zero-arg factory for one
+        (resolved only if the deepest node's payload slot is free — the
+        engine's snapshots carry metered regions that must not be written
+        for nothing). Returns the number of newly inserted pages."""
         s = self.sessions[session_id]
         run: List[Page] = []
         for p in s.pages:
@@ -220,10 +239,21 @@ class PagedKVManager:
                 break
         n = min(len(run), len(tokens) // self.page_tokens)
         if n == 0:
+            if not callable(payload):
+                self._release_payload_obj(payload)
             return 0
         _, inserted, node = self.radix.insert(
-            tokens[:n * self.page_tokens], run[:n], self.mem.now,
-            payload=payload)
+            tokens[:n * self.page_tokens], run[:n], self.mem.now)
+        if payload is not None and node is not self.radix.root \
+                and node.payload is None:
+            # a callable payload is a factory: resolved only when the node
+            # actually takes it, so a metered snapshot region is never
+            # written just to be released (occupied payload slot)
+            obj = payload() if callable(payload) else payload
+            if obj is not None:
+                node.payload = obj
+        elif not callable(payload):
+            self._release_payload_obj(payload)
         for p in inserted:
             p.refcount += 1  # the tree holds its own reference
         if node is not self.radix.root:
@@ -231,7 +261,99 @@ class PagedKVManager:
             if s.radix_node is not None:
                 self.radix.unlock(s.radix_node)
             s.radix_node = node
+            self._notify_insert(tokens[:n * self.page_tokens])
         return len(inserted)
+
+    def adopt_prefix(self, tokens: Sequence, hot: bool = False,
+                     hits: int = 0) -> Tuple[int, int, Optional[RadixNode]]:
+        """Adopt a foreign page-aligned prefix (cross-replica migration):
+        allocate backing regions on *this* replica — metered writes into
+        the hot tier with long retention when the donor observed the
+        prefix hot (retention re-programmed on arrival), else the KV tier
+        at session retention — and graft the path into the radix tree,
+        tree-owned (refcount 1). Allocation failures fall back to leaf-LRU
+        eviction and then truncate the adoption at a page boundary, so the
+        ledger never records an unresolved event for an optional transfer.
+        Returns ``(new_tokens, total_tokens, node)``: tokens newly backed
+        here, total matched+adopted tokens, and the deepest node."""
+        pt = self.page_tokens
+        n = (len(tokens) // pt) * pt
+        if n == 0:
+            return 0, 0, None
+        # match (not match_len): splits at the boundary so the duplicate
+        # path can be *pinned* while we allocate — the eviction fallback
+        # below must never free the very prefix the graft extends. No hit
+        # bump: the arrival itself is not reuse (the first borrower's
+        # open_session is)
+        m = self.radix.match(tokens[:n], self.mem.now, bump_hits=False)
+        dup = m.tokens
+        self.radix.lock(m.node)
+        tier = self.hot_tier if (hot and self.hot_tier) else self.tier
+        life = self.hot_retention_s if hot else self.expected_session_s
+        new_pages: List[Page] = []
+        try:
+            for _start in range(dup, n, pt):
+                nbytes = pt * self.kv_bytes_token
+                rid = self.mem.write_region(tier, "prefix:adopt", nbytes,
+                                            expected_lifetime_s=life)
+                used = tier
+                if rid is None and tier != self.tier:
+                    rid = self.mem.write_region(self.tier, "prefix:adopt",
+                                                nbytes,
+                                                expected_lifetime_s=life)
+                    used = self.tier
+                if rid is None and self.policy in ("evict-lru", "spill"):
+                    # only policies that allow eviction may displace local
+                    # prefixes for an inbound transfer; 'none'/'recompute'
+                    # truncate instead (the transfer is optional). The
+                    # arrival retention survives this path too.
+                    rid = self._evict_and_retry("prefix:adopt", nbytes,
+                                                lifetime_s=life)
+                    used = self.tier
+                if rid is None:
+                    break        # page-aligned partial adoption
+                p = Page(self._next_page, rid, pt, sealed=True, refcount=0,
+                         tier=used)
+                self._next_page += 1
+                new_pages.append(p)
+        finally:
+            self.radix.unlock(m.node)
+        total = dup + len(new_pages) * pt
+        if total == 0:
+            return 0, 0, None
+        pages_full: List[Optional[Page]] = [None] * (dup // pt) + new_pages
+        dup2, inserted, node = self.radix.graft(
+            tokens[:total], pages_full, self.mem.now, hits=hits, hot=hot)
+        assert dup2 == dup, "graft walk disagrees with match_len"
+        for p in inserted:
+            p.refcount += 1    # the tree holds its own reference
+        self.radix_stats.adopted_pages += len(inserted)
+        self.radix_stats.adopted_tokens += len(inserted) * pt
+        if node is not self.radix.root:
+            self._notify_insert(tokens[:total])
+        return len(inserted) * pt, total, (None if node is self.radix.root
+                                           else node)
+
+    # -- fleet-directory notification ----------------------------------
+    def _notify_insert(self, tokens: Sequence) -> None:
+        if self.on_prefix_insert is not None:
+            self.on_prefix_insert(tokens)
+
+    @staticmethod
+    def _release_payload_obj(payload: Any) -> None:
+        """Compute-plane payloads may carry a metered backing region (the
+        engine's SnapshotHandle); release it when the payload dies."""
+        if payload is not None and hasattr(payload, "release"):
+            payload.release()
+
+    def _on_leaf_removed(self, victim: RadixNode) -> None:
+        """A leaf left the tree (pressure eviction or cold decay): release
+        its metered compute snapshot and invalidate fleet-directory
+        ownership of the token run it covered."""
+        self._release_payload_obj(victim.payload)
+        victim.payload = None
+        if self.on_prefix_evict is not None and victim.evicted_path is not None:
+            self.on_prefix_evict(victim.evicted_path, victim.n_tokens)
 
     # -- reuse -> retention programming --------------------------------
     def _maybe_promote(self, node: Optional[RadixNode]) -> None:
@@ -284,6 +406,7 @@ class PagedKVManager:
             if self.spill_tier and self.spill_tier != self.tier:
                 self._spill_cold_leaf(leaf, now)
             elif self.radix.pop_leaf(leaf) is not None:
+                self._on_leaf_removed(leaf)
                 for page in leaf.pages:
                     self._unref_page(page)
                 self.radix_stats.cold_decays += 1
@@ -321,18 +444,23 @@ class PagedKVManager:
         victim = self.radix.pop_lru_leaf()
         if victim is None:
             return False
+        self._on_leaf_removed(victim)
         for page in victim.pages:
             self._unref_page(page)
         self.pressure.prefix_evictions += 1
         return True
 
-    def _alloc(self, owner: str, nbytes: float, tier: str) -> Optional[int]:
-        return self.mem.write_region(tier, owner, nbytes,
-                                     expected_lifetime_s=self.expected_session_s)
+    def _alloc(self, owner: str, nbytes: float, tier: str,
+               lifetime_s: Optional[float] = None) -> Optional[int]:
+        return self.mem.write_region(
+            tier, owner, nbytes,
+            expected_lifetime_s=(self.expected_session_s if lifetime_s is None
+                                 else lifetime_s))
 
-    def _evict_and_retry(self, owner: str, nbytes: float) -> Optional[int]:
+    def _evict_and_retry(self, owner: str, nbytes: float,
+                         lifetime_s: Optional[float] = None) -> Optional[int]:
         while self._evict_one_prefix_leaf():
-            rid = self._alloc(owner, nbytes, self.tier)
+            rid = self._alloc(owner, nbytes, self.tier, lifetime_s=lifetime_s)
             if rid is not None:
                 return rid
         return None
@@ -466,9 +594,18 @@ class PagedKVManager:
         return sum(len(s.pages) for s in self.sessions.values())
 
     def live_kv_bytes(self) -> float:
-        """Bytes of KV the live sessions pin (capacity-pressure signal for
-        the cluster router)."""
+        """Bytes of KV the live sessions pin. (Reporting/diagnostics; the
+        cluster router's load tiebreak reads the tier's allocator
+        utilization, which counts these pages physically.)"""
         return sum(s.tokens for s in self.sessions.values()) * self.kv_bytes_token
+
+    def radix_kv_bytes(self) -> float:
+        """Bytes of KV resident in the radix prefix tree (directory-owned
+        hot prefixes included) — a prefix_report figure. The cluster
+        router does not walk the tree: its tiebreak reads the tier's
+        allocator utilization, which already counts these pages."""
+        return sum(p.n_tokens for node in self.radix.nodes()
+                   for p in node.pages) * self.kv_bytes_token
 
     def live_tokens(self) -> int:
         return sum(s.tokens for s in self.sessions.values())
@@ -481,10 +618,12 @@ class PagedKVManager:
     def prefix_report(self) -> dict:
         rep = {
             "hits": self.prefix_hits,
+            "hits_migrated": self.prefix_hits_migrated,
             "tokens_reused": self.prefix_tokens_reused,
             "radix_nodes": self.radix.n_nodes(),
             "radix_tokens": self.radix.total_tokens(),
             "radix_pages": self.radix.total_pages(),
+            "radix_kv_bytes": self.radix_kv_bytes(),
             "evictions": self.pressure.prefix_evictions,
         }
         rep.update(self.radix_stats.as_dict())

@@ -46,7 +46,8 @@ def _page_key(tokens, start: int, page_tokens: int) -> tuple:
 
 class RadixNode:
     __slots__ = ("key", "pages", "children", "parent", "lock_ref",
-                 "last_access", "hits", "payload", "hot")
+                 "last_access", "hits", "payload", "hot", "migrated",
+                 "evicted_path")
 
     def __init__(self, key: tuple, pages: List[Any],
                  parent: Optional["RadixNode"], now: float):
@@ -59,6 +60,8 @@ class RadixNode:
         self.hits = 0                       # reuse count (retention signal)
         self.payload: Any = None            # opaque compute-plane handle
         self.hot = False                    # promoted to long retention
+        self.migrated = False               # grafted from another replica
+        self.evicted_path: Optional[tuple] = None  # full key at eviction
 
     @property
     def n_tokens(self) -> int:
@@ -110,6 +113,7 @@ class RadixKVIndex:
         head.lock_ref = node.lock_ref       # pins cover the whole path
         head.hits = node.hits
         head.hot = node.hot
+        head.migrated = node.migrated       # provenance covers the whole run
         head.last_access = node.last_access
         parent = node.parent
         del parent.children[_page_key(node.key, 0, pt)]
@@ -121,11 +125,17 @@ class RadixKVIndex:
         return head
 
     def match(self, tokens: Sequence, now: float,
-              max_tokens: Optional[int] = None) -> PrefixMatch:
+              max_tokens: Optional[int] = None,
+              bump_hits: bool = True,
+              bump_lru: bool = True) -> PrefixMatch:
         """Longest page-aligned prefix of `tokens` present in the tree.
         Splits nodes at the match boundary (so the result's deepest node
-        covers exactly the matched run), bumps LRU stamps and hit counts
-        on the matched path."""
+        covers exactly the matched run) and bumps LRU stamps and hit
+        counts on the matched path. A migration probe passes both bumps
+        False: reading a prefix out to move its traffic AWAY is not local
+        reuse — it must feed neither the retention signal nor the LRU
+        order (or the donor would evict a genuinely-hot local prefix
+        first)."""
         pt = self.page_tokens
         limit = len(tokens) if max_tokens is None else min(max_tokens, len(tokens))
         limit = (limit // pt) * pt
@@ -146,8 +156,9 @@ class RadixKVIndex:
             m.pages.extend(node.pages)
             m.node = node
         for n in self._path(m.node):
-            n.last_access = now
-            if m.tokens:
+            if bump_lru:
+                n.last_access = now
+            if m.tokens and bump_hits:
                 n.hits += 1
         m.payload = self._nearest_payload(m.node)
         return m
@@ -193,6 +204,18 @@ class RadixKVIndex:
             node = node.parent
         return out
 
+    def full_key(self, node: RadixNode) -> tuple:
+        """Root-to-node token path: the fleet-directory-visible identity
+        of the prefix this node completes."""
+        parts = []
+        while node is not None and node.parent is not None:
+            parts.append(node.key)
+            node = node.parent
+        out: tuple = ()
+        for k in reversed(parts):
+            out += k
+        return out
+
     # -- insertion ------------------------------------------------------
     def insert(self, tokens: Sequence, pages: List[Any], now: float,
                payload: Any = None) -> Tuple[int, List[Any], RadixNode]:
@@ -231,6 +254,20 @@ class RadixKVIndex:
             node.payload = payload
         return dup, inserted, node
 
+    def graft(self, tokens: Sequence, pages: List[Any], now: float,
+              payload: Any = None, hits: int = 0,
+              hot: bool = False) -> Tuple[int, List[Any], RadixNode]:
+        """Graft an externally-built path (cross-replica migration): insert
+        it and stamp the reuse state it arrived with — the donor's observed
+        hit count and hot flag travel with the data, so a migrated-hot
+        prefix keeps its retention signal on the receiving replica."""
+        dup, inserted, node = self.insert(tokens, pages, now, payload=payload)
+        if inserted and node is not self.root:
+            node.hits = max(node.hits, hits)
+            node.hot = node.hot or hot
+            node.migrated = True
+        return dup, inserted, node
+
     # -- pinning --------------------------------------------------------
     def lock(self, node: Optional[RadixNode]) -> None:
         for n in self._path(node):
@@ -251,15 +288,15 @@ class RadixKVIndex:
         victims = self.evictable_leaves()
         if not victims:
             return None
-        victim = min(victims, key=lambda n: (n.last_access, n.key))
-        del victim.parent.children[_page_key(victim.key, 0, self.page_tokens)]
-        victim.parent = None
-        return victim
+        return self.pop_leaf(min(victims, key=lambda n: (n.last_access, n.key)))
 
     def pop_leaf(self, node: RadixNode) -> Optional[RadixNode]:
-        """Remove a specific unlocked leaf (cold-decay path)."""
+        """Remove a specific unlocked leaf (cold-decay path). The node's
+        full root-to-leaf key is captured in ``evicted_path`` before the
+        detach, so callers can invalidate fleet-directory ownership."""
         if not node.is_leaf() or node.lock_ref != 0 or node.parent is None:
             return None
+        node.evicted_path = self.full_key(node)
         del node.parent.children[_page_key(node.key, 0, self.page_tokens)]
         node.parent = None
         return node

@@ -35,6 +35,10 @@ class Request:
     generated: int = 0
     prompt_pos: int = 0       # prompt tokens prefilled so far (chunked prefill)
     sched_skipped: int = 0    # times bypassed by prefix-aware admission
+    # prefix tokens a cross-replica migration grafted here for this
+    # request: prefix-aware admission counts them as a match even if the
+    # grafted leaf is evicted before the request is picked
+    migrated_tokens: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -50,6 +54,7 @@ class SchedulerStats:
     decode_tokens: int = 0
     prefill_chunks: int = 0
     prefix_reorders: int = 0  # admissions that jumped the FIFO order
+    migrated_admissions: int = 0  # admitted requests with a migrated prefix
 
 
 class ContinuousBatchScheduler:
@@ -77,7 +82,9 @@ class ContinuousBatchScheduler:
         head = self.queue[0]
         if head.sched_skipped >= self.max_skip:
             return self.queue.popleft()
-        scores = [match_len(r) for r in self.queue]
+        # a freshly migrated prefix scores as a match even when the
+        # grafted leaf was evicted between migration and admission
+        scores = [max(match_len(r), r.migrated_tokens) for r in self.queue]
         best = max(scores)
         idx = scores.index(best)  # earliest submitter among ties (FIFO)
         if idx == 0 or best <= 0:
@@ -100,6 +107,8 @@ class ContinuousBatchScheduler:
             slot = self.free_slots.pop(0)
             self.active[slot] = req
             self.stats.admitted += 1
+            if req.migrated_tokens > 0:
+                self.stats.migrated_admissions += 1
             self.stats.prefill_tokens += req.prompt_len
             out.append((slot, req))
         return out

@@ -1,0 +1,268 @@
+"""Fleet-level prefix directory + cross-replica KV migration (DESIGN.md §7).
+
+Covers the directory protocol (ownership registered on insert, dropped on
+leaf eviction), the migration path (pages and refcounts conserved on both
+replicas' ledgers, interconnect traffic metered), the migrated-hit vs
+cold-start decode equivalence guarantee, snapshot memory accounting, and
+the load-tiebreak fix (directory-owned hot-prefix bytes count as load).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.memclass import HBM3E, MRM_RRAM
+from repro.core.simulator import MemorySystem
+from repro.serving import (ClusterFrontend, EngineConfig, PrefixDirectory,
+                           ServeEngine, SnapshotHandle)
+
+
+# ---------------------------------------------------------------------------
+# PrefixDirectory unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_directory_register_lookup_invalidate():
+    d = PrefixDirectory(page_tokens=4)
+    path = list(range(12))                    # 3 pages
+    d.register(0, path)
+    # every page-aligned prefix is owned; longest match wins
+    assert d.lookup(path) == (12, {0})
+    assert d.lookup(path[:7]) == (4, {0})     # page-aligned, not 7
+    assert d.lookup([99] * 8) == (0, None)
+    d.register(1, path[:8])                   # second replica, shorter path
+    assert d.lookup(path)[1] == {0}
+    assert d.lookup(path[:8])[1] == {0, 1}
+    # leaf eviction on replica 0 drops only the run the leaf covered
+    d.invalidate(0, path, tail_tokens=4)      # deepest page leaves 0's tree
+    assert d.lookup(path) == (8, {0, 1})
+    # ancestors remain owned by 0 until their own eviction
+    d.invalidate(0, path[:8], tail_tokens=8)
+    assert d.lookup(path) == (8, {1})
+    d.invalidate(1, path[:8], tail_tokens=8)
+    assert d.lookup(path) == (0, None)
+    assert d.n_entries() == 0
+
+
+def test_directory_multicodebook_keys_normalized():
+    d = PrefixDirectory(page_tokens=2)
+    seq = np.arange(8, dtype=np.int32).reshape(4, 2)
+    d.register(0, seq)
+    assert d.lookup(seq) == (4, {0})
+    assert d.lookup([[0, 1], [2, 3]]) == (2, {0})
+
+
+# ---------------------------------------------------------------------------
+# Engine-integrated: ownership follows the tree
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cluster_setup():
+    from repro.models import init_params
+    full = get_config("deepseek-7b")
+    cfg = reduced(full)
+    return full, cfg, init_params(cfg, jax.random.key(0))
+
+
+def _mk_engine(full, cfg, params, **kw):
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    ecfg = dict(max_slots=2, max_cache_len=96, weight_tier="hbm",
+                kv_tier="mrm", eos_token=-1, chunk_tokens=16, page_tokens=16)
+    ecfg.update(kw)
+    return ServeEngine(cfg, params, mem, EngineConfig(**ecfg), account_cfg=full)
+
+
+def test_ownership_registered_on_insert_dropped_on_eviction(cluster_setup):
+    full, cfg, params = cluster_setup
+    fe = ClusterFrontend([_mk_engine(full, cfg, params) for _ in range(2)])
+    prompt = list(range(2, 66))               # 64 tokens = 4 pages
+    r0 = fe.submit(list(prompt), 4, session_key="a")
+    fe.run_until_idle()
+    home = fe.replica_of(r0)
+    key = fe.engines[home].radix_key_for(prompt)
+    matched, owners = fe.directory.lookup(key)
+    assert matched > 0 and owners == {home}
+    assert fe.directory.owned_by(home) > 0
+    # draining the tree invalidates every prefix the replica owned
+    fe.engines[home].kv.evict_prefixes()
+    assert fe.engines[home].kv.radix.n_nodes() == 0
+    assert fe.directory.lookup(key) == (0, None)
+    assert fe.directory.owned_by(home) == 0
+    assert fe.directory.invalidations > 0
+
+
+def test_migration_conserves_pages_and_refcounts(cluster_setup):
+    """A forced migration (gap -1: any queued owner loses) grafts the
+    prefix on the receiver with both replicas' ledgers intact: donor pages
+    untouched, receiver pages tree-owned (refcount 1), every region
+    released when sessions close and both trees drain."""
+    full, cfg, params = cluster_setup
+    engines = [_mk_engine(full, cfg, params) for _ in range(2)]
+    fe = ClusterFrontend(engines, migrate_prefixes=True, migrate_load_gap=-1)
+    prompt = list(range(2, 66))
+    r0 = fe.submit(list(prompt), 4, session_key="a")
+    fe.run_until_idle()
+    home = fe.replica_of(r0)
+    other = 1 - home
+    donor_pages = {id(p) for n in engines[home].kv.radix.nodes()
+                   for p in n.pages}
+    r1 = fe.submit(list(prompt) + [400], 4, session_key="b")
+    assert fe.replica_of(r1) == other          # migrated, request followed
+    assert fe.migrations == 1
+    assert fe.migration_bytes > 0 and fe.migration_s > 0
+    assert engines[other].kv.radix_stats.adopted_pages > 0
+    # donor's pages were copied, not moved: same objects, refcount intact
+    assert {id(p) for n in engines[home].kv.radix.nodes()
+            for p in n.pages} == donor_pages
+    for n in engines[home].kv.radix.nodes():
+        for p in n.pages:
+            assert p.refcount >= 1
+    # receiver's adopted pages are distinct objects, tree-owned
+    adopted = [p for n in engines[other].kv.radix.nodes() for p in n.pages]
+    assert donor_pages.isdisjoint({id(p) for p in adopted})
+    fe.run_until_idle()
+    # the migrated request arrived as a real cross-replica hit, and the
+    # scheduler counted its grafted prefix as an admission match
+    assert engines[other].kv.prefix_hits_migrated >= 1
+    assert engines[other].sched.stats.migrated_admissions >= 1
+    # full teardown: every region on both replicas goes back
+    for e in engines:
+        e.kv.evict_prefixes()
+        assert e.kv.radix.n_nodes() == 0
+        assert e.kv.live_pages() == 0
+        assert e.mem.devices["mrm"].alloc.utilization == 0.0
+    # directory forgot both replicas
+    key = engines[0].radix_key_for(prompt)
+    assert fe.directory.lookup(key) == (0, None)
+
+
+@pytest.fixture(scope="module")
+def f32_setup():
+    full = get_config("deepseek-7b")
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    from repro.models import init_params
+    return full, cfg, init_params(cfg, jax.random.key(0))
+
+
+def test_migrated_hit_decodes_identically_to_cold_start(f32_setup):
+    """Acceptance: a migrated hit (receiver seeded from the donor's
+    transferred snapshot, prefill extended from the boundary) decodes the
+    exact tokens a never-saw-the-prefix cold engine decodes."""
+    full, cfg, params = f32_setup
+    rng = np.random.default_rng(17)
+    shared = list(rng.integers(2, 400, 48))
+    borrower = shared + list(rng.integers(2, 400, 8))
+
+    engines = [_mk_engine(full, cfg, params) for _ in range(2)]
+    fe = ClusterFrontend(engines, migrate_prefixes=True, migrate_load_gap=-1)
+    r0 = fe.submit(shared + list(rng.integers(2, 400, 8)), 6, session_key="a")
+    fe.run_until_idle()
+    home = fe.replica_of(r0)
+    r1 = fe.submit(list(borrower), 6, session_key="b")
+    fe.run_until_idle()
+    assert fe.replica_of(r1) == 1 - home       # served off the migrated copy
+    target = fe.engines[1 - home]
+    assert target.kv.prefix_hits_migrated >= 1
+    assert target.prefill_tokens_skipped > 0   # compute actually donated
+
+    cold = _mk_engine(full, cfg, params)
+    cold.submit(list(borrower), 6)
+    cold.run_until_idle()
+    assert fe.output(r1) == cold.outputs[0]
+
+
+def test_load_tiebreak_counts_directory_owned_prefix_bytes(cluster_setup):
+    """Bugfix: a replica stuffed with pinned shared prefixes (radix-tree
+    resident, no live sessions) must lose least-loaded ties to a really
+    empty replica."""
+    full, cfg, params = cluster_setup
+    engines = [_mk_engine(full, cfg, params) for _ in range(2)]
+    fe = ClusterFrontend(engines)
+    # replica 0 serves (and registers) a prompt; no sessions stay live
+    fe.submit(list(range(2, 66)), 4)
+    fe.run_until_idle()
+    assert engines[0].kv.radix_kv_bytes() > 0
+    assert engines[0].kv.live_kv_bytes() == 0
+    # equal queue lengths, but 0 holds hot-prefix KV -> 1 wins the tie
+    assert fe.route() == 1
+    engines[0].kv.evict_prefixes()
+    assert fe.route() == 0                     # bytes gone -> index order
+
+
+def test_snapshot_bytes_metered_against_kv_tier(cluster_setup):
+    """ROADMAP satellite: donor ring-cache snapshots are carved from the
+    KV tier budget (metered region write), reported as snapshot_bytes,
+    and released when their radix node leaves the tree."""
+    full, cfg, params = cluster_setup
+    eng = _mk_engine(full, cfg, params)
+    util0 = eng.mem.devices["mrm"].alloc.utilization
+    eng.submit(list(range(2, 66)), 4)
+    eng.run_until_idle()
+    rep = eng.report()
+    assert rep["snapshot_bytes"] > 0
+    assert rep["prefix"]["snapshots_published"] >= 1
+    assert eng.mem.devices["mrm"].alloc.utilization > util0
+    # eviction releases the snapshot region with the node
+    eng.kv.evict_prefixes()
+    assert eng.live_snapshot_bytes() == 0
+    assert eng.mem.devices["mrm"].alloc.utilization == 0.0
+
+
+def test_adopt_prefix_partial_under_pressure_keeps_ledger_balanced():
+    """Adoption into a nearly-full tier truncates at a page boundary
+    (optional transfer: no unresolved pressure events), and what was
+    adopted is tree-owned and releasable."""
+    from repro.serving import PagedKVManager
+    cfg = get_config("qwen3-8b")
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 22), "hbm": (HBM3E, 1 << 30)})
+    kv = PagedKVManager(cfg, mem, "mrm", page_tokens=4,
+                        policy="evict-lru")
+    tokens = list(range(400))                 # ~100 pages, way over capacity
+    new_tok, total, node = kv.adopt_prefix(tokens)
+    assert 0 < new_tok < 400 and new_tok % 4 == 0
+    assert total == new_tok and node is not None
+    assert kv.pressure.unresolved == 0 and kv.pressure.events == 0
+    assert all(p.refcount == 1 for n in kv.radix.nodes() for p in n.pages)
+    # a second adoption of the same path is a no-op (already held)
+    new2, total2, _ = kv.adopt_prefix(tokens[:new_tok])
+    assert new2 == 0 and total2 == new_tok
+    kv.evict_prefixes()
+    assert kv.radix.n_nodes() == 0
+    assert mem.devices["mrm"].alloc.utilization == 0.0
+
+
+def test_snapshot_handle_release_is_idempotent():
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 30)})
+    rid = mem.write_region("mrm", "snap", 1024, expected_lifetime_s=1.0)
+    h = SnapshotHandle(caches=None, nbytes=1024.0, mem=mem, region_id=rid)
+    assert h.live
+    h.release()
+    assert not h.live
+    h.release()                                # no double-free
+    assert mem.devices["mrm"].alloc.utilization == 0.0
+
+
+def test_fleet_report_interconnect_and_directory_sections(cluster_setup):
+    full, cfg, params = cluster_setup
+    fe = ClusterFrontend([_mk_engine(full, cfg, params) for _ in range(2)],
+                         migrate_prefixes=True, migrate_load_gap=-1)
+    fe.submit(list(range(2, 66)), 4, session_key="a")
+    fe.run_until_idle()
+    r1 = fe.submit(list(range(2, 66)) + [401], 4, session_key="b")
+    rep = fe.run_until_idle()
+    inter = rep["interconnect"]
+    assert inter["migrations"] == 1
+    assert inter["migration_bytes"] > 0
+    assert inter["migration_s"] == pytest.approx(
+        inter["migration_bytes"] / (inter["gbps"] * 1e9))
+    # the request that triggered (and waited for) the transfer pays it:
+    # its TTFT includes the interconnect time
+    replica, local = fe.requests[r1]
+    rec = next(r for r in fe.engines[replica].sched.latency
+               if r["request_id"] == local)
+    assert rec["ttft"] >= inter["migration_s"]
+    assert rep["directory"]["entries"] > 0
+    assert rep["directory"]["registrations"] > 0
+    assert rep["prefix_hits_migrated"] >= 1
+    assert rep["snapshot_bytes"] >= 0
