@@ -9,15 +9,19 @@
    fleet report aggregates tokens/bytes across replicas.
 3. Prefix-reuse sweep: shared-prefix traffic (multi-turn chat, shared
    system prompts, RAG fan-out) with the radix prefix tree on vs off —
-   reuse must cut prefill tokens computed and KV-tier write bytes by
-   >= 30% at equal (identical) output tokens, and the hit rate / tokens
-   reused / TTFT land in the JSON trajectory.
+   reuse must cut prefill tokens computed by >= 30% at equal (identical)
+   output tokens, and the hit rate / tokens reused / TTFT land in the
+   JSON trajectory. Runs once per snapshot family (DESIGN.md §8):
+   attention (deepseek-7b), SSM point snapshots (mamba2-2.7b) and the
+   hybrid union (hymba-1.5b); stacks with a KV write stream must also cut
+   KV-tier write bytes >= 30%.
 4. Fleet-reuse sweep: N replicas x shared-prefix fan-out with the fleet
    prefix directory + cross-replica migration on vs the per-replica radix
    baseline (each replica recomputes the shared head cold) — must show a
    cross-replica hit rate > 0, a >= 20% fleet prefill-token cut at
    identical decoded tokens, non-zero metered interconnect traffic, and
-   zero pressure-ledger imbalance.
+   zero pressure-ledger imbalance. Runs for an attention stack and an SSM
+   stack (the latter transfers a *point* state snapshot over the wire).
 """
 from __future__ import annotations
 
@@ -28,7 +32,7 @@ import numpy as np
 
 
 def prefix_workloads(rng, vocab: int, n_users: int = 3, turns: int = 2,
-                     fanout: int = 4) -> list:
+                     fanout: int = 4, n_system: int = 5) -> list:
     """Shared-prefix traffic at three granularities. Returns
     ``[(prompt_tokens, max_new, session_key), ...]``:
 
@@ -40,7 +44,7 @@ def prefix_workloads(rng, vocab: int, n_users: int = 3, turns: int = 2,
     """
     reqs = []
     system = list(rng.integers(2, vocab, 48))
-    for i in range(5):
+    for i in range(n_system):
         reqs.append((system + list(rng.integers(2, vocab, 16)), 6, f"sys-{i}"))
     for u in range(n_users):
         hist = list(rng.integers(2, vocab, 24))
@@ -53,10 +57,18 @@ def prefix_workloads(rng, vocab: int, n_users: int = 3, turns: int = 2,
     return reqs
 
 
-def prefix_reuse(arch="deepseek-7b") -> dict:
+def prefix_reuse(arch="deepseek-7b", **workload_kw) -> dict:
     """Radix prefix reuse on shared-prefix traffic vs prefix_caching=False:
-    identical decoded tokens, >= 30% fewer prefill tokens computed and
-    >= 30% fewer KV-tier write bytes (the acceptance bar)."""
+    identical decoded tokens and >= 30% fewer prefill tokens computed —
+    for *every* snapshot family (attention ring caches, MLA latent pages,
+    SSM/hybrid point snapshots; DESIGN.md §8). Stacks with a real KV
+    write stream must also cut KV-tier write bytes >= 30%; a pure-SSM
+    stack appends no per-token KV, so that axis is reported as None.
+
+    ``workload_kw`` scales :func:`prefix_workloads` — point-snapshot
+    stacks pay a one-time capture recompute per observed share boundary
+    (§8), so their savings amortize over fan-out depth where positional
+    stacks save from the second request on."""
     from repro.configs import get_config, reduced
     from repro.core.memclass import HBM3E, MRM_RRAM
     from repro.core.simulator import MemorySystem
@@ -68,7 +80,8 @@ def prefix_reuse(arch="deepseek-7b") -> dict:
     # the cold prefill (bf16 amplifies accumulation-order differences)
     cfg = reduced(full, dtype="float32", param_dtype="float32")
     params = init_params(cfg, jax.random.key(0))
-    reqs = prefix_workloads(np.random.default_rng(0), cfg.vocab_size)
+    reqs = prefix_workloads(np.random.default_rng(0), cfg.vocab_size,
+                            **workload_kw)
 
     def run_one(prefix_caching: bool):
         mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40),
@@ -92,14 +105,17 @@ def prefix_reuse(arch="deepseek-7b") -> dict:
     outs_on = {k: list(v) for k, v in eng_on.outputs.items()}
     outs_off = {k: list(v) for k, v in eng_off.outputs.items()}
     assert outs_on == outs_off, "prefix reuse changed decoded tokens"
+    prefill_cut = 1 - on["prefill_tokens_computed"] / off["prefill_tokens_computed"]
+    assert prefill_cut >= 0.30, f"prefill cut {prefill_cut:.2%} < 30%"
     kv_w_on = on["memory"]["tiers"]["mrm"]["write_gb"]
     kv_w_off = off["memory"]["tiers"]["mrm"]["write_gb"]
-    prefill_cut = 1 - on["prefill_tokens_computed"] / off["prefill_tokens_computed"]
-    kv_write_cut = 1 - kv_w_on / kv_w_off
-    assert prefill_cut >= 0.30, f"prefill cut {prefill_cut:.2%} < 30%"
-    assert kv_write_cut >= 0.30, f"KV write cut {kv_write_cut:.2%} < 30%"
+    kv_write_cut = None
+    if full.kv_bytes_per_token() > 0:
+        kv_write_cut = 1 - kv_w_on / kv_w_off
+        assert kv_write_cut >= 0.30, f"KV write cut {kv_write_cut:.2%} < 30%"
     return {
         "requests": len(reqs),
+        "snapshot_kind": on["prefix"]["snapshot_kind"],
         "prefix_hits": on["prefix_hits"],
         "prefix_hit_rate": on["prefix_hits"] / len(reqs),
         "tokens_reused": on["prefix_tokens_reused"],
@@ -214,13 +230,20 @@ def cluster_sweep(arch="deepseek-7b", replica_counts=(1, 2),
     return out
 
 
-def fleet_reuse(arch="deepseek-7b", replicas=3, fanout=12) -> dict:
+def fleet_reuse(arch="deepseek-7b", replicas=3, fanout=12,
+                seed_tail_tokens=16) -> dict:
     """Fleet-level prefix reuse: a shared system-prompt head fanned out
     across a cluster. With the fleet directory + migration on, the head
     is computed cold exactly once and then *moved* (metered interconnect
     transfer) wherever load sends its traffic; the per-replica baseline
     (no fleet awareness: sticky/least-loaded routing, per-replica radix
-    trees) recomputes it cold on every replica it lands on."""
+    trees) recomputes it cold on every replica it lands on.
+
+    ``seed_tail_tokens=0`` makes the seed prompt exactly the shared head —
+    the shape that exercises *point*-snapshot transfer for SSM/hybrid
+    stacks (their state snapshot is only valid at the exact boundary the
+    fan-out matches, DESIGN.md §8; a divergent seed tail would leave the
+    boundary snapshot to the first borrower instead of the seed)."""
     from repro.configs import get_config, reduced
     from repro.core.memclass import HBM3E, MRM_RRAM
     from repro.core.simulator import MemorySystem
@@ -234,7 +257,7 @@ def fleet_reuse(arch="deepseek-7b", replicas=3, fanout=12) -> dict:
     params = init_params(cfg, jax.random.key(0))
     rng = np.random.default_rng(0)
     head = list(rng.integers(2, cfg.vocab_size, 64))
-    seed_tail = list(rng.integers(2, cfg.vocab_size, 16))
+    seed_tail = list(rng.integers(2, cfg.vocab_size, seed_tail_tokens))
     tails = [list(rng.integers(2, cfg.vocab_size, 16)) for _ in range(fanout)]
 
     def run_one(fleet: bool):
@@ -288,6 +311,7 @@ def fleet_reuse(arch="deepseek-7b", replicas=3, fanout=12) -> dict:
     return {
         "replicas": replicas,
         "requests": n_reqs,
+        "snapshot_kind": on["per_replica"][0]["prefix"]["snapshot_kind"],
         "prefill_tokens_fleet": on["prefill_tokens_computed"],
         "prefill_tokens_baseline": off["prefill_tokens_computed"],
         "prefill_cut": prefill_cut,
@@ -324,26 +348,40 @@ def run(csv=True):
             print(f"serving_sim/{k}_fleet_tokens_per_s,{dt:.1f},{v['fleet_tokens_per_s']:.4f}")
             print(f"serving_sim/{k}_pressure_events,{dt:.1f},{v['pressure_events']}")
             print(f"serving_sim/{k}_dropped_allocs,{dt:.1f},{v['dropped_allocs']}")
-    t0 = time.perf_counter()
-    reuse = prefix_reuse()
-    dt = (time.perf_counter() - t0) * 1e6
-    out["prefix_reuse"] = reuse
-    if csv:
-        print(f"serving_sim/prefix_hit_rate,{dt:.1f},{reuse['prefix_hit_rate']:.4f}")
-        print(f"serving_sim/prefix_tokens_reused,{dt:.1f},{reuse['tokens_reused']}")
-        print(f"serving_sim/prefix_prefill_cut,{dt:.1f},{reuse['prefill_cut']:.4f}")
-        print(f"serving_sim/prefix_kv_write_cut,{dt:.1f},{reuse['kv_write_cut']:.4f}")
-        print(f"serving_sim/prefix_ttft_p50_s,{dt:.1f},{reuse['ttft_p50_s']:.6f}")
-    t0 = time.perf_counter()
-    fleet_r = fleet_reuse()
-    dt = (time.perf_counter() - t0) * 1e6
-    out["fleet_reuse"] = fleet_r
-    if csv:
-        print(f"serving_sim/fleet_prefill_cut,{dt:.1f},{fleet_r['prefill_cut']:.4f}")
-        print(f"serving_sim/fleet_cross_replica_hits,{dt:.1f},{fleet_r['cross_replica_hits']}")
-        print(f"serving_sim/fleet_migrations,{dt:.1f},{fleet_r['migrations']}")
-        print(f"serving_sim/fleet_migration_gb,{dt:.1f},{fleet_r['migration_bytes'] / 1e9:.4f}")
-        print(f"serving_sim/fleet_ledger_imbalance,{dt:.1f},{fleet_r['ledger_imbalance']}")
+    # prefix reuse must be real compute savings for EVERY snapshot family
+    # (ISSUE 4): attention ring caches, SSM point snapshots, hybrid union
+    # the hybrid sweep runs a denser fan-out: a point-snapshot stack pays
+    # one capture recompute per observed boundary before borrowers save
+    for key, reuse_arch, wkw in (
+            ("prefix_reuse", "deepseek-7b", {}),
+            ("prefix_reuse_ssm", "mamba2-2.7b", {}),
+            ("prefix_reuse_hybrid", "hymba-1.5b",
+             dict(n_system=8, turns=3, fanout=8))):
+        t0 = time.perf_counter()
+        reuse = prefix_reuse(reuse_arch, **wkw)
+        dt = (time.perf_counter() - t0) * 1e6
+        out[key] = reuse
+        if csv:
+            tag = key.replace("prefix_reuse", "prefix")
+            print(f"serving_sim/{tag}_hit_rate,{dt:.1f},{reuse['prefix_hit_rate']:.4f}")
+            print(f"serving_sim/{tag}_tokens_reused,{dt:.1f},{reuse['tokens_reused']}")
+            print(f"serving_sim/{tag}_prefill_cut,{dt:.1f},{reuse['prefill_cut']:.4f}")
+            if reuse["kv_write_cut"] is not None:
+                print(f"serving_sim/{tag}_kv_write_cut,{dt:.1f},{reuse['kv_write_cut']:.4f}")
+            print(f"serving_sim/{tag}_ttft_p50_s,{dt:.1f},{reuse['ttft_p50_s']:.6f}")
+    for key, fleet_arch, seed_tail in (("fleet_reuse", "deepseek-7b", 16),
+                                       ("fleet_reuse_ssm", "mamba2-2.7b", 0)):
+        t0 = time.perf_counter()
+        fleet_r = fleet_reuse(fleet_arch, seed_tail_tokens=seed_tail)
+        dt = (time.perf_counter() - t0) * 1e6
+        out[key] = fleet_r
+        if csv:
+            tag = key.replace("fleet_reuse", "fleet")
+            print(f"serving_sim/{tag}_prefill_cut,{dt:.1f},{fleet_r['prefill_cut']:.4f}")
+            print(f"serving_sim/{tag}_cross_replica_hits,{dt:.1f},{fleet_r['cross_replica_hits']}")
+            print(f"serving_sim/{tag}_migrations,{dt:.1f},{fleet_r['migrations']}")
+            print(f"serving_sim/{tag}_migration_gb,{dt:.1f},{fleet_r['migration_bytes'] / 1e9:.4f}")
+            print(f"serving_sim/{tag}_ledger_imbalance,{dt:.1f},{fleet_r['ledger_imbalance']}")
     return out
 
 

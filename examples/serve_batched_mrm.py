@@ -7,6 +7,9 @@ living on MRM — the paper's deployment, end to end:
 - weights written once to the MRM weight region, read wholesale per pass;
 - KV pages allocated with DCM retention programmed from session lifetime,
   capacity pressure resolved by prefix-LRU eviction (never silent drops);
+- radix prefix reuse: the requests share a 32-token head, so later
+  admissions attach the shared pages AND skip their prefill compute
+  (DESIGN.md §6, §8);
 - the retention tracker refreshes live pages and drops closed sessions;
 - the report shows the measured read:write ratio, sequentiality, energy.
 
@@ -35,17 +38,19 @@ mem = MemorySystem({
 engine = ServeEngine(
     cfg, params, mem,
     EngineConfig(max_slots=4, max_cache_len=128, weight_tier="mrm",
-                 kv_tier="mrm", page_tokens=64, expected_session_s=30.0,
+                 kv_tier="mrm", page_tokens=16, expected_session_s=30.0,
                  eos_token=-1, chunk_tokens=32,
                  kv_pressure_policy="evict-lru"),
     account_cfg=FULL)
 
 rng = np.random.default_rng(0)
 print(f"serving {FULL.name}: weights {engine.weight_bytes/1e9:.0f} GB -> MRM, "
-      f"KV {FULL.kv_bytes_per_token()/1024:.0f} KiB/token, paged x64 tokens, "
+      f"KV {FULL.kv_bytes_per_token()/1024:.0f} KiB/token, paged x16 tokens, "
       f"chunked prefill x32")
+shared_head = list(rng.integers(2, cfg.vocab_size, 32))  # system prompt
 for i in range(8):
-    prompt = list(rng.integers(2, cfg.vocab_size, int(rng.integers(10, 60))))
+    prompt = shared_head + list(
+        rng.integers(2, cfg.vocab_size, int(rng.integers(8, 28))))
     engine.submit(prompt, max_new_tokens=16)
 
 rep = engine.run_until_idle()
@@ -58,8 +63,12 @@ print(f"  energy per token         {rep['energy_per_token_j']*1e3:.2f} mJ")
 print(f"  refresh events           {rep['memory']['refresh_stats']['refresh']}")
 print(f"  pressure events          {rep['pressure']['events']} "
       f"(silent drops {rep['dropped_allocs']})")
+print(f"  prefix hits              {rep['prefix_hits']} "
+      f"({rep['prefix_tokens_reused']} KV tokens reused, "
+      f"{rep['prefill_tokens_skipped']} prefill tokens skipped)")
 print(f"  MRM wear (max writes)    {mrm['wear_max']:.0f}  "
       f"(ratio {mrm['wear_ratio']:.2f}, life used {mrm['life_used']:.2e})")
 print(f"  ECC overhead             {mrm['ecc_overhead']*100:.2f}%")
 assert rep["steady_rw_ratio"] > 1000
 assert rep["dropped_allocs"] == 0
+assert rep["prefix_hits"] >= 1          # the shared head was actually reused

@@ -8,6 +8,12 @@ K-token prompt head, exercising radix prefix reuse end to end;
 (pages + compute snapshot) to a less-loaded replica at --interconnect-gbps
 instead of queueing every match on its owner.
 
+Every architecture in the pool serves — attention, MLA, SSM and hybrid —
+including chunked prefill and prefix *compute* reuse (positional ring
+snapshots vs page-boundary point snapshots of recurrent state;
+DESIGN.md §8). Try --arch mamba2-2.7b or --arch hymba-1.5b with
+--shared-prefix-tokens 32.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
       --requests 8 --max-new 16 --kv-tier mrm_rram --weight-tier mrm_rram \
       --replicas 2 --chunk-tokens 32 --kv-policy evict-lru \
@@ -64,7 +70,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--chunk-tokens", type=int, default=None,
-                    help="chunked prefill piece size (None = whole prompt)")
+                    help="chunked prefill piece size (None = whole prompt; "
+                         "every mixer family supports chunking)")
     ap.add_argument("--kv-policy", default="evict-lru",
                     choices=("none", "evict-lru", "spill", "recompute"))
     ap.add_argument("--spill-tier", default=None,

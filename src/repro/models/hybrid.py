@@ -40,13 +40,21 @@ def hybrid_sublayer(
     cache: Optional[dict] = None,
     mode: str = "train",
     cur_pos=None,
+    decode_active=None,
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Both branches run in every mode (incl. ``extend``: the attention
+    half resumes against its ring cache positionally while the SSM half
+    continues its recurrence from the carried state — the union cache is
+    what makes hybrid prefix snapshots *point* snapshots, DESIGN.md §8).
+    ``decode_active`` masks both halves' cache writes for inactive rows."""
     attn_cache = cache["attn"] if cache is not None else None
     ssm_cache = cache["ssm"] if cache is not None else None
     a_out, a_cache = attention_sublayer(
         cfg, p["attn"], x, positions=positions, window=window, sh=sh,
-        cache=attn_cache, mode=mode, cur_pos=cur_pos)
-    s_out, s_cache = ssm_sublayer(cfg, p["ssm"], x, sh=sh, cache=ssm_cache, mode=mode)
+        cache=attn_cache, mode=mode, cur_pos=cur_pos,
+        decode_active=decode_active)
+    s_out, s_cache = ssm_sublayer(cfg, p["ssm"], x, sh=sh, cache=ssm_cache,
+                                  mode=mode, decode_active=decode_active)
     out = 0.5 * (rmsnorm(a_out, p["attn_out_norm"], cfg.norm_eps)
                  + rmsnorm(s_out, p["ssm_out_norm"], cfg.norm_eps))
     new_cache = None

@@ -87,6 +87,33 @@ def _expand(cfg: ModelConfig, p: dict, c):
     return kn, v
 
 
+def _cache_attention(cfg: ModelConfig, p: dict, qn, qr, cache_c, cache_kr,
+                     mask, scale, out_dtype):
+    """Queries (B, S, H, ·) against the compressed latent cache (B, C, ·)
+    under ``mask`` (B, S, C) — the one cache-attention kernel decode
+    (S=1) and extend (a whole chunk) share, in both the absorbed and the
+    naive-expansion formulation."""
+    if cfg.mla_absorb:
+        # fold W_UK into q, W_UV into out: attention over compressed cache
+        qc = jnp.einsum("bshk,rhk->bshr", qn, p["w_uk"])
+        s = jnp.einsum("bshr,bcr->bshc", qc, cache_c,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bshk,bck->bshc", qr, cache_kr,
+                        preferred_element_type=jnp.float32)
+        s = jnp.where(mask[:, :, None, :], s * scale, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        oc = jnp.einsum("bshc,bcr->bshr", pr.astype(out_dtype), cache_c)
+        return jnp.einsum("bshr,rhk->bshk", oc, p["w_uv"])
+    kn_e, v_e = _expand(cfg, p, cache_c)  # (B,C,H,*) every step
+    s = jnp.einsum("bshk,bchk->bshc", qn, kn_e,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bshk,bck->bshc", qr, cache_kr,
+                    preferred_element_type=jnp.float32)
+    s = jnp.where(mask[:, :, None, :], s * scale, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bshc,bchk->bshk", pr.astype(out_dtype), v_e)
+
+
 def mla_sublayer(
     cfg: ModelConfig,
     p: dict,
@@ -97,7 +124,16 @@ def mla_sublayer(
     cache: Optional[dict] = None,
     mode: str = "train",
     cur_pos=None,
+    decode_active=None,
 ) -> Tuple[jax.Array, Optional[dict]]:
+    """Modes: ``train``/``prefill`` (full-sequence chunked attention),
+    ``extend`` (chunked-prefill continuation: the chunk's compressed
+    latents are written into the ring cache at their absolute positions,
+    then each query attends the whole cache under position masking — the
+    latent cache is *positional*, exactly like attention KV, so a prefix
+    snapshot seeds any shorter page-aligned boundary; DESIGN.md §8), and
+    ``decode`` (one token). ``decode_active`` ((B,) bool, decode only):
+    rows where False keep their cached latents untouched."""
     B, S, d = x.shape
     dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
     scale = (dn + dr) ** -0.5
@@ -123,6 +159,11 @@ def mla_sublayer(
             c_new = cache["c"].at[rows, slot].set(c[:, 0].astype(cache["c"].dtype))
             kr_new = cache["kr"].at[rows, slot].set(kr[:, 0].astype(cache["kr"].dtype))
             pos_new = cache["pos"].at[rows, slot].set(cur)
+        if decode_active is not None:
+            act = jnp.asarray(decode_active, bool)
+            c_new = jnp.where(act[:, None, None], c_new, cache["c"])
+            kr_new = jnp.where(act[:, None, None], kr_new, cache["kr"])
+            pos_new = jnp.where(act[:, None], pos_new, cache["pos"])
         new_cache = {"c": c_new, "kr": kr_new, "pos": pos_new}
         if sh is not None:
             # latents shard over (batch, cache-seq) — must match the input
@@ -131,28 +172,31 @@ def mla_sublayer(
                          for k, v in new_cache.items()}
         cur_b = cur if cur.ndim else cur[None]
         mask = (new_cache["pos"] >= 0) & (new_cache["pos"] <= cur_b[:, None])
-
-        if cfg.mla_absorb:
-            # fold W_UK into q, W_UV into out: attention over compressed cache
-            qc = jnp.einsum("bshk,rhk->bshr", qn, p["w_uk"])  # (B,1,H,r)
-            s = jnp.einsum("bshr,bcr->bshc", qc, new_cache["c"],
-                           preferred_element_type=jnp.float32)
-            s += jnp.einsum("bshk,bck->bshc", qr, new_cache["kr"],
-                            preferred_element_type=jnp.float32)
-            s = s * scale
-            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-            pr = jax.nn.softmax(s, axis=-1)
-            oc = jnp.einsum("bshc,bcr->bshr", pr.astype(x.dtype), new_cache["c"])
-            out = jnp.einsum("bshr,rhk->bshk", oc, p["w_uv"])  # (B,1,H,dv)
-        else:
-            kn_e, v_e = _expand(cfg, p, new_cache["c"])  # (B,C,H,*) every step
-            s = jnp.einsum("bshk,bchk->bshc", qn, kn_e, preferred_element_type=jnp.float32)
-            s += jnp.einsum("bshk,bck->bshc", qr, new_cache["kr"],
-                            preferred_element_type=jnp.float32)
-            s = s * scale
-            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-            pr = jax.nn.softmax(s, axis=-1)
-            out = jnp.einsum("bshc,bchk->bshk", pr.astype(x.dtype), v_e)
+        out = _cache_attention(cfg, p, qn, qr, new_cache["c"],
+                               new_cache["kr"], mask[:, None, :], scale,
+                               x.dtype)
+    elif mode == "extend":
+        # chunked-prefill continuation: write the chunk's compressed
+        # latents into the ring cache at their absolute positions, then
+        # attend against the whole cache (earlier chunks + this chunk)
+        # under the same position masking decode uses — stale entries
+        # beyond a seeded prefix boundary stay masked until overwritten.
+        assert cache is not None
+        C = cache["c"].shape[1]
+        qpos = jnp.asarray(positions, jnp.int32)  # (S,) absolute positions
+        slots = qpos % C
+        new_cache = {
+            "c": cache["c"].at[:, slots].set(c.astype(cache["c"].dtype)),
+            "kr": cache["kr"].at[:, slots].set(kr.astype(cache["kr"].dtype)),
+            "pos": cache["pos"].at[:, slots].set(qpos[None, :]),
+        }
+        if sh is not None:
+            new_cache = {k: sh.c(v, ("act_batch", "act_kv_seq", None)[: v.ndim])
+                         for k, v in new_cache.items()}
+        mask = ((new_cache["pos"][:, None, :] >= 0)
+                & (new_cache["pos"][:, None, :] <= qpos[None, :, None]))
+        out = _cache_attention(cfg, p, qn, qr, new_cache["c"],
+                               new_cache["kr"], mask, scale, x.dtype)
     else:
         kn, v = _expand(cfg, p, c)
         k_full = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :], kn.shape[:3] + (dr,))], -1)

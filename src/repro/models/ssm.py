@@ -72,12 +72,16 @@ def _segsum(a):
     return jnp.where(mask, s, -jnp.inf)
 
 
-def ssd_chunked(x, dt, a, b, c, chunk: int):
-    """SSD over a full sequence.
+def ssd_chunked(x, dt, a, b, c, chunk: int, init_state=None):
+    """SSD over a full sequence, optionally continuing from a carried state.
 
     x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative;
-    b, c: (B, S, G, N) with H % G == 0. Returns (y (B,S,H,P), final state
-    (B, H, P, N)).
+    b, c: (B, S, G, N) with H % G == 0; ``init_state`` (B, H, P, N) is the
+    recurrent state after every earlier token (zeros when starting from
+    scratch) — this is what makes chunked prefill / prefix-snapshot
+    resumption possible for SSM stacks (DESIGN.md §8: the state is a
+    *point* snapshot, only valid at the exact boundary it was taken at).
+    Returns (y (B,S,H,P), final state (B, H, P, N)).
     """
     B, S, H, P = x.shape
     G, N = b.shape[2], b.shape[3]
@@ -128,7 +132,10 @@ def ssd_chunked(x, dt, a, b, c, chunk: int):
         decay_mask.transpose(1, 0, 2, 3, 4),
         da_cs.transpose(1, 0, 2, 3),
     )
-    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    if init_state is None:
+        state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    else:
+        state0 = init_state.astype(jnp.float32)
     state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0, xs)
     y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
     return y.astype(x.dtype), state
@@ -170,8 +177,17 @@ def ssm_sublayer(
     sh=None,
     cache: Optional[dict] = None,
     mode: str = "train",
+    decode_active=None,
 ) -> Tuple[jax.Array, Optional[dict]]:
-    """x: (B, S, d_model) -> (out, updated cache or None)."""
+    """x: (B, S, d_model) -> (out, updated cache or None).
+
+    Modes: ``train`` (no cache), ``prefill`` (zero cache filled in one
+    pass), ``extend`` (chunked-prefill continuation: the cache carries the
+    conv left-context and SSD state after every earlier chunk, so the
+    recurrence resumes mid-prompt), ``decode`` (O(1) per-token step).
+    ``decode_active`` ((B,) bool, decode only): rows where False keep
+    their cache untouched — a batched decode round must not clobber the
+    recurrent state of a slot whose prompt is still streaming in."""
     from repro.models.layers import rmsnorm  # avoid cycle
 
     B, S, d = x.shape
@@ -197,8 +213,17 @@ def ssm_sublayer(
         assert cache is not None
         y1, new_state = ssd_decode(xh[:, 0], dt[:, 0], a, bg[:, 0], cg[:, 0], cache["state"])
         y = y1[:, None]
+        if decode_active is not None:
+            act = jnp.asarray(decode_active, bool)
+            new_state = jnp.where(act[:, None, None, None], new_state, cache["state"])
+            new_conv = jnp.where(act[:, None, None], new_conv, cache["conv"])
     else:
-        y, final_state = ssd_chunked(xh, dt, a, bg, cg, cfg.ssm_chunk)
+        # prefill starts from the zero-initialized cache state; extend
+        # continues the recurrence from the carried state (same code path —
+        # a fresh cache IS the zero state)
+        init = cache["state"] if cache is not None else None
+        y, final_state = ssd_chunked(xh, dt, a, bg, cg, cfg.ssm_chunk,
+                                     init_state=init)
         new_state = final_state
     y = y + xh.astype(jnp.float32).astype(y.dtype) * p["d_skip"].astype(y.dtype)[None, None, :, None]
     y = y.reshape(B, S, di)

@@ -98,13 +98,16 @@ def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x, *, positions,
                                           decode_active=decode_active)
     elif spec.kind == "mla":
         h, new_cache = mla_sublayer(cfg, p["mixer"], h, positions=positions, sh=sh,
-                                    cache=cache, mode=mode, cur_pos=cur_pos)
+                                    cache=cache, mode=mode, cur_pos=cur_pos,
+                                    decode_active=decode_active)
     elif spec.kind == "ssm":
-        h, new_cache = ssm_sublayer(cfg, p["mixer"], h, sh=sh, cache=cache, mode=mode)
+        h, new_cache = ssm_sublayer(cfg, p["mixer"], h, sh=sh, cache=cache,
+                                    mode=mode, decode_active=decode_active)
     elif spec.kind == "hybrid":
         h, new_cache = hybrid_sublayer(cfg, p["mixer"], h, positions=positions,
                                        window=spec.window, sh=sh, cache=cache,
-                                       mode=mode, cur_pos=cur_pos)
+                                       mode=mode, cur_pos=cur_pos,
+                                       decode_active=decode_active)
     else:
         raise ValueError(spec.kind)
     if cfg.post_norms:
@@ -323,21 +326,40 @@ def decode(cfg: ModelConfig, params, caches, last_tokens, cur_pos, sh=None,
 
 
 def supports_extend(cfg: ModelConfig) -> bool:
-    """Chunked prefill (``extend``) is implemented for pure-attention
-    stacks; SSM/MLA/hybrid mixers keep whole-prompt prefill (DESIGN.md §3)."""
-    return all(spec.kind == "attn" for spec in cfg.layer_specs())
+    """Chunked prefill (``extend``) is implemented for every mixer family
+    — attention resumes against its position-masked ring cache, MLA
+    against the compressed latent cache, and SSM (incl. the hybrid union)
+    continues its recurrence from the carried state (DESIGN.md §3, §8).
+    Kept as a capability probe for API stability."""
+    return all(spec.kind in ("attn", "mla", "ssm", "hybrid")
+               for spec in cfg.layer_specs())
+
+
+def snapshot_kind(cfg: ModelConfig) -> str:
+    """How a published prefix compute snapshot of this stack may be
+    reused (DESIGN.md §8):
+
+    - ``"positional"`` — the cache is a position-masked ring (attention
+      KV, MLA compressed latents): one snapshot serves *any* shorter
+      page-aligned match boundary, because entries beyond the boundary
+      stay masked (``cache_pos <= cur``) until overwritten.
+    - ``"point"`` — the cache integrates the whole prefix (SSM conv
+      left-context + SSD state, and therefore the hybrid attention+SSM
+      union): a snapshot is valid only at the *exact* token boundary it
+      was captured at.
+    """
+    if any(spec.kind in ("ssm", "hybrid") for spec in cfg.layer_specs()):
+        return "point"
+    return "positional"
 
 
 def extend(cfg: ModelConfig, params, caches, tokens, offset, sh=None):
     """Chunked-prefill continuation: process ``tokens`` (B, S[, K]) at
     absolute positions ``offset + [0, S)`` against existing caches (which
-    already hold every earlier chunk). ``offset`` may be traced, so one
+    already hold every earlier chunk — ring entries for attention/MLA,
+    recurrent state for SSM/hybrid). ``offset`` may be traced, so one
     compiled executable serves every chunk of a given length.
     Returns (last-position logits (B, V[, K]), updated caches)."""
-    if not supports_extend(cfg):
-        raise NotImplementedError(
-            f"chunked prefill requires an all-attention stack; "
-            f"{cfg.name} has other mixer kinds")
     x = embed(cfg, params["embed"], tokens)
     if sh is not None:
         x = sh.c(x, ("act_batch", "act_seq_res", "act_embed"))

@@ -120,6 +120,29 @@ class PrefixDirectory:
 
 
 class ClusterFrontend:
+    """Fans requests across N :class:`ServeEngine` replicas under one
+    fleet memory plane (DESIGN.md §7).
+
+    Invariants the tests rely on:
+
+    - **Directory ownership lifecycle** — the :class:`PrefixDirectory`
+      mirrors every replica's radix tree: ownership appears with
+      ``register_prefix``/``adopt_prefix`` (incl. the bootstrap of trees
+      that served before this frontend attached) and disappears with
+      exactly the run an evicted leaf covered.
+    - **Migration conservation** — a migration copies (never moves) the
+      donor's pages: donor refcounts are untouched, receiver pages are
+      tree-owned, and both replicas tear down to zero allocator
+      utilization; truncated adoptions stay page-aligned and never leave
+      an unresolved pressure event.
+    - **Report conservation** — fleet totals (tokens, per-tier bytes,
+      pressure resolutions, pooled latency records) equal the sum of the
+      per-replica reports.
+    - **Clock coherence** — a cluster round ends with every replica at
+      the fleet clock (the slowest replica's time), and a migration's
+      interconnect wait is charged to the triggering request's TTFT.
+    """
+
     def __init__(self, engines: List[ServeEngine],
                  migrate_prefixes: bool = False,
                  interconnect_gbps: float = 50.0,
@@ -198,7 +221,9 @@ class ClusterFrontend:
             return 0
         e = self.engines[target]
         imp = e.import_prefix(exp["tokens"], caches=exp["caches"],
-                              hot=exp["hot"], hits=exp["hits"])
+                              hot=exp["hot"], hits=exp["hits"],
+                              snap_kind=exp["snap_kind"],
+                              snap_tokens=exp["snap_tokens"])
         if imp["total_tokens"] == 0:
             return 0
         moved = (imp["new_tokens"] * e.kv.kv_bytes_token

@@ -17,13 +17,21 @@ explicit :class:`StepPlan` / :class:`StepReport` interface:
 Prefix reuse is *real* in both planes (DESIGN.md §6): at admission the
 prompt is matched against the radix prefix tree; on a hit the matched
 page-aligned tokens are attached in the memory plane (no KV writes) AND
-skipped in the compute plane — the slot's ring caches are seeded from the
+skipped in the compute plane — the slot's caches are seeded from the
 donor's published cache snapshot and prefill continues via ``extend`` from
-the match boundary. A hit therefore cuts prefill chunks, metered KV
+the seeded boundary. A hit therefore cuts prefill chunks, metered KV
 writes, and step latency together. With ``prefix_caching`` enabled prompts
 are *unpadded* so token ``i`` sits at position ``prefix_len + i`` for every
 request — shared prefixes are position-aligned across prompt lengths
 (multi-turn chat, shared system prompts, RAG fan-out all match).
+
+Compute reuse covers every mixer family (DESIGN.md §8): attention and MLA
+snapshots are *positional* (ring caches masked by stored positions — one
+snapshot serves any shorter page-aligned boundary), SSM and hybrid
+snapshots are *point* captures of the recurrent state, taken mid-prefill
+at page-aligned boundaries (the prompt's last page boundary, plus the
+request's own match boundary when sharing was observed there) and valid
+only at exactly the boundary they were captured at.
 
 Chunked prefill: prompts longer than ``chunk_tokens`` are fed to the model
 in pieces interleaved with decode rounds, bounding inter-token latency for
@@ -128,7 +136,7 @@ class StepReport:
 
 @dataclass
 class SnapshotHandle:
-    """A donor slot's ring-cache snapshot with its metered backing region.
+    """A donor slot's cache snapshot with its metered backing region.
 
     The compute-plane arrays used to be held as unmetered Python-side JAX
     arrays (ROADMAP: snapshot memory accounting); they are now carved from
@@ -136,11 +144,20 @@ class SnapshotHandle:
     array bytes, compute scale: the acct-scale KV bytes already live in
     the paged manager, metering both would double-count the same state),
     released when the owning radix node leaves the tree. The manager
-    releases via duck-typed ``release()`` so it stays payload-agnostic."""
+    releases via duck-typed ``release()`` so it stays payload-agnostic.
+
+    ``kind``/``tokens`` are the per-architecture validity contract
+    (DESIGN.md §8): a ``"positional"`` snapshot (attention KV, MLA latent
+    cache) covers every page-aligned boundary up to ``tokens`` because
+    stale entries stay position-masked; a ``"point"`` snapshot (SSM
+    recurrent state, hybrid union) is valid *only* at exactly ``tokens``
+    absolute positions (incl. the meta/frontend prefix)."""
     caches: object
     nbytes: float
     mem: MemorySystem
     region_id: Optional[int]
+    kind: str = "positional"
+    tokens: int = 0
 
     def release(self) -> None:
         if self.region_id is not None:
@@ -156,16 +173,38 @@ class SnapshotHandle:
 class _SlotPrefill:
     """Continuation state of a (possibly radix-shortened) chunked prefill:
     how far into the prompt the slot's caches already reach — a prefix hit
-    starts `done` at the match boundary instead of 0."""
+    starts `done` at the seeded boundary instead of 0.
+
+    For point-snapshot stacks (SSM/hybrid, DESIGN.md §8) the prefill also
+    carries up to two page-aligned *capture points* (`padded`-index
+    space): ``snap_match_at`` — the observed-share boundary (this
+    request's own match), whose snapshot is attached to the matched radix
+    node as soon as the prefill crosses it — and ``snap_end_at`` — the
+    speculative last page boundary of the prompt, published with the
+    prompt's registration. ``next_chunk`` splits chunks at these points so
+    the recurrent state is capturable exactly there."""
     req: Request
     padded: np.ndarray            # prompt tokens (padded only when bucketed)
     chunk: int
     key: Optional[np.ndarray]     # radix key: prefix_len sentinels + tokens
     match: Optional[PrefixMatch]
     done: int = 0   # tokens of `padded` already in the slot's caches
+    grid: Optional[int] = None            # point stacks: page-aligned chunking
+    snap_match_at: Optional[int] = None   # point capture: match boundary
+    snap_end_at: Optional[int] = None     # point capture: last page boundary
+    point_caches: object = None           # the end-boundary capture
 
     def next_chunk(self, slot: int, prefix_len: int) -> PrefillChunk:
         end = min(self.done + self.chunk, len(self.padded))
+        if self.grid:
+            # point-snapshot stacks chunk on the position-space page grid:
+            # recurrent-state arithmetic depends on the chunk partition, so
+            # every engine must cut prompts identically (seeded resumption
+            # stays bit-equal to a cold run) and every capture boundary
+            # lands exactly on a chunk end (DESIGN.md §8)
+            nxt = ((prefix_len + self.done) // self.grid + 1) * self.grid \
+                - prefix_len
+            end = min(end, max(nxt, self.done + 1))
         return PrefillChunk(slot, self.req.request_id,
                             self.padded[self.done:end],
                             offset=prefix_len + self.done,
@@ -403,6 +442,25 @@ class MemoryPlane:
 
 
 class ServeEngine:
+    """One replica's orchestrator: plans each step (prefill chunks + one
+    decode round), executes it against the :class:`ComputeBackend` and
+    :class:`MemoryPlane`, and advances the simulated clock by the modelled
+    per-tier step latency.
+
+    Invariants the tests rely on:
+
+    - **Hit/cold equivalence** — a prefix hit (seeded slot + extend from
+      the boundary) and a cross-replica migrated hit decode bit-identically
+      (fp32) to a cold start; at least one prompt token always computes.
+    - **Snapshot accounting** — every published compute snapshot is a
+      metered region in the KV tier (``SnapshotHandle``), released when
+      its radix node leaves the tree; ``live_snapshot_bytes`` never leaks.
+    - **Point-capture validity** — a ``kind="point"`` snapshot is only
+      published at a page-aligned boundary the slot's caches exactly
+      reached, and only seeded when the borrower's match covers it
+      (DESIGN.md §8).
+    """
+
     def __init__(self, cfg: ModelConfig, params, mem: MemorySystem,
                  ecfg: EngineConfig, account_cfg: Optional[ModelConfig] = None):
         """``account_cfg`` decouples the memory-accounting scale from the
@@ -414,10 +472,9 @@ class ServeEngine:
         self.params = params
         self.mem = mem
         self.ecfg = ecfg
-        if ecfg.chunk_tokens is not None and not tfm.supports_extend(cfg):
-            raise ValueError(
-                f"chunk_tokens requires an all-attention stack; {cfg.name} "
-                f"has other mixer kinds (whole-prompt prefill only)")
+        # how this stack's prefix snapshots may be reused (DESIGN.md §8):
+        # "positional" (attention/MLA) or "point" (SSM/hybrid)
+        self.snapshot_kind = tfm.snapshot_kind(cfg)
         self.sched = ContinuousBatchScheduler(ecfg.max_slots,
                                               ecfg.max_prefills_per_step)
         self.backend = ComputeBackend(cfg, params, ecfg)
@@ -561,33 +618,123 @@ class ServeEngine:
         key = self.radix_key_for(prompt_tokens)
         return 0 if key is None else self.kv.match_len(key)
 
-    def _compute_reuse(self, match: PrefixMatch, padded: np.ndarray) -> int:
-        """Tokens of `padded` the compute plane may skip: requires a donor
-        snapshot, an extend-capable stack, and a match covering the whole
-        meta/frontend region (extend cannot restart mid-meta). At least
-        one token always runs — the last position's logits seed the first
-        sampled token. (Compute reuse needs no page alignment: the donor
-        snapshot covers every matched position.)"""
-        if match.payload is None or not tfm.supports_extend(self.cfg):
-            return 0
-        reuse = match.tokens - self.backend.prefix_len()
-        return max(0, min(reuse, padded.shape[0] - 1))
+    def _point_snapshot_for(self, node, max_tokens: int
+                            ) -> Optional[SnapshotHandle]:
+        """Deepest live *point* snapshot usable at a match ending at
+        ``node`` with ``max_tokens`` matched positions: a handle on the
+        node's ancestor path or in its subtree is sound iff its boundary
+        ``tokens`` is covered both by the borrower's match (the state
+        integrates only tokens the borrower shares) and by the holder's
+        own root path (the tree vouches for exactly that run — a
+        registration truncated by unsealed/dropped pages may sit above
+        its snapshot's boundary). The deepest such handle skips the most
+        compute. Tree traversal lives with the tree
+        (:meth:`RadixKVIndex.payload_candidates`)."""
+        best = None
+        for h, depth in self.kv.radix.payload_candidates(node):
+            if (isinstance(h, SnapshotHandle) and h.live and h.kind == "point"
+                    and h.tokens <= min(max_tokens, depth)
+                    and (best is None or h.tokens > best.tokens)):
+                best = h
+        return best
+
+    def _compute_reuse(self, match: PrefixMatch, padded: np.ndarray) -> tuple:
+        """(tokens of `padded` the compute plane may skip, the snapshot to
+        seed from). Requires a donor snapshot valid at a boundary covering
+        the whole meta/frontend region (extend cannot restart mid-meta).
+        At least one token always runs — the last position's logits seed
+        the first sampled token.
+
+        Positional stacks (attention/MLA) seed from the nearest payload at
+        or below the match: stale entries beyond the boundary stay masked.
+        Point stacks (SSM/hybrid) seed only from a snapshot captured at an
+        exactly-shared boundary (DESIGN.md §8) — the deepest one at or
+        under the match length wins."""
+        plen = self.backend.prefix_len()
+        L = padded.shape[0]
+        if match.tokens == 0 or not tfm.supports_extend(self.cfg):
+            return 0, None
+        if self.snapshot_kind == "positional":
+            if match.payload is None:
+                return 0, None
+            reuse = max(0, min(match.tokens - plen, L - 1))
+            return (reuse, match.payload) if reuse else (0, None)
+        snap = self._point_snapshot_for(match.node,
+                                        min(match.tokens, plen + L - 1))
+        if snap is None or snap.tokens <= plen:
+            return 0, None
+        return snap.tokens - plen, snap
+
+    def _plan_point_captures(self, st: _SlotPrefill, reuse: int) -> None:
+        """Decide where a point-snapshot stack captures its recurrent
+        state (page-aligned absolute boundaries, DESIGN.md §8): at this
+        request's own match boundary — sharing *observed* there, so the
+        next borrower skips what this one had to recompute — and
+        speculatively at the prompt's last page boundary (serves multi-
+        turn/RAG traffic that extends this prompt). Boundaries the seeded
+        prefix already covers, or that an attention ring could not replay
+        from, are skipped."""
+        plen = self.backend.prefix_len()
+        pt = self.ecfg.page_tokens
+        end_b = ((plen + len(st.padded)) // pt) * pt
+        match_b = st.match.tokens if st.match is not None else 0
+        if (match_b > plen and match_b - plen > reuse
+                and match_b - plen <= len(st.padded) - 1
+                and self._point_boundary_ok(match_b)):
+            st.snap_match_at = match_b - plen
+        # the end capture is skipped only when the match capture already
+        # covers that exact boundary — NOT whenever the boundaries merely
+        # coincide: a full-prompt page-aligned match (match capture
+        # ineligible, at least one token must compute) with no usable
+        # snapshot would otherwise never acquire one
+        if (end_b > plen and end_b - plen > reuse
+                and (end_b - plen) != st.snap_match_at
+                and self._point_boundary_ok(end_b)):
+            st.snap_end_at = end_b - plen
+
+    def _point_boundary_ok(self, boundary: int) -> bool:
+        """A point capture at absolute position ``boundary`` is replayable
+        iff every attention ring in the stack still holds what a resumed
+        borrower would attend to: a full window (ring == window) always
+        does; a global or window-truncated ring must hold all of
+        [0, boundary)."""
+        from repro.models.attention import cache_len_for
+        for spec in self.cfg.layer_specs():
+            if spec.kind == "ssm":
+                continue
+            ring = cache_len_for(spec.window, self.ecfg.max_cache_len)
+            if spec.window is not None and spec.window <= ring:
+                continue
+            if boundary > ring:
+                return False
+        return True
 
     def _admit(self, slot: int, req: Request) -> _SlotPrefill:
         ecfg = self.ecfg
         padded, chunk, key = self._prep(req)
         self._prep_cache.pop(req.request_id, None)
         match = None
-        reuse = 0
+        reuse, snap = 0, None
         if ecfg.prefix_caching:
             match = self.kv.match_prefix(key)
-            reuse = self._compute_reuse(match, padded)
+            reuse, snap = self._compute_reuse(match, padded)
+        # point stacks chunk on the page grid whenever prompts run
+        # unpadded (prefix caching or chunked prefill) — the partition,
+        # not just the tokens, determines the recurrent state's rounding,
+        # so warm/cold/migrated runs must all cut prompts the same way
+        grid = (ecfg.page_tokens
+                if (self.snapshot_kind == "point"
+                    and (ecfg.prefix_caching or ecfg.chunk_tokens is not None))
+                else None)
         st = _SlotPrefill(req=req, padded=padded, chunk=chunk,
-                          key=key, match=match, done=reuse)
+                          key=key, match=match, done=reuse, grid=grid)
+        if ecfg.prefix_caching and key is not None \
+                and self.snapshot_kind == "point":
+            self._plan_point_captures(st, reuse)
         if reuse:
-            # the hit is real in the compute plane: seed the slot's ring
-            # caches from the donor snapshot and extend from the boundary
-            self.backend.seed_slot(slot, match.payload.caches)
+            # the hit is real in the compute plane: seed the slot's caches
+            # from the donor snapshot and extend from the boundary
+            self.backend.seed_slot(slot, snap.caches)
             self.prefix_compute_hits += 1
             self.prefill_tokens_skipped += reuse
             req.prompt_pos = min(reuse, req.prompt_len)
@@ -633,19 +780,66 @@ class ServeEngine:
         return float(sum(a.size * a.dtype.itemsize
                          for a in jax.tree.leaves(caches)))
 
-    def _publish_snapshot(self, caches) -> Optional[SnapshotHandle]:
-        """Carve a donor ring-cache snapshot out of the KV tier budget
-        (metered write). If the tier has no headroom the snapshot is not
-        published — the prefix still shares pages, it just cannot donate
-        compute. Never a pressure-ledger event: a snapshot is an optional
-        acceleration, not required state."""
+    def _publish_snapshot(self, caches, kind: str = "positional",
+                          tokens: int = 0) -> Optional[SnapshotHandle]:
+        """Carve a donor cache snapshot out of the KV tier budget (metered
+        write). If the tier has no headroom the snapshot is not published
+        — the prefix still shares pages, it just cannot donate compute.
+        Never a pressure-ledger event: a snapshot is an optional
+        acceleration, not required state. ``kind``/``tokens`` record the
+        per-architecture validity contract (DESIGN.md §8)."""
         nbytes = self._tree_nbytes(caches)
         rid = self.mem.write_region(self.ecfg.kv_tier, "kv:snapshot", nbytes,
                                     expected_lifetime_s=self.ecfg.expected_session_s)
         if rid is None:
             return None
         self.snapshots_published += 1
-        return SnapshotHandle(caches, nbytes, self.mem, rid)
+        return SnapshotHandle(caches, nbytes, self.mem, rid,
+                              kind=kind, tokens=tokens)
+
+    def _donation_fn(self, st: _SlotPrefill, slot: int):
+        """The payload factory a finished prompt registers with its prefix
+        (resolved by the manager only if the deepest node's payload slot
+        is free, so a metered snapshot region is never written for
+        nothing).
+
+        Positional stacks donate the slot's final ring caches — valid for
+        any shorter page-aligned borrower via position masking — unless
+        the prompt overflowed the smallest ring and wrapped it (the early
+        positions a shorter borrower needs are gone; pages still publish
+        for memory-plane reuse). Point stacks donate the state captured at
+        the prompt's last page boundary, when the prefill passed through
+        one (DESIGN.md §8)."""
+        plen = self.backend.prefix_len()
+        if self.snapshot_kind == "positional":
+            if not (tfm.supports_extend(self.cfg)
+                    and plen + len(st.padded) <= self._min_ring_len()):
+                return None
+            return lambda: self._publish_snapshot(
+                self.backend.snapshot_slot(slot), kind="positional",
+                tokens=plen + len(st.padded))
+        if st.point_caches is None or st.snap_end_at is None:
+            return None
+        caches, tokens = st.point_caches, plen + st.snap_end_at
+        return lambda: self._publish_snapshot(caches, kind="point",
+                                              tokens=tokens)
+
+    def _attach_match_snapshot(self, st: _SlotPrefill, slot: int) -> None:
+        """Observed-share capture (point stacks): this request matched a
+        prefix in the memory plane but no point snapshot existed at its
+        boundary, so it had to recompute the shared run — capture the
+        state now that its prefill crossed exactly that boundary and hang
+        it off the matched node (pinned by this session, so it cannot have
+        been evicted), turning the *next* borrower's match into a real
+        compute skip."""
+        node = st.match.node if st.match is not None else None
+        if node is None or node.parent is None or node.payload is not None:
+            return
+        handle = self._publish_snapshot(
+            self.backend.snapshot_slot(slot), kind="point",
+            tokens=self.backend.prefix_len() + st.done)
+        if handle is not None:
+            node.payload = handle
 
     def _snapshot_compatible(self, caches) -> bool:
         """A foreign snapshot is seedable only when its tree matches this
@@ -685,28 +879,44 @@ class ServeEngine:
             if p.region_id is not None:
                 self.mem.read_region(p.region_id, nb, sequential=True)
             kv_bytes += nb
-        caches, snap_bytes = None, 0.0
-        if isinstance(m.payload, SnapshotHandle) and m.payload.live:
-            self.mem.read_region(m.payload.region_id, m.payload.nbytes)
-            caches, snap_bytes = m.payload.caches, m.payload.nbytes
+        # per-kind snapshot resolution (DESIGN.md §8): positional — the
+        # nearest payload below the match covers it via position masking;
+        # point — the deepest snapshot at a boundary the match covers
+        if self.snapshot_kind == "point":
+            handle = self._point_snapshot_for(m.node, m.tokens)
+        else:
+            handle = (m.payload if isinstance(m.payload, SnapshotHandle)
+                      and m.payload.live else None)
+        caches, snap_bytes, skind, stok = None, 0.0, "positional", 0
+        if handle is not None:
+            self.mem.read_region(handle.region_id, handle.nbytes)
+            caches, snap_bytes = handle.caches, handle.nbytes
+            skind, stok = handle.kind, handle.tokens
         return {"tokens": np.asarray(key_tokens)[:m.tokens],
                 "n_tokens": m.tokens, "kv_bytes": kv_bytes,
                 "caches": caches, "snapshot_bytes": snap_bytes,
+                "snap_kind": skind, "snap_tokens": stok,
                 "hot": m.node.hot, "hits": m.node.hits}
 
     def import_prefix(self, tokens, caches=None, hot: bool = False,
-                      hits: int = 0) -> dict:
+                      hits: int = 0, snap_kind: str = "positional",
+                      snap_tokens: int = 0) -> dict:
         """Receiver half: adopt the pages (metered writes into this
         replica's tiers; a donor-hot prefix lands in the hot tier with
         long retention — placement re-solved on arrival) and re-publish
-        the donor's compute snapshot under a locally-metered handle."""
+        the donor's compute snapshot under a locally-metered handle. A
+        *point* snapshot is only republished when the adoption kept every
+        token up to its boundary — a truncated adoption cannot vouch for
+        tokens beyond what was grafted (DESIGN.md §8)."""
         new_tokens, total, node = self.kv.adopt_prefix(tokens, hot=hot,
                                                        hits=hits)
         snap_bytes = 0.0
         if (node is not None and node.payload is None and caches is not None
                 and tfm.supports_extend(self.cfg)
+                and (snap_kind != "point" or 0 < snap_tokens <= total)
                 and self._snapshot_compatible(caches)):
-            handle = self._publish_snapshot(caches)
+            handle = self._publish_snapshot(caches, kind=snap_kind,
+                                            tokens=snap_tokens)
             if handle is not None:
                 node.payload = handle
                 snap_bytes = handle.nbytes
@@ -745,6 +955,14 @@ class ServeEngine:
             self._account_chunk_kv(st, ck)
             st.done += len(ck.tokens)
             st.req.prompt_pos = min(st.done, st.req.prompt_len)
+            # point-snapshot stacks: the recurrent state is only capturable
+            # at the boundary itself (chunks were split to land here)
+            if st.snap_match_at is not None and st.done == st.snap_match_at:
+                self._attach_match_snapshot(st, ck.slot)
+                st.snap_match_at = None
+            if (st.snap_end_at is not None and st.done == st.snap_end_at
+                    and st.point_caches is None):
+                st.point_caches = self.backend.snapshot_slot(ck.slot)
             rpt.prefill_tokens += len(ck.tokens)
             self.prefill_tokens_computed += len(ck.tokens)
             if ck.last:
@@ -755,21 +973,8 @@ class ServeEngine:
                 req.generated += 1
                 self.tokens_generated += 1
                 if st.key is not None:
-                    # a prompt that overflowed the smallest ring wrapped it:
-                    # its snapshot no longer holds the early positions a
-                    # shorter borrower would need, so it cannot donate
-                    # compute (pages still publish for memory-plane reuse)
-                    can_donate = (tfm.supports_extend(self.cfg) and
-                                  self.backend.prefix_len() + len(st.padded)
-                                  <= self._min_ring_len())
-                    # factory, not value: the metered snapshot region is
-                    # only written if the radix node's payload slot is free
-                    slot = ck.slot
-                    snap_fn = ((lambda: self._publish_snapshot(
-                                    self.backend.snapshot_slot(slot)))
-                               if can_donate else None)
                     self.kv.register_prefix(req.request_id, st.key,
-                                            payload=snap_fn)
+                                            payload=self._donation_fn(st, ck.slot))
                 self.sched.mark_decoding(ck.slot)
                 del self._inflight[ck.slot]
 
@@ -837,6 +1042,7 @@ class ServeEngine:
         prefix = self.kv.prefix_report()
         prefix["compute_hits"] = self.prefix_compute_hits
         prefix["tokens_skipped_compute"] = self.prefill_tokens_skipped
+        prefix["snapshot_kind"] = self.snapshot_kind
         prefix["hot_tier"] = self.memplane.hot_tier
         prefix["snapshots_published"] = self.snapshots_published
         prefix["snapshot_bytes"] = snapshot_bytes

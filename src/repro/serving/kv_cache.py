@@ -130,6 +130,31 @@ class RadixStats:
 
 
 class PagedKVManager:
+    """The memory-plane half of KV: page allocation/retention/eviction
+    over the MRM pool, with shared prefixes hanging off a
+    :class:`RadixKVIndex`.
+
+    Invariants the tests rely on:
+
+    - **Pin-transfer-at-register** — a live session always pins exactly
+      one radix path: ``open_session`` pins the matched node,
+      ``register_prefix`` moves that pin to the deepest published node,
+      ``close_session`` releases it. Consequence: unlocked leaves hold
+      pages referenced by nothing but the tree, so leaf-LRU eviction
+      frees capacity immediately and pinned paths are never evicted.
+    - **Pressure-ledger balance** — every failed allocation is resolved
+      exactly once: ``events == resolved_evict + resolved_spill +
+      resolved_recompute + unresolved``, and ``unresolved == 0`` for
+      every policy except the legacy ``"none"``.
+    - **Token/refcount conservation** — a page's refcount equals the
+      number of live sessions holding it plus one if the tree holds it;
+      regions are released exactly when the refcount reaches zero.
+    - **Directory ownership lifecycle** — ``on_prefix_insert`` fires for
+      every published/adopted path and ``on_prefix_evict`` fires with the
+      exact run an evicted leaf covered (pressure, watermark and cold
+      decay alike), so a fleet directory mirrors tree membership.
+    """
+
     def __init__(self, cfg: ModelConfig, mem: MemorySystem, tier: str,
                  page_tokens: int = 128,
                  expected_session_s: float = 600.0,

@@ -81,7 +81,15 @@ class PrefixMatch:
 
 
 class RadixKVIndex:
-    """Radix tree of page-aligned prefixes with leaf-LRU eviction."""
+    """Radix tree of page-aligned prefixes with leaf-LRU eviction.
+
+    Invariants the tests rely on (property-tested in tests/test_radix.py):
+    every node's key length is a whole number of pages and equals
+    ``page_tokens * len(node.pages)``; a child's first page is its key in
+    the parent's ``children`` dict (walks are one lookup per page); locked
+    paths (``lock_ref > 0``) are never evicted; ``pop_leaf`` only detaches
+    unlocked leaves and stamps ``evicted_path`` with the exact run the
+    leaf covered, so callers can invalidate fleet-directory ownership."""
 
     def __init__(self, page_tokens: int):
         if page_tokens < 1:
@@ -195,6 +203,30 @@ class RadixKVIndex:
                 return n.payload
             stack.extend(n.children.values())
         return None
+
+    def payload_candidates(self, node: RadixNode) -> Iterator[Tuple[Any, int]]:
+        """Yield ``(payload, holder_root_path_tokens)`` for every payload
+        on ``node``'s root path and in its subtree. The holder's root-path
+        length is the run the tree vouches for — callers filter on it (the
+        engine's per-family snapshot resolution, DESIGN.md §8) so the
+        tree-structure knowledge stays in this module."""
+        depth = 0
+        n = node
+        while n is not None:
+            depth += n.n_tokens
+            n = n.parent
+        d, n = depth, node
+        while n is not None:                # the path itself, deepest first
+            if n.payload is not None:
+                yield n.payload, d
+            d -= n.n_tokens
+            n = n.parent
+        stack = [(node, depth)]             # the subtree below
+        while stack:
+            n, d = stack.pop()
+            if n is not node and n.payload is not None:
+                yield n.payload, d
+            stack.extend((c, d + c.n_tokens) for c in n.children.values())
 
     @staticmethod
     def _path(node: RadixNode) -> List[RadixNode]:

@@ -58,6 +58,14 @@ class SchedulerStats:
 
 
 class ContinuousBatchScheduler:
+    """Slot bookkeeping + admission policy for one engine.
+
+    Invariants the tests rely on: every submitted request is admitted
+    exactly once and finished exactly once; ``len(active) <= max_slots``
+    at all times; prefix-aware admission never starves the FIFO head
+    beyond ``max_skip`` bypasses; slots marked ``prefilling`` are excluded
+    from decode until the engine marks them decoding."""
+
     def __init__(self, max_batch_slots: int, max_prefills_per_step: int = 2,
                  max_skip: int = 4):
         self.max_slots = max_batch_slots
