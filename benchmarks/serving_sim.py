@@ -15,7 +15,12 @@
    attention (deepseek-7b), SSM point snapshots (mamba2-2.7b) and the
    hybrid union (hymba-1.5b); stacks with a KV write stream must also cut
    KV-tier write bytes >= 30%.
-4. Fleet-reuse sweep: N replicas x shared-prefix fan-out with the fleet
+4. Tail-reuse sweep (DESIGN.md §9): shared prefixes whose length
+   straddles a page boundary, tail-copy on vs the page-aligned matcher —
+   the prefill-token cut with sub-page tails must strictly exceed the
+   page-aligned cut at identical decoded tokens, with tail-copy bytes
+   metered and pressure ledgers balanced.
+5. Fleet-reuse sweep: N replicas x shared-prefix fan-out with the fleet
    prefix directory + cross-replica migration on vs the per-replica radix
    baseline (each replica recomputes the shared head cold) — must show a
    cross-replica hit rate > 0, a >= 20% fleet prefill-token cut at
@@ -131,6 +136,90 @@ def prefix_reuse(arch="deepseek-7b", **workload_kw) -> dict:
         "ttft_p95_s": on["latency"]["ttft_p95"],
         "ttft_p50_cold_s": off["latency"]["ttft_p50"],
         "itl_p50_s": on["latency"]["itl_p50"],
+    }
+
+
+def tail_reuse(arch="deepseek-7b", page_tokens=16, head_tokens=56,
+               fanout=6, tail_len=9) -> dict:
+    """Sub-page tail reuse (DESIGN.md §9) on prefix lengths that straddle
+    page boundaries: the shared head is deliberately NOT page-aligned
+    (``head_tokens % page_tokens != 0``), so a page-aligned matcher (the
+    PR 4 behavior, ``tail_copy=False``) recomputes the mid-page tail on
+    every hit while the tail-copy path resumes extend from the exact
+    token boundary. Asserts, at identical decoded tokens across all three
+    runs (tail on / page-aligned / prefix caching off):
+
+    - the tail-on prefill-token cut **strictly exceeds** the page-aligned
+      cut (the PR 4 baseline);
+    - tail-copy bytes were actually metered (read + write over the bus);
+    - every pressure ledger balances with zero unresolved events.
+    """
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServeEngine
+
+    assert head_tokens % page_tokens != 0, "head must straddle a page"
+    full = get_config(arch)
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    head = list(rng.integers(2, cfg.vocab_size, head_tokens))
+    prompts = [head + list(rng.integers(2, cfg.vocab_size, tail_len))
+               for _ in range(fanout)]
+
+    def run_one(tail_copy: bool, prefix_caching: bool = True):
+        mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40),
+                            "hbm": (HBM3E, 1 << 37)})
+        eng = ServeEngine(cfg, params, mem,
+                          EngineConfig(max_slots=2, max_cache_len=96,
+                                       weight_tier="hbm", kv_tier="mrm",
+                                       eos_token=-1, chunk_tokens=16,
+                                       page_tokens=page_tokens,
+                                       prefix_caching=prefix_caching,
+                                       tail_copy=tail_copy),
+                          account_cfg=full)
+        for p in prompts:   # sequential: every later prompt can hit
+            eng.submit(list(p), 6)
+            eng.run_until_idle()
+        return eng, eng.report()
+
+    eng_tail, on = run_one(True)
+    eng_page, page = run_one(False)
+    eng_cold, cold = run_one(True, prefix_caching=False)
+    outs = [{k: list(v) for k, v in e.outputs.items()}
+            for e in (eng_tail, eng_page, eng_cold)]
+    assert outs[0] == outs[1] == outs[2], "tail reuse changed decoded tokens"
+    assert on["tokens_generated"] == page["tokens_generated"] \
+        == cold["tokens_generated"]
+    cut_tail = 1 - on["prefill_tokens_computed"] / cold["prefill_tokens_computed"]
+    cut_page = 1 - page["prefill_tokens_computed"] / cold["prefill_tokens_computed"]
+    assert cut_tail > cut_page, \
+        f"tail cut {cut_tail:.2%} must strictly beat page-aligned {cut_page:.2%}"
+    prefix = on["prefix"]
+    assert prefix["tail_hits"] > 0, prefix
+    assert prefix["tail_copy_bytes"] > 0, prefix
+    for rep in (on, page, cold):
+        p = rep["pressure"]
+        assert p["events"] == (p["resolved_evict"] + p["resolved_spill"]
+                               + p["resolved_recompute"] + p["unresolved"])
+        assert p["unresolved"] == 0 and rep["dropped_allocs"] == 0
+    return {
+        "requests": len(prompts),
+        "page_tokens": page_tokens,
+        "head_tokens": head_tokens,
+        "prefill_tokens_tail": on["prefill_tokens_computed"],
+        "prefill_tokens_page_aligned": page["prefill_tokens_computed"],
+        "prefill_tokens_cold": cold["prefill_tokens_computed"],
+        "prefill_cut": cut_tail,
+        "prefill_cut_page_aligned": cut_page,
+        "tail_hits": prefix["tail_hits"],
+        "tail_tokens_copied": prefix["tail_tokens_copied"],
+        "tail_copy_bytes": prefix["tail_copy_bytes"],
+        "tokens_skipped_compute": on["prefill_tokens_skipped"],
+        "ttft_p50_s": on["latency"]["ttft_p50"],
+        "ttft_p50_page_aligned_s": page["latency"]["ttft_p50"],
     }
 
 
@@ -369,6 +458,18 @@ def run(csv=True):
             if reuse["kv_write_cut"] is not None:
                 print(f"serving_sim/{tag}_kv_write_cut,{dt:.1f},{reuse['kv_write_cut']:.4f}")
             print(f"serving_sim/{tag}_ttft_p50_s,{dt:.1f},{reuse['ttft_p50_s']:.6f}")
+    # sub-page tails: boundary-straddling prefixes must beat the
+    # page-aligned cut strictly (DESIGN.md §9)
+    t0 = time.perf_counter()
+    tail = tail_reuse()
+    dt = (time.perf_counter() - t0) * 1e6
+    out["tail_reuse"] = tail
+    if csv:
+        print(f"serving_sim/tail_prefill_cut,{dt:.1f},{tail['prefill_cut']:.4f}")
+        print(f"serving_sim/tail_prefill_cut_page_aligned,{dt:.1f},"
+              f"{tail['prefill_cut_page_aligned']:.4f}")
+        print(f"serving_sim/tail_hits,{dt:.1f},{tail['tail_hits']}")
+        print(f"serving_sim/tail_copy_bytes,{dt:.1f},{tail['tail_copy_bytes']:.0f}")
     for key, fleet_arch, seed_tail in (("fleet_reuse", "deepseek-7b", 16),
                                        ("fleet_reuse_ssm", "mamba2-2.7b", 0)):
         t0 = time.perf_counter()

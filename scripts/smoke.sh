@@ -29,6 +29,12 @@ for key in ("prefix_reuse", "prefix_reuse_ssm", "prefix_reuse_hybrid"):
     assert reuse["prefill_cut"] >= 0.30, (key, reuse)
     if reuse["kv_write_cut"] is not None:
         assert reuse["kv_write_cut"] >= 0.30, (key, reuse)
+# sub-page tails (DESIGN.md §9): boundary-straddling prefixes must cut
+# strictly more prefill tokens than the page-aligned matcher, with the
+# tail copies actually metered — a tail-reuse regression fails the build
+tr = rep["suites"]["serving"]["tail_reuse"]
+assert tr["prefill_cut"] > tr["prefill_cut_page_aligned"], tr
+assert tr["tail_hits"] > 0 and tr["tail_copy_bytes"] > 0, tr
 # fleet-level reuse: the prefix directory + cross-replica migration must
 # cut fleet prefill tokens >= 20% vs the per-replica radix baseline, with
 # real metered interconnect traffic and balanced pressure ledgers — a
@@ -50,6 +56,9 @@ print("prefix reuse:", {k: round(reuse[k], 4) for k in
 print("prefix reuse (ssm/hybrid):",
       {k: round(rep["suites"]["serving"][k]["prefill_cut"], 4)
        for k in ("prefix_reuse_ssm", "prefix_reuse_hybrid")})
+print("tail reuse:", {k: round(tr[k], 4) for k in
+                      ("prefill_cut", "prefill_cut_page_aligned",
+                       "tail_hits", "tail_tokens_copied")})
 print("fleet reuse:", {k: round(fr[k], 4) for k in
                        ("prefill_cut", "cross_replica_hit_rate",
                         "migrations", "migration_bytes")})

@@ -50,9 +50,11 @@ def build_engine(args, cfg, full, params):
                      kv_pressure_policy=args.kv_policy,
                      kv_spill_tier=args.spill_tier,
                      prefix_caching=not args.no_prefix_caching,
+                     tail_copy=args.tail_copy == "on",
                      radix_hot_threshold=args.radix_hot_threshold,
                      radix_hot_tier=args.radix_hot_tier,
-                     radix_cold_ttl_s=args.radix_cold_ttl),
+                     radix_cold_ttl_s=args.radix_cold_ttl,
+                     demote_on_pressure=args.demote_on_pressure),
         account_cfg=full)
 
 
@@ -70,7 +72,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--chunk-tokens", type=int, default=None,
-                    help="chunked prefill piece size (None = whole prompt; "
+                    help="chunked prefill piece size (None = one maximal "
+                         "chunk per prompt on the same unpadded path; "
                          "every mixer family supports chunking)")
     ap.add_argument("--kv-policy", default="evict-lru",
                     choices=("none", "evict-lru", "spill", "recompute"))
@@ -81,7 +84,16 @@ def main(argv=None):
     ap.add_argument("--page-tokens", type=int, default=32,
                     help="KV page size in tokens (radix match granularity)")
     ap.add_argument("--no-prefix-caching", action="store_true",
-                    help="disable the radix prefix tree (cold baseline)")
+                    help="disable the radix prefix tree (cold baseline; "
+                         "the prompt layout is unpadded either way)")
+    ap.add_argument("--tail-copy", choices=("on", "off"), default="on",
+                    help="sub-page tail reuse: copy the shared mid-page "
+                         "tail into the borrower's page and resume prefill "
+                         "from the exact token boundary (DESIGN.md §9)")
+    ap.add_argument("--demote-on-pressure", action="store_true",
+                    help="under eviction pressure, demote hot prefixes "
+                         "back to short retention (metered reprogram) "
+                         "before leaf eviction may reach them")
     ap.add_argument("--shared-prefix-tokens", type=int, default=0,
                     help="generated prompts share a head of this many "
                          "tokens (shared system prompt traffic)")

@@ -59,11 +59,13 @@ def _q_scale(cfg: ModelConfig) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _block_attn(q, k, v, qpos, kpos, *, scale, cap, window, kv_valid_len):
+def _block_attn(q, k, v, qpos, kpos, *, scale, cap, window):
     """One (q-chunk x kv-chunk) online-softmax block.
 
     q: (B, Hkv, G, Q, D); k/v: (B, K, Hkv, D); qpos: (Q,), kpos: (K,)
-    returns scores-post-mask partial (p, m, l-terms) pieces.
+    returns scores-post-mask partial (p, m, l-terms) pieces. Masking is
+    purely positional (causality + window): prompts are never padded
+    (DESIGN.md §5), so there is no pad-validity special case.
     """
     s = jnp.einsum("bhgqd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
     s = s * scale
@@ -72,8 +74,6 @@ def _block_attn(q, k, v, qpos, kpos, *, scale, cap, window, kv_valid_len):
     mask = kpos[None, :] <= qpos[:, None]
     if window is not None:
         mask &= kpos[None, :] > (qpos[:, None] - window)
-    if kv_valid_len is not None:
-        mask &= (kpos < kv_valid_len)[None, :]
     s = jnp.where(mask[None, None, None], s, NEG_INF)
     return s
 
@@ -81,7 +81,7 @@ def _block_attn(q, k, v, qpos, kpos, *, scale, cap, window, kv_valid_len):
 def _flash_scan(q_i, k_b, v_b, qpos, kpos_b, sc):
     """Online-softmax over kv chunks. q_i: (B,Hkv,G,Q,Dk); k_b/v_b:
     (nkv,B,K,Hkv,D*); returns (out_unnormalized-normalized fp32, m, l)."""
-    scale, cap, window, valid = sc
+    scale, cap, window = sc
     B, Hkv, G, Q, Dk = q_i.shape
     Dv = v_b.shape[-1]
     m0 = jnp.full((B, Hkv, G, Q), NEG_INF, jnp.float32)
@@ -92,7 +92,7 @@ def _flash_scan(q_i, k_b, v_b, qpos, kpos_b, sc):
         m, l, acc = carry
         kc, vc, kp = xs
         s = _block_attn(q_i, kc, vc, qpos, kp, scale=scale, cap=cap,
-                        window=window, kv_valid_len=valid)
+                        window=window)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -121,7 +121,7 @@ def _flash_chunk_fwd(q_i, k_b, v_b, qpos, kpos_b, sc):
 def _flash_chunk_bwd(sc, res, g):
     """Flash-attention backward: recompute each block's probabilities from
     the saved (m, l) stats; O(block) live memory instead of O(S^2)."""
-    scale, cap, window, valid = sc
+    scale, cap, window = sc
     q_i, k_b, v_b, qpos, kpos_b, out, m, l = res
     g = g.astype(jnp.float32)
     delta = jnp.sum(g * out, axis=-1)  # (B,Hkv,G,Q)
@@ -139,8 +139,6 @@ def _flash_chunk_bwd(sc, res, g):
         mask = kp[None, :] <= qpos[:, None]
         if window is not None:
             mask &= kp[None, :] > (qpos[:, None] - window)
-        if valid is not None:
-            mask &= (kp < valid)[None, :]
         s_post = jnp.where(mask[None, None, None], s_post, NEG_INF)
         p = jnp.exp(s_post - m[..., None]) / l[..., None]  # (B,Hkv,G,Q,K)
         dv_c = jnp.einsum("bhgqk,bhgqd->bkhd", p, g,
@@ -168,18 +166,19 @@ _flash_chunk.defvjp(_flash_chunk_fwd, _flash_chunk_bwd)
 def chunked_attention(
     q, k, v,
     *,
-    q_offset: int = 0,
     window: Optional[int] = None,
     cap: Optional[float] = None,
     scale: float,
     q_chunk: int = 512,
     kv_chunk: int = 1024,
-    kv_valid_len=None,
 ):
     """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, H, D).
 
-    Causal with absolute query offset ``q_offset`` (queries are positions
-    q_offset..q_offset+Sq-1 against keys at positions 0..Skv-1).
+    Causal self-attention over an unpadded sequence: query i sits at
+    position i against keys at positions 0..Skv-1. (The per-query offset
+    and pad-validity parameters of the padded whole-prompt era are gone —
+    chunk-internal KV zero-padding is masked by causality alone, since a
+    padded key's position always exceeds every query's.)
     """
     B, Sq, H, Dk = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -196,11 +195,11 @@ def chunked_attention(
     outs = []
     for i in range(nq):
         q_i = jax.lax.slice_in_dim(q, i * q_chunk, (i + 1) * q_chunk, axis=3)
-        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
-        hi = min(Skv, q_offset + (i + 1) * q_chunk)  # causal end (static)
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        hi = min(Skv, (i + 1) * q_chunk)  # causal end (static)
         lo = 0
         if window is not None:
-            lo = max(0, q_offset + i * q_chunk - window + 1)
+            lo = max(0, i * q_chunk - window + 1)
             lo = (lo // kv_chunk) * kv_chunk  # align to chunk grid
         span = hi - lo
         nkv = max(1, -(-span // kv_chunk))
@@ -216,14 +215,13 @@ def chunked_attention(
             k_sl = jnp.pad(k_sl, ((0, 0), (0, pad), (0, 0), (0, 0)))
             v_sl = jnp.pad(v_sl, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kpos0 = lo + jnp.arange(span_pad)
-        valid = Skv if kv_valid_len is None else kv_valid_len
 
         k_b = k_sl.reshape(B, nkv, kv_chunk, Hkv, Dk).transpose(1, 0, 2, 3, 4)
         v_b = v_sl.reshape(B, nkv, kv_chunk, Hkv, Dv).transpose(1, 0, 2, 3, 4)
         kpos_b = kpos0.reshape(nkv, kv_chunk)
 
         out = _flash_chunk(q_i, k_b, v_b, qpos, kpos_b,
-                           (scale, cap, window, valid))
+                           (scale, cap, window))
         outs.append(out)
 
     out = jnp.concatenate(outs, axis=3) if len(outs) > 1 else outs[0]
@@ -330,15 +328,16 @@ def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
     }
 
 
-def fill_cache_from_prefill(cache: dict, k, v, q_offset: int = 0) -> dict:
-    """Write prefill keys/values (B, S, Hkv, D) into a (possibly smaller,
-    windowed) cache. Keeps the last `cache_len` tokens."""
+def fill_cache_from_prefill(cache: dict, k, v) -> dict:
+    """Write a maximal first chunk's keys/values (B, S, Hkv, D) — always
+    unpadded, token i at position i — into a (possibly smaller, windowed)
+    cache. Keeps the last `cache_len` tokens."""
     S = k.shape[1]
     C = cache["k"].shape[1]
     take = min(S, C)
     ksl = jax.lax.slice_in_dim(k, S - take, S, axis=1)
     vsl = jax.lax.slice_in_dim(v, S - take, S, axis=1)
-    pos = q_offset + jnp.arange(S - take, S, dtype=jnp.int32)
+    pos = jnp.arange(S - take, S, dtype=jnp.int32)
     # ring placement: slot = pos % C
     slots = pos % C
     k_new = cache["k"].at[:, slots].set(ksl.astype(cache["k"].dtype))
@@ -449,7 +448,10 @@ def attention_sublayer(
                                new_cache["pos"], positions, window=window,
                                cap=cfg.attn_softcap, scale=scale)
     else:
-        out = chunked_attention(q, k, v, q_offset=0, window=window,
+        # train and first-chunk prefill share the full-sequence flash
+        # path; a prefill additionally fills the fresh ring cache. Inputs
+        # are always unpadded (DESIGN.md §5), so causal masking is exact.
+        out = chunked_attention(q, k, v, window=window,
                                 cap=cfg.attn_softcap, scale=scale,
                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
         if mode == "prefill":

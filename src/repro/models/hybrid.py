@@ -46,7 +46,11 @@ def hybrid_sublayer(
     half resumes against its ring cache positionally while the SSM half
     continues its recurrence from the carried state — the union cache is
     what makes hybrid prefix snapshots *point* snapshots, DESIGN.md §8).
-    ``decode_active`` masks both halves' cache writes for inactive rows."""
+    Prompts are always unpadded (DESIGN.md §5): both halves see token i
+    at absolute position i, so neither needs pad masking — the SSM half
+    could not mask pads at all (they would integrate into the state),
+    which is why the padded whole-prompt path had to go. ``decode_active``
+    masks both halves' cache writes for inactive rows."""
     attn_cache = cache["attn"] if cache is not None else None
     ssm_cache = cache["ssm"] if cache is not None else None
     a_out, a_cache = attention_sublayer(

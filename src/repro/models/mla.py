@@ -126,14 +126,17 @@ def mla_sublayer(
     cur_pos=None,
     decode_active=None,
 ) -> Tuple[jax.Array, Optional[dict]]:
-    """Modes: ``train``/``prefill`` (full-sequence chunked attention),
-    ``extend`` (chunked-prefill continuation: the chunk's compressed
-    latents are written into the ring cache at their absolute positions,
-    then each query attends the whole cache under position masking — the
-    latent cache is *positional*, exactly like attention KV, so a prefix
-    snapshot seeds any shorter page-aligned boundary; DESIGN.md §8), and
-    ``decode`` (one token). ``decode_active`` ((B,) bool, decode only):
-    rows where False keep their cached latents untouched."""
+    """Modes: ``train``/``prefill`` (full-sequence chunked attention over
+    the *unpadded* layout — token i at absolute position i, so causal
+    masking is exact and the cached latent positions are truthful;
+    DESIGN.md §5), ``extend`` (chunked-prefill continuation: the chunk's
+    compressed latents are written into the ring cache at their absolute
+    positions, then each query attends the whole cache under position
+    masking — the latent cache is *positional*, exactly like attention
+    KV, so a prefix snapshot seeds any page-aligned boundary and, with a
+    sub-page tail copy, the exact mid-page token boundary; DESIGN.md §8,
+    §9), and ``decode`` (one token). ``decode_active`` ((B,) bool, decode
+    only): rows where False keep their cached latents untouched."""
     B, S, d = x.shape
     dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
     scale = (dn + dr) ** -0.5

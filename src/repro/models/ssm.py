@@ -181,10 +181,14 @@ def ssm_sublayer(
 ) -> Tuple[jax.Array, Optional[dict]]:
     """x: (B, S, d_model) -> (out, updated cache or None).
 
-    Modes: ``train`` (no cache), ``prefill`` (zero cache filled in one
-    pass), ``extend`` (chunked-prefill continuation: the cache carries the
-    conv left-context and SSD state after every earlier chunk, so the
-    recurrence resumes mid-prompt), ``decode`` (O(1) per-token step).
+    Modes: ``train`` (no cache), ``prefill``/``extend`` (one code path on
+    the unpadded prompt layout, DESIGN.md §5: the cache carries the conv
+    left-context and SSD state after every earlier chunk, and a *fresh*
+    zero cache IS the empty-history state — a maximal first chunk and a
+    mid-prompt continuation are the same recurrence), ``decode`` (O(1)
+    per-token step). There is no pad handling anywhere: a padded prompt
+    would integrate the pad tokens into the state, which is exactly the
+    masking caveat the single-path refactor deleted.
     ``decode_active`` ((B,) bool, decode only): rows where False keep
     their cache untouched — a batched decode round must not clobber the
     recurrent state of a slot whose prompt is still streaming in."""

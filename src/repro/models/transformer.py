@@ -8,8 +8,12 @@ models and is what makes the 512-device dry-run tractable.
 Entry points:
 - ``loss_and_metrics`` — training forward (+ seq-chunked CE so the
   (B, S, vocab) logits tensor never materializes);
-- ``prefill``          — returns last-position logits + per-group KV caches
+- ``prefill``          — the *maximal first chunk* of the one unpadded
+  serving path (DESIGN.md §5): embeds the meta/frontend prefix + prompt
+  tokens at absolute positions 0..S-1 into fresh per-group caches
   (ring-buffered to the window for local-attention layers);
+- ``extend``           — every later chunk: new tokens at absolute
+  positions against the carried caches;
 - ``decode``           — one-token step against the caches.
 """
 from __future__ import annotations
@@ -219,7 +223,7 @@ def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
                     decode_active=decode_active)
                 outs.append(c_new)
                 aux = aux + aux_u
-            return (xx, aux), (tuple(outs) if caches is not None or mode == "prefill" else None)
+            return (xx, aux), (tuple(outs) if caches is not None else None)
 
         if mode == "train" and cfg.remat != "none":
             if cfg.remat == "dots":
@@ -289,8 +293,13 @@ def loss_and_metrics(cfg: ModelConfig, params, batch: dict, sh=None,
 
 def prefill(cfg: ModelConfig, params, batch: dict, sh=None,
             max_cache_len: Optional[int] = None):
-    """Returns (last_logits (B, V[, K]), caches). The caches cover the whole
-    prompt (+ meta/frontend prefix)."""
+    """The maximal *first chunk* of the one unpadded prompt path
+    (DESIGN.md §5): tokens are never padded — token ``i`` (after the
+    meta/frontend prefix) sits at absolute position ``prefix + i``, so
+    causal masking is exact and the produced caches are position-aligned
+    with every later ``extend`` chunk. Returns (last_logits (B, V[, K]),
+    caches); the caches cover the chunk (+ meta/frontend prefix),
+    ring-truncated to each layer's window."""
     x, prefix = _embed_inputs(cfg, params, batch, sh)
     B, S_tot = x.shape[0], x.shape[1]
     positions = jnp.arange(S_tot)

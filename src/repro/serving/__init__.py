@@ -5,11 +5,13 @@ from repro.serving.engine import (ComputeBackend, EngineConfig, MemoryPlane,
                                   latency_percentiles)
 from repro.serving.kv_cache import PagedKVManager, PressureStats, RadixStats
 from repro.serving.radix import PrefixMatch, RadixKVIndex, RadixNode
+from repro.serving.retention_lifecycle import LifecycleStats, RetentionLifecycle
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 __all__ = ["EngineConfig", "ServeEngine", "ComputeBackend", "MemoryPlane",
            "StepPlan", "StepReport", "PrefillChunk", "PagedKVManager",
-           "PressureStats", "RadixStats", "ContinuousBatchScheduler",
+           "PressureStats", "RadixStats", "LifecycleStats",
+           "RetentionLifecycle", "ContinuousBatchScheduler",
            "Request", "ClusterFrontend", "PrefixDirectory", "RadixKVIndex",
            "RadixNode", "PrefixMatch", "SnapshotHandle", "choose_hot_tier",
            "latency_percentiles"]

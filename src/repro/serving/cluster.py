@@ -22,8 +22,14 @@ recomputing them cold.
   replica) the donor's pages and compute snapshot are *pulled* into the
   target replica as a metered inter-replica transfer — bytes charged at
   ``interconnect_gbps`` into the simulated clock, page writes metered
-  against the receiving tiers, retention re-programmed on arrival (a
-  donor-hot prefix lands in the receiver's hot tier at long retention).
+  against the receiving tiers, retention re-programmed on arrival through
+  the one lifecycle state machine (DESIGN.md §9: a donor-hot prefix lands
+  in the receiver's hot tier at long retention).
+- **migration admission control** — each receiver has one modelled
+  interconnect link: concurrent migrations to the same replica serialize
+  on it, a transfer arriving while the link is busy queues (the queue
+  wait is reported in the fleet report's ``interconnect`` section), and
+  the triggering request's TTFT pays queue wait + transfer time.
 - **session-affinity fallback** — requests carrying a ``session_key``
   with no directory match go to their sticky replica;
 - **least-loaded routing** — keyless, matchless requests go to the
@@ -167,11 +173,22 @@ class ClusterFrontend:
         self.migrations = 0        # cross-replica prefix transfers
         self.migrated_tokens = 0   # tokens newly backed on a receiver
         self.migration_bytes = 0.0  # KV + snapshot bytes over the wire
-        self.migration_s = 0.0      # interconnect time charged
+        self.migration_s = 0.0      # interconnect transfer time charged
+        self.migration_queue_wait_s = 0.0  # time spent queued on a busy link
+        self.migrations_queued = 0  # transfers that found their link busy
         self._last_migrated = 0    # tokens grafted for the pending submit
-        # deferred interconnect charges (replica -> seconds): applied
-        # *after* the triggering request is enqueued, so its submitted_at
-        # predates the transfer and its TTFT pays for the migration wait
+        # migration admission control (ROADMAP): each receiver has ONE
+        # modelled interconnect link — concurrent migrations serialize on
+        # it. `_link_busy_until[i]` is the absolute sim time replica i's
+        # link frees up; a transfer arriving earlier queues and its
+        # requester waits out the queue + its own transfer.
+        self._link_busy_until: Dict[int, float] = {}
+        # deferred interconnect charges (replica -> seconds): applied at
+        # the next cluster step, *after* the triggering requests are
+        # enqueued, so their submitted_at predates the transfer and their
+        # TTFT pays for the queue wait + migration time. Deferring a whole
+        # burst (rather than flushing per submit) is what lets same-burst
+        # migrations to one receiver actually contend for its link.
         self._pending_transfer: Dict[int, float] = {}
         # fleet-level prefix directory: every replica's publishes and
         # evictions flow in through the manager hooks; pre-existing tree
@@ -229,18 +246,26 @@ class ClusterFrontend:
         moved = (imp["new_tokens"] * e.kv.kv_bytes_token
                  + imp["snapshot_bytes"])
         if moved > 0:
-            # the transfer occupies the interconnect: the receiving
-            # replica's clock advances by bytes / interconnect bandwidth
-            # (refresh deadlines serviced while it waits). The charge is
-            # deferred until the triggering request is enqueued so its
-            # TTFT includes the migration wait (see _flush_transfer).
-            transfer_s = moved / (self.interconnect_gbps * 1e9)
-            self._pending_transfer[target] = (
-                self._pending_transfer.get(target, 0.0) + transfer_s)
+            # admission control on the receiver's one interconnect link:
+            # the transfer starts when the link frees (queue wait, ROADMAP)
+            # and occupies it for bytes / bandwidth. The receiver's clock
+            # is advanced to the delivery time at the next cluster step
+            # (see _flush_transfer) — after the triggering requests are
+            # enqueued, so their TTFT pays queue wait + transfer.
+            dur = moved / (self.interconnect_gbps * 1e9)
+            t_req = e.mem.now
+            start = max(t_req, self._link_busy_until.get(target, 0.0))
+            wait = start - t_req
+            self._link_busy_until[target] = start + dur
+            self._pending_transfer[target] = \
+                self._link_busy_until[target] - t_req
+            if wait > 0:
+                self.migrations_queued += 1
+                self.migration_queue_wait_s += wait
             self.migrations += 1
             self.migrated_tokens += imp["new_tokens"]
             self.migration_bytes += moved
-            self.migration_s += transfer_s
+            self.migration_s += dur
         return imp["total_tokens"]
 
     def _flush_transfer(self, i: int) -> None:
@@ -306,9 +331,11 @@ class ClusterFrontend:
         local = self.engines[replica].submit(
             prompt_tokens, max_new_tokens,
             migrated_tokens=self._last_migrated)
-        # charge the migration this submit triggered *after* enqueue:
-        # submitted_at predates the transfer, so TTFT pays the wait
-        self._flush_transfer(replica)
+        # the migration this submit may have triggered is charged at the
+        # next cluster step (submitted_at predates the transfer, so TTFT
+        # pays the link's queue wait + transfer time); deferring past the
+        # whole submit burst is what makes same-burst migrations to one
+        # receiver contend for its link (admission control)
         rid = self._next_rid
         self._next_rid += 1
         self.requests[rid] = (replica, local)
@@ -326,7 +353,9 @@ class ClusterFrontend:
         """One cluster round: every busy replica runs an engine step in
         parallel; the fleet clock advances to the slowest replica."""
         for i in list(self._pending_transfer):
-            self._flush_transfer(i)   # migrations via direct route() calls
+            # deliver queued interconnect transfers: each receiver stalls
+            # to its link's delivery time (queue wait + transfer included)
+            self._flush_transfer(i)
         busy = [e for e in self.engines if not e.sched.idle]
         for e in busy:
             e.step()
@@ -393,6 +422,8 @@ class ClusterFrontend:
                 "migrated_tokens": self.migrated_tokens,
                 "migration_bytes": self.migration_bytes,
                 "migration_s": self.migration_s,
+                "queued_migrations": self.migrations_queued,
+                "queue_wait_s": self.migration_queue_wait_s,
             },
             "latency": latency_percentiles(records),
             "per_replica": reps,

@@ -5,8 +5,9 @@ The engine is an orchestrator over two subsystems that talk through an
 explicit :class:`StepPlan` / :class:`StepReport` interface:
 
 - :class:`ComputeBackend` — the JAX compute path: per-slot ring caches,
-  bucketed jit prefill, chunked-prefill continuation (``extend``), and one
-  batched decode step per engine step with per-slot positions.
+  per-length jit first-chunk prefill, chunked-prefill continuation
+  (``extend``), and one batched decode step per engine step with per-slot
+  positions.
 - :class:`MemoryPlane`  — the MRM control plane: weights live in a region
   of the chosen tier (written once at deploy, read wholesale every model
   pass — §2.2); KV pages go through :class:`PagedKVManager` (DCM retention
@@ -20,10 +21,15 @@ page-aligned tokens are attached in the memory plane (no KV writes) AND
 skipped in the compute plane — the slot's caches are seeded from the
 donor's published cache snapshot and prefill continues via ``extend`` from
 the seeded boundary. A hit therefore cuts prefill chunks, metered KV
-writes, and step latency together. With ``prefix_caching`` enabled prompts
-are *unpadded* so token ``i`` sits at position ``prefix_len + i`` for every
-request — shared prefixes are position-aligned across prompt lengths
-(multi-turn chat, shared system prompts, RAG fan-out all match).
+writes, and step latency together. **Every** prompt runs *unpadded* on the
+one chunked path (DESIGN.md §5): token ``i`` sits at position
+``prefix_len + i`` for every request whatever the flags, so shared
+prefixes are position-aligned across prompt lengths (multi-turn chat,
+shared system prompts, RAG fan-out all match) — "whole-prompt" prefill is
+simply the maximal first chunk of the same path. A match may also end
+mid-page: with ``tail_copy`` the sub-page tail is copied into the
+borrower's own page (metered read + write, DESIGN.md §9) and extend
+resumes from the exact token boundary.
 
 Compute reuse covers every mixer family (DESIGN.md §8): attention and MLA
 snapshots are *positional* (ring caches masked by stored positions — one
@@ -33,10 +39,11 @@ at page-aligned boundaries (the prompt's last page boundary, plus the
 request's own match boundary when sharing was observed there) and valid
 only at exactly the boundary they were captured at.
 
-Chunked prefill: prompts longer than ``chunk_tokens`` are fed to the model
-in pieces interleaved with decode rounds, bounding inter-token latency for
-resident sessions and admitting prompts beyond the bucketing ceiling
-(``max_cache_len``) — the ring caches keep the attention window's tail.
+Chunked prefill: prompts longer than ``chunk_tokens`` (or, with
+``chunk_tokens=None``, longer than the smallest per-layer ring) are fed to
+the model in pieces interleaved with decode rounds, bounding inter-token
+latency for resident sessions and admitting prompts beyond
+``max_cache_len`` — the ring caches keep the attention window's tail.
 
 Step time (simulation) is modelled per tier from the bytes each phase
 actually moved and each tier's read/write bandwidth (tiers progress in
@@ -73,11 +80,16 @@ class EngineConfig:
     eos_token: int = 1
     greedy: bool = True
     # radix prefix reuse [53]: match page-aligned prompt prefixes, share
-    # their KV pages, and skip their prefill compute (prompts run unpadded
-    # so prefixes stay position-aligned across lengths)
+    # their KV pages, and skip their prefill compute (prompts always run
+    # unpadded so prefixes stay position-aligned across lengths)
     prefix_caching: bool = True
+    # sub-page tail reuse (DESIGN.md §9): a match ending mid-page copies
+    # the shared tail into the borrower's page and extend resumes from
+    # the exact token boundary (positional stacks)
+    tail_copy: bool = True
     # chunked prefill: feed prompts in `chunk_tokens` pieces interleaved
-    # with decode rounds (None = whole-prompt prefill, the legacy path)
+    # with decode rounds (None = one maximal chunk per prompt, clamped to
+    # the smallest per-layer ring — the same code path)
     chunk_tokens: Optional[int] = None
     # capacity-pressure policy for the KV tier (see PagedKVManager):
     # "evict-lru" | "spill" | "recompute" | "none" (legacy silent drops)
@@ -93,6 +105,12 @@ class EngineConfig:
     radix_hot_retention_s: float = 3600.0
     radix_hot_tier: Optional[str] = None
     radix_cold_ttl_s: Optional[float] = None
+    # pressure-driven demotion (DESIGN.md §9): a hot node is re-programmed
+    # back to short retention (metered) before leaf eviction may reach it
+    demote_on_pressure: bool = False
+    # regression guard (the PR 4 clobbering class): verify after every
+    # decode round that no cache family of an inactive slot was written
+    audit_decode_masking: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -173,29 +191,30 @@ class SnapshotHandle:
 class _SlotPrefill:
     """Continuation state of a (possibly radix-shortened) chunked prefill:
     how far into the prompt the slot's caches already reach — a prefix hit
-    starts `done` at the seeded boundary instead of 0.
+    starts `done` at the seeded boundary (which, with sub-page tail reuse,
+    need not be page-aligned) instead of 0.
 
     For point-snapshot stacks (SSM/hybrid, DESIGN.md §8) the prefill also
-    carries up to two page-aligned *capture points* (`padded`-index
-    space): ``snap_match_at`` — the observed-share boundary (this
-    request's own match), whose snapshot is attached to the matched radix
-    node as soon as the prefill crosses it — and ``snap_end_at`` — the
-    speculative last page boundary of the prompt, published with the
-    prompt's registration. ``next_chunk`` splits chunks at these points so
-    the recurrent state is capturable exactly there."""
+    carries up to two page-aligned *capture points* (prompt-index space):
+    ``snap_match_at`` — the observed-share boundary (this request's own
+    match), whose snapshot is attached to the matched radix node as soon
+    as the prefill crosses it — and ``snap_end_at`` — the speculative
+    last page boundary of the prompt, published with the prompt's
+    registration. ``next_chunk`` splits chunks at these points so the
+    recurrent state is capturable exactly there."""
     req: Request
-    padded: np.ndarray            # prompt tokens (padded only when bucketed)
+    tokens: np.ndarray            # prompt tokens (always unpadded)
     chunk: int
     key: Optional[np.ndarray]     # radix key: prefix_len sentinels + tokens
     match: Optional[PrefixMatch]
-    done: int = 0   # tokens of `padded` already in the slot's caches
+    done: int = 0   # tokens of `tokens` already in the slot's caches
     grid: Optional[int] = None            # point stacks: page-aligned chunking
     snap_match_at: Optional[int] = None   # point capture: match boundary
     snap_end_at: Optional[int] = None     # point capture: last page boundary
     point_caches: object = None           # the end-boundary capture
 
     def next_chunk(self, slot: int, prefix_len: int) -> PrefillChunk:
-        end = min(self.done + self.chunk, len(self.padded))
+        end = min(self.done + self.chunk, len(self.tokens))
         if self.grid:
             # point-snapshot stacks chunk on the position-space page grid:
             # recurrent-state arithmetic depends on the chunk partition, so
@@ -206,10 +225,10 @@ class _SlotPrefill:
                 - prefix_len
             end = min(end, max(nxt, self.done + 1))
         return PrefillChunk(slot, self.req.request_id,
-                            self.padded[self.done:end],
+                            self.tokens[self.done:end],
                             offset=prefix_len + self.done,
                             first=self.done == 0,
-                            last=end == len(self.padded))
+                            last=end == len(self.tokens))
 
 
 # ---------------------------------------------------------------------------
@@ -218,10 +237,11 @@ class _SlotPrefill:
 
 
 class ComputeBackend:
-    """Real-model compute over fixed decode slots: bucketed jit prefill,
-    chunked-prefill continuation (extend), batched decode. Owns the dense
-    ring caches and per-slot positions/tokens; knows nothing about tiers,
-    pages or retention."""
+    """Real-model compute over fixed decode slots: per-length jit
+    first-chunk prefill (prompts are never padded — the compile cache is
+    keyed by the exact chunk length), chunked-prefill continuation
+    (extend), batched decode. Owns the dense ring caches and per-slot
+    positions/tokens; knows nothing about tiers, pages or retention."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
         self.cfg = cfg
@@ -238,13 +258,7 @@ class ComputeBackend:
         self._decode_jit = jax.jit(
             lambda p, c, t, pos, act: tfm.decode(cfg, p, c, t, pos, active=act))
 
-    # -- jit bucketing -------------------------------------------------
-    def bucket(self, n: int) -> int:
-        b = 16
-        while b < n:
-            b *= 2
-        return min(b, self.ecfg.max_cache_len)
-
+    # -- per-length jit caches -----------------------------------------
     def _prefill_fn(self, length: int):
         if length not in self._prefill_jit:
             cfg, ecfg = self.cfg, self.ecfg
@@ -325,10 +339,26 @@ class ComputeBackend:
         B = self.ecfg.max_slots
         act = np.zeros((B,), bool)
         act[slots] = True
+        inactive = [s for s in range(B) if not act[s]]
+        before = None
+        if self.ecfg.audit_decode_masking and inactive:
+            before = [np.asarray(leaf[:, inactive])
+                      for leaf in jax.tree.leaves(self.caches)]
         pos = jnp.asarray(np.maximum(self.positions + 1, 0), jnp.int32)
         logits, self.caches = self._decode_jit(
             self.params, self.caches, jnp.asarray(self.last_tokens), pos,
             jnp.asarray(act))
+        if before is not None:
+            # regression guard for the PR 4 clobbering class: with the
+            # padded whole-prompt path gone, chunked prefill interleaves
+            # with decode for every stack — a decode round must not write
+            # ANY cache family (ring KV, MLA latents, conv/SSD state) of
+            # a slot it did not decode
+            for b, leaf in zip(before, jax.tree.leaves(self.caches)):
+                after = np.asarray(leaf[:, inactive])
+                assert np.array_equal(b, after, equal_nan=True), \
+                    "decode wrote an inactive slot's cache (active-slot " \
+                    "masking regression)"
         next_np = np.asarray(self.sample(logits))
         for slot in slots:
             self.positions[slot] += 1
@@ -398,7 +428,9 @@ class MemoryPlane:
                                  hot_threshold=ecfg.radix_hot_threshold,
                                  hot_retention_s=ecfg.radix_hot_retention_s,
                                  hot_tier=hot_tier,
-                                 cold_ttl_s=ecfg.radix_cold_ttl_s)
+                                 cold_ttl_s=ecfg.radix_cold_ttl_s,
+                                 tail_copy=ecfg.tail_copy,
+                                 demote_on_pressure=ecfg.demote_on_pressure)
         counts = acct_cfg.param_counts()
         self.weight_bytes = counts["total"] * 2  # bf16
         self.active_weight_bytes = counts["active"] * 2
@@ -481,7 +513,7 @@ class ServeEngine:
         self.memplane = MemoryPlane(self.acct_cfg, mem, ecfg)
         self.outputs: Dict[int, list] = {}
         self._inflight: Dict[int, _SlotPrefill] = {}  # slot -> chunk state
-        self._prep_cache: Dict[int, tuple] = {}  # rid -> (padded, chunk, key)
+        self._prep_cache: Dict[int, tuple] = {}  # rid -> (tokens, chunk, key)
         self.tokens_generated = 0
         self.steps = 0
         self.prefill_chunks_run = 0
@@ -529,13 +561,13 @@ class ServeEngine:
         """``migrated_tokens`` marks how many leading tokens a cross-replica
         migration just grafted into this replica's tree for this request —
         the scheduler counts them as a match for prefix-aware admission
-        even if the grafted leaf is evicted before the request is picked."""
-        if (self.ecfg.chunk_tokens is None and
-                len(prompt_tokens) > self.ecfg.max_cache_len):
-            raise ValueError(
-                f"prompt of {len(prompt_tokens)} tokens exceeds the "
-                f"max_cache_len={self.ecfg.max_cache_len} bucketing ceiling; "
-                f"set chunk_tokens to admit it via chunked prefill")
+        even if the grafted leaf is evicted before the request is picked.
+
+        Any prompt length is admissible: there is one unpadded chunked
+        path (DESIGN.md §5), and a prompt longer than the smallest
+        per-layer ring is simply split into ring-bounded chunks even with
+        ``chunk_tokens=None`` — the ring caches keep the attention
+        window's tail, exactly as decode does."""
         rid = len(self.outputs)
         self.outputs[rid] = []
         self.sched.submit(Request(rid, prompt_tokens, max_new_tokens,
@@ -551,52 +583,46 @@ class ServeEngine:
         return min(cache_len_for(spec.window, self.ecfg.max_cache_len)
                    for spec in self.cfg.layer_specs())
 
-    def _pad_plan(self, toks: np.ndarray) -> tuple:
-        """(padded_tokens, chunk) for a prompt. Chunked prefill and the
-        prefix-caching path run *unpadded* — token i sits at position
-        prefix_len + i for every request, so shared prefixes are
-        position-aligned and radix-matchable across prompt lengths (the
-        tail chunk compiles per distinct length; acceptable for the sim).
-        Only whole-prompt prefill without prefix caching keeps the legacy
-        bucketed left-pad that bounds the jit compile count."""
+    def _chunk_plan(self, toks: np.ndarray) -> tuple:
+        """(tokens, chunk) for a prompt — **never padded** (DESIGN.md §5):
+        token i sits at position prefix_len + i for every request, so
+        shared prefixes are position-aligned and radix-matchable across
+        prompt lengths (the tail chunk compiles per distinct length;
+        acceptable for the sim). ``chunk_tokens=None`` means one maximal
+        chunk on the same path. Either way the chunk is clamped to the
+        smallest per-layer ring — a larger chunk would collide intra-chunk
+        ring slots (duplicate scatter indices) — and once the prompt
+        overflows the ring it is halved so each extend still sees the
+        previous chunks' tail."""
         ecfg = self.ecfg
         L = toks.shape[0]
         min_ring = self._min_ring_len()
-        if ecfg.chunk_tokens is None:
-            pad = 0 if ecfg.prefix_caching else self.backend.bucket(L) - L
-            chunk = L + pad
-        else:
-            # a chunk larger than the smallest per-layer ring would collide
-            # intra-chunk ring slots (duplicate scatter indices), so clamp;
-            # and once the prompt overflows the ring, halve the chunk so
-            # each extend still sees the previous chunks' tail
-            pad = 0
-            chunk = min(ecfg.chunk_tokens, min_ring)
-            if L + self.backend.prefix_len() > min_ring:
-                chunk = min(chunk, max(16, min_ring // 2))
-        padded = np.pad(toks, [(pad, 0)] + [(0, 0)] * (toks.ndim - 1))
-        return padded, min(chunk, padded.shape[0])
+        chunk = L if ecfg.chunk_tokens is None else ecfg.chunk_tokens
+        chunk = min(chunk, min_ring)
+        if L + self.backend.prefix_len() > min_ring:
+            chunk = min(chunk, max(16, min_ring // 2))
+        return toks, max(1, min(chunk, L))
 
-    def _radix_key(self, padded: np.ndarray) -> np.ndarray:
+    def _radix_key(self, toks: np.ndarray) -> np.ndarray:
         """Radix tokens in *position space*: the meta/frontend prefix is a
         run of sentinel tokens shared by every request on this engine, so
         page boundaries in the tree line up with KV page boundaries."""
         plen = self.backend.prefix_len()
         if plen == 0:
-            return padded
-        sent = np.full((plen,) + padded.shape[1:], -1, padded.dtype)
-        return np.concatenate([sent, padded], axis=0)
+            return toks
+        sent = np.full((plen,) + toks.shape[1:], -1, toks.dtype)
+        return np.concatenate([sent, toks], axis=0)
 
     def _prep(self, req: Request) -> tuple:
-        """(padded, chunk, radix_key) for a request, memoized while it sits
+        """(tokens, chunk, radix_key) for a request, memoized while it sits
         in the queue (prefix-aware admission rescoring would otherwise
         rebuild the arrays per scheduling round)."""
         ent = self._prep_cache.get(req.request_id)
         if ent is None:
             toks = np.asarray(req.prompt_tokens, np.int32)
-            padded, chunk = self._pad_plan(toks)
-            key = self._radix_key(padded) if self.ecfg.prefix_caching else None
-            ent = (padded, chunk, key)
+            toks, chunk = self._chunk_plan(toks)
+            key = self._radix_key(toks) if self.ecfg.prefix_caching else None
+            ent = (toks, chunk, key)
             self._prep_cache[req.request_id] = ent
         return ent
 
@@ -607,9 +633,7 @@ class ServeEngine:
         off."""
         if not self.ecfg.prefix_caching:
             return None
-        toks = np.asarray(prompt_tokens, np.int32)
-        padded, _ = self._pad_plan(toks)
-        return self._radix_key(padded)
+        return self._radix_key(np.asarray(prompt_tokens, np.int32))
 
     def prefix_match_len(self, prompt_tokens: list) -> int:
         """Longest radix-matchable prefix (in position-space tokens) this
@@ -638,32 +662,52 @@ class ServeEngine:
                 best = h
         return best
 
-    def _compute_reuse(self, match: PrefixMatch, padded: np.ndarray) -> tuple:
-        """(tokens of `padded` the compute plane may skip, the snapshot to
-        seed from). Requires a donor snapshot valid at a boundary covering
-        the whole meta/frontend region (extend cannot restart mid-meta).
-        At least one token always runs — the last position's logits seed
-        the first sampled token.
+    def _compute_reuse(self, match: PrefixMatch, toks: np.ndarray) -> tuple:
+        """(tokens of the prompt the compute plane may skip, the snapshot
+        to seed from, sub-page tail tokens used). Requires a donor
+        snapshot valid at a boundary covering the whole meta/frontend
+        region (extend cannot restart mid-meta). At least one token always
+        runs — the last position's logits seed the first sampled token.
 
-        Positional stacks (attention/MLA) seed from the nearest payload at
-        or below the match: stale entries beyond the boundary stay masked.
-        Point stacks (SSM/hybrid) seed only from a snapshot captured at an
-        exactly-shared boundary (DESIGN.md §8) — the deepest one at or
-        under the match length wins."""
+        Positional stacks (attention/MLA) seed from a payload whose token
+        history covers the *resumption point*: with a sub-page tail
+        (DESIGN.md §9) that must be a payload in the tail child's subtree
+        (every prompt below it shares the tail run), so extend resumes
+        from the exact token boundary ``match.tokens + tail``; otherwise
+        the nearest payload at or below the match serves the page-aligned
+        boundary — stale entries beyond it stay masked. Point stacks
+        (SSM/hybrid) seed only from a snapshot captured at an
+        exactly-shared page-aligned boundary (DESIGN.md §8) — the deepest
+        one at or under the match length wins; a mid-page boundary never
+        has a capture, so tails stay memory-plane-only there (i.e.
+        unused)."""
         plen = self.backend.prefix_len()
-        L = padded.shape[0]
+        L = toks.shape[0]
         if match.tokens == 0 or not tfm.supports_extend(self.cfg):
-            return 0, None
+            return 0, None, 0
         if self.snapshot_kind == "positional":
-            if match.payload is None:
-                return 0, None
-            reuse = max(0, min(match.tokens - plen, L - 1))
-            return (reuse, match.payload) if reuse else (0, None)
+            payload, tail = None, 0
+            avail = self.kv.tail_available(match)
+            if self.ecfg.tail_copy and avail:
+                p = self.kv.radix.subtree_payload(match.tail_node)
+                if (isinstance(p, SnapshotHandle) and p.live
+                        and p.tokens >= match.tokens + avail):
+                    payload, tail = p, avail
+            if payload is None:
+                payload = match.payload
+            if payload is None:
+                return 0, None, 0
+            reuse = max(0, min(match.tokens + tail - plen, L - 1))
+            # the one-token-always-computes clamp may land the resumption
+            # point back inside the tail; only the tokens actually skipped
+            # past the page boundary are worth copying in the memory plane
+            tail = max(0, min(tail, reuse - (match.tokens - plen)))
+            return (reuse, payload, tail) if reuse else (0, None, 0)
         snap = self._point_snapshot_for(match.node,
                                         min(match.tokens, plen + L - 1))
         if snap is None or snap.tokens <= plen:
-            return 0, None
-        return snap.tokens - plen, snap
+            return 0, None, 0
+        return snap.tokens - plen, snap, 0
 
     def _plan_point_captures(self, st: _SlotPrefill, reuse: int) -> None:
         """Decide where a point-snapshot stack captures its recurrent
@@ -676,10 +720,10 @@ class ServeEngine:
         from, are skipped."""
         plen = self.backend.prefix_len()
         pt = self.ecfg.page_tokens
-        end_b = ((plen + len(st.padded)) // pt) * pt
+        end_b = ((plen + len(st.tokens)) // pt) * pt
         match_b = st.match.tokens if st.match is not None else 0
         if (match_b > plen and match_b - plen > reuse
-                and match_b - plen <= len(st.padded) - 1
+                and match_b - plen <= len(st.tokens) - 1
                 and self._point_boundary_ok(match_b)):
             st.snap_match_at = match_b - plen
         # the end capture is skipped only when the match capture already
@@ -711,36 +755,35 @@ class ServeEngine:
 
     def _admit(self, slot: int, req: Request) -> _SlotPrefill:
         ecfg = self.ecfg
-        padded, chunk, key = self._prep(req)
+        toks, chunk, key = self._prep(req)
         self._prep_cache.pop(req.request_id, None)
         match = None
-        reuse, snap = 0, None
+        reuse, snap, tail = 0, None, 0
         if ecfg.prefix_caching:
             match = self.kv.match_prefix(key)
-            reuse, snap = self._compute_reuse(match, padded)
-        # point stacks chunk on the page grid whenever prompts run
-        # unpadded (prefix caching or chunked prefill) — the partition,
-        # not just the tokens, determines the recurrent state's rounding,
-        # so warm/cold/migrated runs must all cut prompts the same way
-        grid = (ecfg.page_tokens
-                if (self.snapshot_kind == "point"
-                    and (ecfg.prefix_caching or ecfg.chunk_tokens is not None))
-                else None)
-        st = _SlotPrefill(req=req, padded=padded, chunk=chunk,
+            reuse, snap, tail = self._compute_reuse(match, toks)
+        # point stacks always chunk on the position-space page grid — the
+        # partition, not just the tokens, determines the recurrent
+        # state's rounding, so warm/cold/migrated runs must all cut
+        # prompts the same way (there is only one prompt layout now)
+        grid = ecfg.page_tokens if self.snapshot_kind == "point" else None
+        st = _SlotPrefill(req=req, tokens=toks, chunk=chunk,
                           key=key, match=match, done=reuse, grid=grid)
         if ecfg.prefix_caching and key is not None \
                 and self.snapshot_kind == "point":
             self._plan_point_captures(st, reuse)
         if reuse:
             # the hit is real in the compute plane: seed the slot's caches
-            # from the donor snapshot and extend from the boundary
+            # from the donor snapshot and extend from the boundary (with a
+            # tail, the exact mid-page token boundary)
             self.backend.seed_slot(slot, snap.caches)
             self.prefix_compute_hits += 1
             self.prefill_tokens_skipped += reuse
             req.prompt_pos = min(reuse, req.prompt_len)
         # open (and pin) the KV session at admission so matched radix
-        # nodes cannot be evicted between planning and execution
-        self.kv.open_session(req.request_id, match=match)
+        # nodes cannot be evicted between planning and execution; the
+        # compute-vetted tail is copied into the session's own page there
+        self.kv.open_session(req.request_id, match=match, tail_tokens=tail)
         self._inflight[slot] = st
         self.sched.mark_prefilling(slot)
         return st
@@ -813,11 +856,11 @@ class ServeEngine:
         plen = self.backend.prefix_len()
         if self.snapshot_kind == "positional":
             if not (tfm.supports_extend(self.cfg)
-                    and plen + len(st.padded) <= self._min_ring_len()):
+                    and plen + len(st.tokens) <= self._min_ring_len()):
                 return None
             return lambda: self._publish_snapshot(
                 self.backend.snapshot_slot(slot), kind="positional",
-                tokens=plen + len(st.padded))
+                tokens=plen + len(st.tokens))
         if st.point_caches is None or st.snap_end_at is None:
             return None
         caches, tokens = st.point_caches, plen + st.snap_end_at

@@ -20,13 +20,23 @@ with any published prompt; ``open_session`` attaches those pages
 extra MRM capacity; ``register_prefix`` publishes a finished prompt's
 sealed leading pages into the tree.
 
-Retention is programmed from *observed reuse* (paper §4): a node whose hit
-count crosses ``hot_threshold`` is promoted — its page regions are
-re-programmed to ``hot_retention_s`` (metered as a reprogram write) and,
-when a ``hot_tier`` is configured, migrated there. Cold unlocked leaves
-decay after ``cold_ttl_s``: spilled to the colder tier when one is
-configured, else dropped (a later identical prompt recomputes — KV is soft
-state).
+**Sub-page tails** (DESIGN.md §9): a match may end mid-page. With
+``tail_copy`` the up-to-``page_tokens - 1`` shared tokens past the
+page-aligned boundary are *copied* out of the holder's page into the
+borrower's own fresh open page — metered as a sequential read plus the
+ordinary page write, strictly cheaper than recomputing those tokens under
+the per-tier latency model (a recompute also streams the weights). The
+engine decides when the copy is worthwhile (it needs a compute snapshot
+whose history covers the tail); the manager owns the byte movement.
+
+Retention is programmed from *observed reuse* (paper §4), with every
+transition routed through one
+:class:`~repro.serving.retention_lifecycle.RetentionLifecycle` state
+machine (DESIGN.md §9): promotion to ``hot_retention_s`` when a node's
+hit count crosses ``hot_threshold`` (plus hot-tier placement when
+configured), pressure-driven *demotion* back to session retention before
+leaf eviction may reach a hot node, cold decay after ``cold_ttl_s``
+(spill or drop), and retention re-programmed on cross-replica arrival.
 
 Capacity pressure (paper §2.2/§4: the *system* manages retention, placement
 and eviction of inference soft state): when the tier cannot serve an
@@ -55,8 +65,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.configs.base import ModelConfig
 from repro.core.simulator import MemorySystem
 from repro.serving.radix import PrefixMatch, RadixKVIndex, RadixNode
+from repro.serving.retention_lifecycle import LifecycleStats, RetentionLifecycle
 
 PRESSURE_POLICIES = ("none", "evict-lru", "spill", "recompute")
+
+# kept as an alias: the per-transition counters moved into the unified
+# retention lifecycle (DESIGN.md §9) but the report/export surface is
+# unchanged
+RadixStats = LifecycleStats
 
 
 @dataclass
@@ -105,30 +121,6 @@ class PressureStats:
         }
 
 
-@dataclass
-class RadixStats:
-    """Reuse -> retention programming ledger (paper §4: the system manages
-    retention of soft state from what it observes)."""
-    retention_promotions: int = 0  # nodes promoted to long retention
-    promoted_pages: int = 0        # pages re-programmed in place
-    migrated_pages: int = 0        # pages moved into the hot tier
-    cold_decays: int = 0           # cold leaves dropped after cold_ttl_s
-    cold_spilled_pages: int = 0    # cold pages demoted to the spill tier
-    adopted_pages: int = 0         # pages grafted from another replica
-    adopted_tokens: int = 0        # tokens those pages cover
-
-    def as_dict(self) -> dict:
-        return {
-            "retention_promotions": self.retention_promotions,
-            "promoted_pages": self.promoted_pages,
-            "migrated_pages": self.migrated_pages,
-            "cold_decays": self.cold_decays,
-            "cold_spilled_pages": self.cold_spilled_pages,
-            "adopted_pages": self.adopted_pages,
-            "adopted_tokens": self.adopted_tokens,
-        }
-
-
 class PagedKVManager:
     """The memory-plane half of KV: page allocation/retention/eviction
     over the MRM pool, with shared prefixes hanging off a
@@ -153,6 +145,10 @@ class PagedKVManager:
       every published/adopted path and ``on_prefix_evict`` fires with the
       exact run an evicted leaf covered (pressure, watermark and cold
       decay alike), so a fleet directory mirrors tree membership.
+    - **Tail copies never alias** — a sub-page tail is copied into a page
+      the borrower *owns* (refcount 1, unsealed); the holder's page is
+      read once (metered) and never shared mid-page, so page refcounts
+      stay whole-page by construction.
     """
 
     def __init__(self, cfg: ModelConfig, mem: MemorySystem, tier: str,
@@ -164,7 +160,9 @@ class PagedKVManager:
                  hot_threshold: int = 4,
                  hot_retention_s: float = 3600.0,
                  hot_tier: Optional[str] = None,
-                 cold_ttl_s: Optional[float] = None):
+                 cold_ttl_s: Optional[float] = None,
+                 tail_copy: bool = False,
+                 demote_on_pressure: bool = False):
         if policy not in PRESSURE_POLICIES:
             raise ValueError(f"policy {policy!r} not in {PRESSURE_POLICIES}")
         if policy == "spill" and spill_tier is None:
@@ -177,17 +175,21 @@ class PagedKVManager:
         self.spill_tier = spill_tier
         self.policy = policy
         self.high_watermark = high_watermark
-        self.hot_threshold = hot_threshold
-        self.hot_retention_s = hot_retention_s
-        self.hot_tier = hot_tier
-        self.cold_ttl_s = cold_ttl_s
+        self.tail_copy = tail_copy
         self.kv_bytes_token = cfg.kv_bytes_per_token()
         self.page_bytes = self.kv_bytes_token * page_tokens
+        # every retention transition — promote, demote, decay, arrival —
+        # goes through the one lifecycle state machine (DESIGN.md §9)
+        self.lifecycle = RetentionLifecycle(
+            mem, tier=tier, kv_bytes_token=self.kv_bytes_token,
+            session_retention_s=expected_session_s,
+            hot_retention_s=hot_retention_s, hot_threshold=hot_threshold,
+            hot_tier=hot_tier, cold_ttl_s=cold_ttl_s, spill_tier=spill_tier,
+            demote_on_pressure=demote_on_pressure)
         self.sessions: Dict[int, SessionKV] = {}
         self._next_page = 0
         self.dropped_allocs = 0            # legacy: truly-silent drops only
         self.pressure = PressureStats()
-        self.radix_stats = RadixStats()
         # the one prefix abstraction every serving layer shares: a radix
         # tree over page-aligned prefixes (replaces the flat whole-prompt
         # sha1 index — partial prefixes now match)
@@ -195,6 +197,9 @@ class PagedKVManager:
         self.prefix_hits = 0
         self.prefix_tokens_reused = 0
         self.prefix_hits_migrated = 0      # hits landing on a grafted path
+        self.tail_hits = 0                 # sessions that copied a tail
+        self.tail_tokens_copied = 0        # sub-page tokens copied, total
+        self.tail_copy_bytes = 0.0         # bus bytes moved (read + write)
         # fleet-directory hooks (ClusterFrontend wires these): fired with
         # the full position-space token path on publish, and with
         # (full_path, tail_tokens) when a leaf leaves the tree
@@ -202,16 +207,41 @@ class PagedKVManager:
         self.on_prefix_evict: Optional[Callable[[tuple, int], None]] = None
 
     # -- prefix tree ---------------------------------------------------
+    @property
+    def radix_stats(self) -> LifecycleStats:
+        """Retention-transition counters (kept under the historical name;
+        the transitions themselves live in the lifecycle, DESIGN.md §9)."""
+        return self.lifecycle.stats
+
     def match_prefix(self, tokens: Sequence,
                      max_tokens: Optional[int] = None) -> PrefixMatch:
-        """Longest page-aligned prefix of `tokens` present in the tree.
-        Bumps hit counts and promotes nodes whose observed reuse crossed
-        ``hot_threshold`` (reuse -> retention programming). The match is
-        not yet pinned — pass it to :meth:`open_session` to attach it."""
-        m = self.radix.match(tokens, self.mem.now, max_tokens=max_tokens)
+        """Longest page-aligned prefix of `tokens` present in the tree —
+        plus, with ``tail_copy``, the sub-page tail beyond it. Bumps hit
+        counts and promotes nodes whose observed reuse crossed the
+        lifecycle's ``hot_threshold`` (reuse -> retention programming).
+        The match is not yet pinned — pass it to :meth:`open_session` to
+        attach it."""
+        m = self.radix.match(tokens, self.mem.now, max_tokens=max_tokens,
+                             with_tail=self.tail_copy)
         if m.tokens:
-            self._maybe_promote(m.node)
+            self.lifecycle.observe_reuse(m.node)
         return m
+
+    def tail_available(self, match: PrefixMatch) -> int:
+        """Sub-page tail tokens the memory plane can actually serve for
+        this match: the holder's page must be resident (not dropped, live
+        region — unless the stack has no KV byte stream at all). The
+        engine combines this with compute-side validity (a snapshot whose
+        history covers the tail) before asking for the copy."""
+        if (not self.tail_copy or match is None or match.tail_node is None
+                or match.tokens == 0 or not match.tail_node.pages):
+            return 0
+        page = match.tail_node.pages[0]
+        if page.dropped:
+            return 0
+        if page.region_id is None and self.kv_bytes_token > 0:
+            return 0
+        return match.tail_tokens
 
     def match_len(self, tokens: Sequence,
                   max_tokens: Optional[int] = None) -> int:
@@ -219,11 +249,15 @@ class PagedKVManager:
         return self.radix.match_len(tokens, max_tokens=max_tokens)
 
     def open_session(self, session_id: int,
-                     match: Optional[PrefixMatch] = None) -> SessionKV:
+                     match: Optional[PrefixMatch] = None,
+                     tail_tokens: int = 0) -> SessionKV:
         """Open a session; when a :class:`PrefixMatch` is supplied its
         pages are attached (refcounted) and the matched path is pinned, so
         the shared tokens cost no new KV writes and can never be evicted
-        under this session."""
+        under this session. ``tail_tokens`` (<= ``match.tail_tokens``,
+        engine-vetted via :meth:`tail_available`) additionally copies the
+        sub-page tail out of the holder's page into a fresh page the
+        session owns (DESIGN.md §9)."""
         s = SessionKV(session_id)
         self.sessions[session_id] = s
         if match is not None and match.tokens:
@@ -242,7 +276,28 @@ class PagedKVManager:
                     self.prefix_hits_migrated += 1
                     break
                 node = node.parent
+            if tail_tokens:
+                self._copy_tail(s, match, tail_tokens)
         return s
+
+    def _copy_tail(self, s: SessionKV, match: PrefixMatch,
+                   tail_tokens: int) -> None:
+        """Sub-page tail reuse: read ``tail_tokens`` of KV out of the
+        holder's page (metered, sequential — the read happens *before*
+        any allocation so pressure eviction cannot invalidate it) and
+        write them into a fresh open page the borrower owns. Metered as a
+        read + write; cheaper than recompute under the per-tier latency
+        model because recompute would also stream the weights."""
+        nbytes = tail_tokens * self.kv_bytes_token
+        page = match.tail_node.pages[0]
+        if page.region_id is not None and nbytes > 0:
+            self.mem.read_region(page.region_id, nbytes, sequential=True)
+        self._new_page(s, tail_tokens)    # the borrower's own open page
+        s.tokens += tail_tokens
+        self.tail_hits += 1
+        self.tail_tokens_copied += tail_tokens
+        self.tail_copy_bytes += 2.0 * nbytes
+        self.prefix_tokens_reused += tail_tokens
 
     def register_prefix(self, session_id: int, tokens: Sequence,
                         payload: Any = None) -> int:
@@ -313,8 +368,9 @@ class PagedKVManager:
         m = self.radix.match(tokens[:n], self.mem.now, bump_hits=False)
         dup = m.tokens
         self.radix.lock(m.node)
-        tier = self.hot_tier if (hot and self.hot_tier) else self.tier
-        life = self.hot_retention_s if hot else self.expected_session_s
+        # retention re-programmed on arrival: one decision point for the
+        # whole fleet (the lifecycle, DESIGN.md §9)
+        tier, life = self.lifecycle.arrival(hot)
         new_pages: List[Page] = []
         try:
             for _start in range(dup, n, pt):
@@ -352,8 +408,7 @@ class PagedKVManager:
         assert dup2 == dup, "graft walk disagrees with match_len"
         for p in inserted:
             p.refcount += 1    # the tree holds its own reference
-        self.radix_stats.adopted_pages += len(inserted)
-        self.radix_stats.adopted_tokens += len(inserted) * pt
+        self.lifecycle.note_adoption(len(inserted), len(inserted) * pt)
         if node is not self.radix.root:
             self._notify_insert(tokens[:total])
         return len(inserted) * pt, total, (None if node is self.radix.root
@@ -380,80 +435,25 @@ class PagedKVManager:
         if self.on_prefix_evict is not None and victim.evicted_path is not None:
             self.on_prefix_evict(victim.evicted_path, victim.n_tokens)
 
-    # -- reuse -> retention programming --------------------------------
-    def _maybe_promote(self, node: Optional[RadixNode]) -> None:
-        """Walk the matched path; nodes whose hit count crossed the
-        threshold get long-retention DCM programming (a metered reprogram
-        write) and, when a hot tier is configured, placement there."""
-        while node is not None and node.parent is not None:
-            if not node.hot and node.hits >= self.hot_threshold:
-                node.hot = True
-                self.radix_stats.retention_promotions += 1
-                for page in node.pages:
-                    self._promote_page(page)
-            node = node.parent
-
-    def _promote_page(self, page: Page) -> None:
-        if page.region_id is None:
-            return
-        nbytes = page.n_tokens * self.kv_bytes_token
-        if self.hot_tier and page.tier != self.hot_tier:
-            rid = self.mem.write_region(self.hot_tier, "prefix:hot", nbytes,
-                                        expected_lifetime_s=self.hot_retention_s)
-            if rid is not None:
-                self.mem.read_region(page.region_id, nbytes)  # migration read
-                self.mem.release_region(page.region_id)
-                page.region_id = rid
-                page.tier = self.hot_tier
-                self.radix_stats.migrated_pages += 1
-                return
-        # re-program retention in place: a DCM retention change is a block
-        # rewrite (metered as reprogram/refresh traffic, not steady writes)
-        r = self.mem.tracker.get(page.region_id)
-        if r is None:
-            return
-        op = self.mem.devices[page.tier].write(
-            nbytes, expected_lifetime_s=self.hot_retention_s, refresh=True)
-        self.mem.tracker.rearm(r, self.mem.now, retention_s=op.retention_s)
-        self.radix_stats.promoted_pages += 1
-
+    # -- reuse -> retention programming (via the lifecycle) ------------
     def maintain(self) -> None:
-        """Cold-leaf decay (call once per engine step): unlocked leaves not
-        reused for ``cold_ttl_s`` are demoted — spilled to the colder tier
-        when one is configured, else dropped from the tree (soft state; an
-        identical future prompt recomputes)."""
-        if self.cold_ttl_s is None:
+        """Cold-leaf decay (call once per engine step): unlocked leaves
+        the lifecycle judges cold are demoted — spilled to the colder
+        tier when one is configured, else dropped from the tree (soft
+        state; an identical future prompt recomputes)."""
+        if self.lifecycle.cold_ttl_s is None:
             return
         now = self.mem.now
         for leaf in self.radix.evictable_leaves():
-            if now - leaf.last_access <= self.cold_ttl_s:
+            if not self.lifecycle.decay_due(leaf, now):
                 continue
             if self.spill_tier and self.spill_tier != self.tier:
-                self._spill_cold_leaf(leaf, now)
+                self.lifecycle.spill_cold(leaf, now)
             elif self.radix.pop_leaf(leaf) is not None:
                 self._on_leaf_removed(leaf)
                 for page in leaf.pages:
                     self._unref_page(page)
-                self.radix_stats.cold_decays += 1
-
-    def _spill_cold_leaf(self, leaf: RadixNode, now: float) -> None:
-        moved = 0
-        for page in leaf.pages:
-            if page.region_id is None or page.tier == self.spill_tier:
-                continue
-            nbytes = page.n_tokens * self.kv_bytes_token
-            rid = self.mem.write_region(self.spill_tier, "prefix:cold", nbytes,
-                                        expected_lifetime_s=self.expected_session_s)
-            if rid is None:
-                continue
-            self.mem.read_region(page.region_id, nbytes)  # migration read
-            self.mem.release_region(page.region_id)
-            page.region_id = rid
-            page.tier = self.spill_tier
-            moved += 1
-        if moved:
-            self.radix_stats.cold_spilled_pages += moved
-            leaf.last_access = now  # demoted; don't re-trigger next step
+                self.lifecycle.note_decay()
 
     # -- capacity pressure ---------------------------------------------
     def _unref_page(self, page: Page) -> None:
@@ -465,8 +465,23 @@ class PagedKVManager:
     def _evict_one_prefix_leaf(self) -> bool:
         """Leaf-LRU eviction: unlocked leaves hold pages pinned only by
         the tree (live sessions pin their paths), so evicting one frees
-        capacity immediately."""
-        victim = self.radix.pop_lru_leaf()
+        capacity immediately. With ``demote_on_pressure`` the lifecycle
+        interposes: cold leaves go first, and a hot leaf is *demoted*
+        (retention reprogram metered, hits reset) before eviction may
+        reach it — returning True without freeing counts as progress, the
+        retry loop comes back and finds the leaf an ordinary candidate."""
+        victims = self.radix.evictable_leaves()
+        if not victims:
+            return False
+        if self.lifecycle.demote_on_pressure:
+            cold = [v for v in victims if not v.hot]
+            if not cold:
+                if self.lifecycle.demote(min(victims,
+                                             key=self.radix.lru_key)):
+                    return True
+            else:
+                victims = cold   # cold leaves shield hot ones
+        victim = self.radix.pop_leaf(min(victims, key=self.radix.lru_key))
         if victim is None:
             return False
         self._on_leaf_removed(victim)
@@ -518,9 +533,13 @@ class PagedKVManager:
         if self.high_watermark is None or self.policy == "none":
             return
         while self.mem.utilization(self.tier) > self.high_watermark:
+            before = self.pressure.prefix_evictions
             if not self._evict_one_prefix_leaf():
                 return
-            self.pressure.watermark_evictions += 1
+            # a demote-progress round frees nothing and is not an
+            # eviction — only count rounds that actually popped a leaf
+            if self.pressure.prefix_evictions > before:
+                self.pressure.watermark_evictions += 1
 
     # ------------------------------------------------------------------
     def _new_page(self, s: SessionKV, n_tokens: int) -> Page:
@@ -645,11 +664,14 @@ class PagedKVManager:
             "hits": self.prefix_hits,
             "hits_migrated": self.prefix_hits_migrated,
             "tokens_reused": self.prefix_tokens_reused,
+            "tail_hits": self.tail_hits,
+            "tail_tokens_copied": self.tail_tokens_copied,
+            "tail_copy_bytes": self.tail_copy_bytes,
             "radix_nodes": self.radix.n_nodes(),
             "radix_tokens": self.radix.total_tokens(),
             "radix_pages": self.radix.total_pages(),
             "radix_kv_bytes": self.radix_kv_bytes(),
             "evictions": self.pressure.prefix_evictions,
         }
-        rep.update(self.radix_stats.as_dict())
+        rep.update(self.lifecycle.stats.as_dict())
         return rep

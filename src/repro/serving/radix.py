@@ -44,6 +44,15 @@ def _page_key(tokens, start: int, page_tokens: int) -> tuple:
                  for t in page)
 
 
+def _tok_key(t):
+    """One token's hashable identity (same normalization as _page_key)."""
+    if isinstance(t, int) and not isinstance(t, bool):
+        return t
+    if hasattr(t, "__len__"):
+        return tuple(int(x) for x in t)
+    return int(t)
+
+
 class RadixNode:
     __slots__ = ("key", "pages", "children", "parent", "lock_ref",
                  "last_access", "hits", "payload", "hot", "migrated",
@@ -73,11 +82,18 @@ class RadixNode:
 
 @dataclass
 class PrefixMatch:
-    """Result of a longest-prefix walk: page-aligned by construction."""
-    tokens: int = 0                      # matched token count
+    """Result of a longest-prefix walk. ``tokens`` is page-aligned by
+    construction; a sub-page **tail** (vLLM-style, DESIGN.md §9) may
+    extend it: ``tail_tokens`` more tokens of the prompt agree with the
+    first page of ``tail_node`` (a child of ``node``), always strictly
+    less than one page — a fully-matching page would have been consumed
+    by the walk itself."""
+    tokens: int = 0                      # matched token count (page-aligned)
     pages: List[Any] = field(default_factory=list)
     node: Optional[RadixNode] = None     # deepest matched node (lock target)
     payload: Any = None                  # nearest compute handle covering it
+    tail_tokens: int = 0                 # sub-page tail beyond the boundary
+    tail_node: Optional[RadixNode] = None  # child holding the tail's page
 
 
 class RadixKVIndex:
@@ -135,7 +151,8 @@ class RadixKVIndex:
     def match(self, tokens: Sequence, now: float,
               max_tokens: Optional[int] = None,
               bump_hits: bool = True,
-              bump_lru: bool = True) -> PrefixMatch:
+              bump_lru: bool = True,
+              with_tail: bool = False) -> PrefixMatch:
         """Longest page-aligned prefix of `tokens` present in the tree.
         Splits nodes at the match boundary (so the result's deepest node
         covers exactly the matched run) and bumps LRU stamps and hit
@@ -143,18 +160,24 @@ class RadixKVIndex:
         False: reading a prefix out to move its traffic AWAY is not local
         reuse — it must feed neither the retention signal nor the LRU
         order (or the donor would evict a genuinely-hot local prefix
-        first)."""
+        first).
+
+        With ``with_tail`` the match also reports the sub-page tail: the
+        longest run of tokens past the page-aligned boundary agreeing
+        with the first page of one of ``node``'s children (DESIGN.md §9).
+        The tail is informational — the caller decides whether to copy
+        it — so tail discovery bumps no hit counts or LRU stamps."""
         pt = self.page_tokens
         limit = len(tokens) if max_tokens is None else min(max_tokens, len(tokens))
-        limit = (limit // pt) * pt
+        page_limit = (limit // pt) * pt
         m = PrefixMatch(node=self.root)
         node = self.root
-        while m.tokens < limit:
+        while m.tokens < page_limit:
             child = node.children.get(_page_key(tokens, m.tokens, pt))
             if child is None:
                 break
             j = self._pages_in_common(child.key, tokens, m.tokens)
-            j = min(j, (limit - m.tokens) // pt)
+            j = min(j, (page_limit - m.tokens) // pt)
             if j == 0:
                 break
             if j * pt < len(child.key):
@@ -169,7 +192,26 @@ class RadixKVIndex:
             if m.tokens and bump_hits:
                 n.hits += 1
         m.payload = self._nearest_payload(m.node)
+        if with_tail and limit > m.tokens:
+            m.tail_tokens, m.tail_node = self._tail_of(m.node, tokens,
+                                                       m.tokens, limit)
         return m
+
+    def _tail_of(self, node: RadixNode, tokens, start: int,
+                 limit: int) -> Tuple[int, Optional[RadixNode]]:
+        """Longest sub-page run of ``tokens[start:limit]`` agreeing with
+        the first page of one of ``node``'s children. Strictly less than
+        one page by construction: a whole matching page would have been
+        consumed by the page-aligned walk (or clipped by ``limit``)."""
+        best, best_node = 0, None
+        for child in node.children.values():
+            n = 0
+            cap = min(limit - start, len(child.key))
+            while n < cap and _tok_key(child.key[n]) == _tok_key(tokens[start + n]):
+                n += 1
+            if n > best:
+                best, best_node = n, child
+        return best, best_node
 
     def match_len(self, tokens: Sequence,
                   max_tokens: Optional[int] = None) -> int:
@@ -203,6 +245,14 @@ class RadixKVIndex:
                 return n.payload
             stack.extend(n.children.values())
         return None
+
+    def subtree_payload(self, node: Optional[RadixNode]) -> Any:
+        """Public form of the nearest-payload walk rooted at ``node``.
+        The engine's sub-page tail reuse needs a payload whose token
+        history agrees *through the tail* — any payload in the tail
+        child's subtree qualifies, because every prompt below it starts
+        with that child's first page (DESIGN.md §9)."""
+        return None if node is None else self._nearest_payload(node)
 
     def payload_candidates(self, node: RadixNode) -> Iterator[Tuple[Any, int]]:
         """Yield ``(payload, holder_root_path_tokens)`` for every payload
@@ -314,13 +364,20 @@ class RadixKVIndex:
     def evictable_leaves(self) -> List[RadixNode]:
         return [n for n in self.nodes() if n.is_leaf() and n.lock_ref == 0]
 
+    @staticmethod
+    def lru_key(node: RadixNode) -> tuple:
+        """The one eviction ordering (LRU, key tiebreak for determinism)
+        every caller shares — the pressure path must agree with
+        :meth:`pop_lru_leaf` or victim selection silently drifts."""
+        return (node.last_access, node.key)
+
     def pop_lru_leaf(self) -> Optional[RadixNode]:
         """Remove and return the least-recently-accessed unlocked leaf
         (its pages' lifetime side effects are the caller's job)."""
         victims = self.evictable_leaves()
         if not victims:
             return None
-        return self.pop_leaf(min(victims, key=lambda n: (n.last_access, n.key)))
+        return self.pop_leaf(min(victims, key=self.lru_key))
 
     def pop_leaf(self, node: RadixNode) -> Optional[RadixNode]:
         """Remove a specific unlocked leaf (cold-decay path). The node's

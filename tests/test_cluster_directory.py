@@ -243,6 +243,46 @@ def test_snapshot_handle_release_is_idempotent():
     assert mem.devices["mrm"].alloc.utilization == 0.0
 
 
+def test_migration_admission_control_queues_on_busy_link(cluster_setup):
+    """ROADMAP satellite: each receiver has ONE modelled interconnect
+    link. Two migrations pulled into the same replica within one submit
+    burst serialize on it — the second finds the link busy and reports a
+    nonzero queue wait, and the receiver's clock ends at the delivery
+    time of the last transfer (both TTFTs pay)."""
+    full, cfg, params = cluster_setup
+    engines = [_mk_engine(full, cfg, params) for _ in range(2)]
+    fe = ClusterFrontend(engines, migrate_prefixes=True, migrate_load_gap=-1)
+    p1 = list(range(2, 66))                    # two distinct 4-page prefixes
+    p2 = list(range(200, 264))
+    r0 = fe.submit(list(p1), 4, session_key="seed")
+    fe.submit(list(p2), 4, session_key="seed")  # sticky: same home replica
+    fe.run_until_idle()
+    home = fe.replica_of(r0)
+    other = 1 - home
+    # pile queued work on the owner so both borrowers out-migrate to the
+    # idle replica within ONE burst (no cluster step between submits)
+    for i in range(3):
+        engines[home].submit(list(range(400 + i, 440 + i)), 2)
+    t0 = engines[other].mem.now
+    b1 = fe.submit(p1 + [300], 4, session_key="b1")
+    b2 = fe.submit(p2 + [301], 4, session_key="b2")
+    assert fe.replica_of(b1) == other and fe.replica_of(b2) == other
+    assert fe.migrations == 2
+    # the second transfer queued behind the first on the receiver's link
+    assert fe.migrations_queued >= 1
+    assert fe.migration_queue_wait_s > 0
+    rep_done = fe.run_until_idle()
+    inter = rep_done["interconnect"]
+    assert inter["queued_migrations"] == fe.migrations_queued
+    assert inter["queue_wait_s"] == pytest.approx(fe.migration_queue_wait_s)
+    # the receiver stalled to the serialized delivery time: transfer
+    # durations + the queue wait all passed through its clock
+    assert engines[other].mem.now - t0 >= (
+        inter["migration_s"] + inter["queue_wait_s"]) - 1e-9
+    # and the work still decodes: every request finished
+    assert rep_done["finished"] == 7
+
+
 def test_fleet_report_interconnect_and_directory_sections(cluster_setup):
     full, cfg, params = cluster_setup
     fe = ClusterFrontend([_mk_engine(full, cfg, params) for _ in range(2)],

@@ -172,6 +172,70 @@ def test_prefix_hit_decodes_identically_to_cold_start(arch_setup):
     assert _outputs(warm) == _outputs(cold)
 
 
+def test_tail_hit_bit_equal_to_cold_start(arch_setup):
+    """Sub-page tail reuse (DESIGN.md §9): a shared head that straddles a
+    page boundary decodes bit-identically (fp32) to a cold start for
+    every mixer family. Positional stacks (attention/MLA) actually copy
+    the tail and resume extend from the exact token boundary; point
+    stacks (SSM/hybrid) have no mid-page capture, so the tail degrades
+    gracefully to the page-aligned behavior — same outputs, no copy."""
+    arch, full, cfg, params = arch_setup
+    kind = EXPECTED_KIND[arch]
+    rng = np.random.default_rng(41)
+    head = list(rng.integers(2, 400, 55))    # page 16: straddles a boundary
+    prompts = [head + list(rng.integers(2, 400, 9)) for _ in range(4)]
+
+    warm = _mk_engine(full, cfg, params, tail_copy=True)
+    for p in prompts:   # sequential: each later prompt can hit
+        warm.submit(list(p), 6)
+        warm.run_until_idle()
+    page_aligned = _mk_engine(full, cfg, params, tail_copy=False)
+    for p in prompts:
+        page_aligned.submit(list(p), 6)
+        page_aligned.run_until_idle()
+    cold = _mk_engine(full, cfg, params, prefix_caching=False)
+    for p in prompts:
+        cold.submit(list(p), 6)
+        cold.run_until_idle()
+
+    assert _outputs(warm) == _outputs(page_aligned) == _outputs(cold)
+    if kind == "positional":
+        # the tail was really copied (metered) and really skipped
+        assert warm.kv.tail_hits > 0
+        assert warm.kv.tail_tokens_copied > 0
+        if full.kv_bytes_per_token() > 0:
+            assert warm.kv.tail_copy_bytes > 0
+        assert warm.prefill_tokens_computed \
+            < page_aligned.prefill_tokens_computed
+    else:
+        # point stacks: the flag is on but no mid-page snapshot exists,
+        # so no copy may happen (a copy without compute reuse would
+        # waste bus bytes and double-account the boundary)
+        assert warm.kv.tail_hits == 0
+        assert warm.prefill_tokens_computed \
+            == page_aligned.prefill_tokens_computed
+
+
+def test_decode_audit_all_families_interleaved(arch_setup):
+    """Regression guard for the PR 4 clobbering class: with the padded
+    whole-prompt path deleted, chunked prefill interleaves with decode on
+    every path — the engine's decode-masking audit verifies per step that
+    no cache family (ring KV, MLA latents, conv/SSD state) of an inactive
+    slot is written. The audit raising would fail this test."""
+    arch, full, cfg, params = arch_setup
+    eng = _mk_engine(full, cfg, params, max_prefills_per_step=1,
+                     audit_decode_masking=True)
+    eng.submit(list(np.arange(2, 14)), 20)    # short: decoding quickly
+    eng.submit(list(np.arange(2, 80)), 4)     # long: chunks interleave
+    saw_interleave = False
+    while not eng.sched.idle and eng.steps < 200:
+        out = eng.step()
+        if out["prefill_tokens"] > 0 and out["decode_tokens"] > 0:
+            saw_interleave = True
+    assert eng.sched.stats.finished == 2
+    assert saw_interleave                     # the audit actually ran hot
+
+
 NON_ATTENTION = ["mamba2-2.7b", "deepseek-v2-lite-16b", "hymba-1.5b"]
 
 

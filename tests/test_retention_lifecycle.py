@@ -1,0 +1,193 @@
+"""Unified retention lifecycle (DESIGN.md §9): the promote / demote /
+decay / arrival state machine, tested in isolation from the engine, plus
+the manager-level guarantee that hot leaves are demoted (reprogram
+metered) before eviction pressure may pop them."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.memclass import HBM3E, MRM_RRAM
+from repro.core.simulator import MemorySystem
+from repro.serving import PagedKVManager, RetentionLifecycle
+from repro.serving.kv_cache import Page
+from repro.serving.radix import RadixKVIndex, RadixNode
+
+
+def _mem(gb=1):
+    return MemorySystem({"mrm": (MRM_RRAM, gb << 30), "hbm": (HBM3E, gb << 30)})
+
+
+def _lifecycle(mem, **kw):
+    args = dict(tier="mrm", kv_bytes_token=1024.0, session_retention_s=60.0,
+                hot_retention_s=3600.0, hot_threshold=2, cold_ttl_s=5.0,
+                demote_on_pressure=True)
+    args.update(kw)
+    return RetentionLifecycle(mem, **args)
+
+
+def _node_with_page(mem, tokens=16, lock_ref=0, now=0.0):
+    rid = mem.write_region("mrm", "prefix", tokens * 1024.0,
+                           expected_lifetime_s=60.0)
+    page = Page(0, rid, tokens, sealed=True, refcount=1, tier="mrm")
+    root = RadixNode((), [], None, now)
+    node = RadixNode(tuple(range(tokens)), [page], root, now)
+    node.lock_ref = lock_ref
+    return node, page
+
+
+def test_promote_demote_decay_ordering():
+    """The full SHORT -> HOT -> SHORT -> gone walk, in order: promotion
+    needs the hit threshold, demotion resets it (promotion must be
+    re-earned), and only then does cold decay apply."""
+    mem = _mem()
+    lc = _lifecycle(mem)
+    node, page = _node_with_page(mem)
+
+    # SHORT: below threshold nothing happens
+    node.hits = 1
+    lc.observe_reuse(node)
+    assert not node.hot and lc.stats.retention_promotions == 0
+
+    # SHORT -> HOT: threshold crossed; reprogram metered as refresh
+    node.hits = 2
+    refresh0 = mem.devices["mrm"].stats.refresh_bytes
+    lc.observe_reuse(node)
+    assert node.hot
+    assert lc.stats.retention_promotions == 1
+    assert lc.stats.promoted_pages == 1
+    assert mem.devices["mrm"].stats.refresh_bytes > refresh0
+    # the region's retention deadline was actually re-armed
+    assert mem.tracker.get(page.region_id) is not None
+
+    # HOT -> SHORT: pressure demotion meters another reprogram and
+    # resets the hits — the node must re-earn promotion
+    refresh1 = mem.devices["mrm"].stats.refresh_bytes
+    assert lc.demote(node)
+    assert not node.hot and node.hits == 0
+    assert lc.stats.retention_demotions == 1
+    assert lc.stats.demoted_pages == 1
+    assert mem.devices["mrm"].stats.refresh_bytes > refresh1
+    node.hits = 1
+    lc.observe_reuse(node)
+    assert not node.hot            # a stale hit count cannot re-promote
+
+    # SHORT -> gone: cold decay applies only after the TTL
+    node.last_access = 0.0
+    assert not lc.decay_due(node, now=4.0)
+    assert lc.decay_due(node, now=6.0)
+
+
+def test_no_demotion_of_pinned_nodes():
+    """A live session's path (lock_ref > 0) is never demoted: retention
+    cannot be shortened out from under a pinned prefix."""
+    mem = _mem()
+    lc = _lifecycle(mem)
+    node, _ = _node_with_page(mem, lock_ref=1)
+    lc.promote(node)
+    assert node.hot
+    assert not lc.demote(node)
+    assert node.hot and lc.stats.retention_demotions == 0
+    # unpinning makes it demotable
+    node.lock_ref = 0
+    assert lc.demote(node)
+
+
+def test_demotion_disabled_and_non_hot_refused():
+    mem = _mem()
+    off = _lifecycle(mem, demote_on_pressure=False)
+    node, _ = _node_with_page(mem)
+    off.promote(node)
+    assert not off.demote(node)    # feature off: promotion stays one-way
+    on = _lifecycle(mem)
+    node2, _ = _node_with_page(mem)
+    assert not on.demote(node2)    # not hot: nothing to demote
+
+
+def test_arrival_programming():
+    """Migration arrival routes through the same machine: donor-hot
+    prefixes land in the hot tier at long retention, cold ones at
+    session retention in the base tier."""
+    mem = _mem()
+    lc = _lifecycle(mem, hot_tier="hbm")
+    assert lc.arrival(hot=True) == ("hbm", 3600.0)
+    assert lc.arrival(hot=False) == ("mrm", 60.0)
+    assert lc.stats.arrivals_hot == 1 and lc.stats.arrivals_short == 1
+    # without a hot tier, hot arrivals stay in the base tier (long
+    # retention still re-programmed)
+    lc2 = _lifecycle(mem)
+    assert lc2.arrival(hot=True) == ("mrm", 3600.0)
+
+
+def test_hot_leaves_demoted_before_eviction_reaches_them():
+    """Manager-level acceptance: under sustained eviction pressure, cold
+    leaves are evicted first, and a hot leaf passes through a metered
+    demotion (HOT -> SHORT) before eviction may pop it."""
+    cfg = get_config("qwen3-8b")
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 24), "hbm": (HBM3E, 1 << 30)})
+    kv = PagedKVManager(cfg, mem, "mrm", page_tokens=4, policy="evict-lru",
+                        hot_threshold=1, demote_on_pressure=True)
+    # publish two prefixes; make one hot via observed reuse
+    for sid, base in ((0, 100), (1, 500)):
+        kv.open_session(sid)
+        kv.append_tokens(sid, 8)
+        kv.register_prefix(sid, list(range(base, base + 8)))
+        kv.close_session(sid)
+    hot_key = list(range(100, 108))
+    kv.open_session(2, match=kv.match_prefix(hot_key))   # bumps hits -> hot
+    kv.close_session(2)
+    assert any(n.hot for n in kv.radix.nodes())
+    refresh0 = mem.devices["mrm"].stats.refresh_bytes
+    # drain the tree under explicit pressure: the cold leaf must go
+    # before the hot one, and the hot one must be demoted first
+    popped = kv.evict_prefixes()
+    assert kv.lifecycle.stats.retention_demotions >= 1
+    assert mem.devices["mrm"].stats.refresh_bytes > refresh0
+    assert kv.radix.n_nodes() == 0          # eventually everything went
+    # every progress step was either a real eviction or a demotion —
+    # and the hot leaf took its demotion before its eviction
+    assert popped == (kv.pressure.prefix_evictions
+                      + kv.lifecycle.stats.retention_demotions)
+    assert kv.pressure.prefix_evictions == 2
+
+
+def test_sustained_pressure_orders_demote_before_evict():
+    """End-to-end pressure path: a capacity-squeezed tier with a hot
+    prefix resolves allocations by evicting cold leaves, then demoting
+    the hot leaf (metered), then evicting it — never an unresolved
+    event, ledger balanced."""
+    cfg = get_config("qwen3-8b")
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 22), "hbm": (HBM3E, 1 << 30)})
+    kv = PagedKVManager(cfg, mem, "mrm", page_tokens=4, policy="evict-lru",
+                        high_watermark=0.5,
+                        hot_threshold=1, demote_on_pressure=True)
+    kv.open_session(0)
+    kv.append_tokens(0, 8)
+    kv.register_prefix(0, list(range(8)))
+    kv.close_session(0)
+    kv.open_session(1, match=kv.match_prefix(list(range(8))))  # -> hot
+    kv.close_session(1)
+    assert any(n.hot for n in kv.radix.nodes())
+    # a big session forces allocations past capacity
+    kv.open_session(9)
+    kv.append_tokens(9, 4 * 40)
+    p = kv.pressure
+    assert p.events > 0
+    assert p.events == (p.resolved_evict + p.resolved_spill
+                        + p.resolved_recompute + p.unresolved)
+    assert p.unresolved == 0 and kv.dropped_allocs == 0
+    assert kv.lifecycle.stats.retention_demotions >= 1
+    # a demote-progress round is NOT an eviction: the watermark counter
+    # stays a subset of real leaf evictions even when demotion engages
+    assert p.watermark_evictions <= p.prefix_evictions
+    kv.close_session(9)
+
+
+def test_lifecycle_stats_surface_in_prefix_report():
+    cfg = get_config("qwen3-8b")
+    kv = PagedKVManager(cfg, _mem(8), "mrm", page_tokens=4)
+    rep = kv.prefix_report()
+    for key in ("retention_promotions", "retention_demotions",
+                "demoted_pages", "cold_decays", "adopted_pages",
+                "arrivals_hot", "tail_hits", "tail_tokens_copied",
+                "tail_copy_bytes"):
+        assert key in rep, key
+    assert kv.radix_stats is kv.lifecycle.stats   # one ledger, one object

@@ -260,8 +260,8 @@ def test_engine_multicodebook_audio():
 
 
 # ---------------------------------------------------------------------------
-# Chunked prefill: equivalence vs whole-prompt, and prompts beyond the
-# bucketing ceiling
+# Chunked prefill: equivalence vs one-maximal-chunk prompts, and prompts
+# beyond max_cache_len
 # ---------------------------------------------------------------------------
 
 
@@ -304,10 +304,9 @@ def test_chunked_prefill_token_equivalence(f32_engine_setup):
     assert rep_b["steps"] > rep_a["steps"]
 
 
-def test_chunked_prefill_admits_prompt_beyond_cache_bucketing(small_engine_setup):
+def test_chunked_prefill_admits_prompt_beyond_cache_len(small_engine_setup):
     """Prompts >> max_cache_len are admitted via chunked prefill (ring
-    caches keep the attention tail); whole-prompt prefill cannot even pad
-    such a prompt into its bucket."""
+    caches keep the attention tail)."""
     full, cfg, params = small_engine_setup
     rng = np.random.default_rng(4)
     long_prompt = rng.integers(2, 400, 210)  # max_cache_len is 96
@@ -491,17 +490,41 @@ def test_radix_cold_leaves_decay(small_engine_setup):
     assert eng.kv.radix_stats.cold_decays >= 1
 
 
-def test_unchunked_long_prompt_rejected_clearly(small_engine_setup):
-    """Without chunked prefill, prompts beyond the bucketing ceiling get a
-    clear submit-time error (legacy behavior was a padding crash mid-step)."""
+def test_whole_prompt_is_one_maximal_chunk(f32_engine_setup):
+    """Single-path invariant (DESIGN.md §5): with ``chunk_tokens=None`` a
+    ring-fitting prompt runs as exactly one chunk of the same unpadded
+    chunked path, and decodes bit-identically (fp32) whether prefix
+    caching is on or off — there is no separate padded whole-prompt mode
+    left to diverge from."""
+    full, cfg, params = f32_engine_setup
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(2, 400, n) for n in (11, 27, 40)]
+    eng_on, rep_on = _run_engine(full, cfg, params, None, prompts, max_new=6)
+    eng_off, rep_off = _run_engine(full, cfg, params, None, prompts, max_new=6,
+                                   prefix_caching=False)
+    # one chunk per prompt: the maximal first chunk IS the whole prompt
+    assert rep_on["prefill_chunks"] == rep_off["prefill_chunks"] == 3
+    assert {k: list(v) for k, v in eng_on.outputs.items()} == \
+           {k: list(v) for k, v in eng_off.outputs.items()}
+
+
+def test_unchunked_long_prompt_admitted_via_ring_chunks(small_engine_setup):
+    """A prompt beyond max_cache_len no longer needs an explicit
+    chunk_tokens (the legacy padded mode rejected it at submit): the one
+    chunked path splits it into ring-bounded pieces — the ring caches
+    keep the attention window's tail, exactly as decode does."""
     full, cfg, params = small_engine_setup
     mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
     eng = ServeEngine(cfg, params, mem,
                       EngineConfig(max_slots=2, max_cache_len=64,
-                                   weight_tier="mrm", kv_tier="mrm"),
+                                   weight_tier="mrm", kv_tier="mrm",
+                                   eos_token=-1),
                       account_cfg=full)
-    with pytest.raises(ValueError, match="chunk_tokens"):
-        eng.submit(list(range(2, 102)), 4)
+    eng.submit(list(range(2, 102)), 4)      # 100 tokens > 64-token rings
+    rep = eng.run_until_idle()
+    assert rep["finished"] == 1
+    assert rep["prefill_chunks"] > 1        # really split, not padded
+    assert rep["kv_live_pages"] == 0
 
 
 def test_chunked_prefill_windowed_config_clamps_chunk():
@@ -561,9 +584,12 @@ def test_pressure_prefix_lru_eviction_no_silent_drops(small_engine_setup):
 
 def test_pressure_spill_tier(small_engine_setup):
     """'spill' policy migrates overflow pages to the colder tier: the spill
-    device sees KV write traffic it never sees in the uncontended run."""
+    device sees KV write traffic it never sees in the uncontended run.
+    (The KV tier is sized below the workload's true footprint — which
+    shrank when prompt padding was deleted, since pad tokens no longer
+    enter the paged KV.)"""
     full, cfg, params = small_engine_setup
-    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 26), "hbm": (HBM3E, 16 << 30),
+    mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 25), "hbm": (HBM3E, 16 << 30),
                         "ddr": (MRM_RRAM, 64 << 30)})
     eng = ServeEngine(cfg, params, mem,
                       EngineConfig(max_slots=3, max_cache_len=64,
