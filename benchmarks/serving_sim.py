@@ -223,6 +223,87 @@ def tail_reuse(arch="deepseek-7b", page_tokens=16, head_tokens=56,
     }
 
 
+def paged_kernel(arch="deepseek-7b", n_shares=4, head_tokens=48,
+                 ask_tokens=12) -> dict:
+    """Paged compute plane vs the ring path (DESIGN.md §10) on shared-
+    prefix fan-out traffic: the same prompts, decoded greedily in fp32,
+    with ``paged_kernel`` on vs off. Asserts the PR 6 acceptance bar:
+
+    - decoded tokens are **bit-identical** between the two planes;
+    - the paged plane's prefix-hit copy bytes are exactly **zero** (no
+      donor-seed cache-tree copy, no published snapshot) while the ring
+      plane pays ``seed_copy_bytes > 0`` per hit (the PR 5 comparator);
+    - the KV tier's metered read bytes equal the kernel's page-gather
+      byte count exactly (tail copies disabled for a clean identity).
+    """
+    from repro.configs import get_config, reduced
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServeEngine
+
+    full = get_config(arch)
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    head = list(rng.integers(2, cfg.vocab_size, head_tokens))
+    prompts = [head + list(rng.integers(2, cfg.vocab_size, ask_tokens))
+               for _ in range(n_shares)]
+
+    def run_one(paged: bool):
+        mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40),
+                            "hbm": (HBM3E, 1 << 37)})
+        eng = ServeEngine(cfg, params, mem,
+                          EngineConfig(max_slots=2, max_cache_len=96,
+                                       weight_tier="hbm", kv_tier="mrm",
+                                       eos_token=-1, chunk_tokens=16,
+                                       page_tokens=16, tail_copy=False,
+                                       paged_kernel=paged,
+                                       radix_hot_threshold=2),
+                          account_cfg=full)
+        for p in prompts:   # sequential: every later prompt can hit
+            eng.submit(list(p), 6)
+            eng.run_until_idle()
+        return eng, eng.report()
+
+    eng_p, on = run_one(True)
+    eng_r, off = run_one(False)
+    outs_p = {k: list(v) for k, v in eng_p.outputs.items()}
+    outs_r = {k: list(v) for k, v in eng_r.outputs.items()}
+    assert outs_p == outs_r, "paged plane changed decoded tokens"
+    assert on["prefix"]["paged_kernel"] and not off["prefix"]["paged_kernel"]
+    assert on["prefix"]["compute_hits"] >= n_shares - 1
+    # the zero-copy-hit invariant (and the PR 5 comparator on the ring)
+    assert on["seed_copy_bytes"] == 0.0, on["seed_copy_bytes"]
+    assert on["snapshot_bytes"] == 0.0, on["snapshot_bytes"]
+    assert off["seed_copy_bytes"] > 0, off["seed_copy_bytes"]
+    # per-tier metering identity: weights stream from hbm, so every KV
+    # tier byte read is the kernel's page gather — no synthetic traffic
+    kernel_reads = on["kernel_read_bytes"]
+    mrm_reads = eng_p.mem.devices["mrm"].stats.read_bytes
+    assert kernel_reads > 0 and abs(mrm_reads - kernel_reads) < 1e-6, \
+        (mrm_reads, kernel_reads)
+    per_tier_reads = {t: d.stats.read_bytes
+                      for t, d in eng_p.mem.devices.items()}
+    return {
+        "requests": len(prompts),
+        "paged_kernel": True,
+        "compute_hits": on["prefix"]["compute_hits"],
+        "seed_copy_bytes": on["seed_copy_bytes"],
+        "seed_copy_bytes_ring": off["seed_copy_bytes"],
+        "snapshot_bytes": on["snapshot_bytes"],
+        "snapshot_bytes_ring": off["snapshot_bytes"],
+        "kernel_read_bytes": kernel_reads,
+        "read_bytes_by_tier": per_tier_reads,  # hbm = weight stream
+        "kv_tier_read_bytes": mrm_reads,
+        "prefill_tokens_computed": on["prefill_tokens_computed"],
+        "prefill_tokens_computed_ring": off["prefill_tokens_computed"],
+        "tokens_generated": on["tokens_generated"],
+        "ttft_p50_s": on["latency"]["ttft_p50"],
+        "ttft_p50_ring_s": off["latency"]["ttft_p50"],
+    }
+
+
 def compute(arch="deepseek-7b") -> dict:
     from repro.configs import get_config, reduced
     from repro.core.memclass import HBM3E, MRM_RRAM
@@ -420,6 +501,29 @@ def fleet_reuse(arch="deepseek-7b", replicas=3, fanout=12,
     }
 
 
+def _persist_paged_trajectory(entry: dict) -> None:
+    """Append the paged_kernel sweep result to BENCH_paged.json at the
+    repo root — the benchmark trajectory file CI and later sessions diff
+    against (acceptance: seed_copy_bytes stays 0 while the ring
+    comparator stays > 0)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_paged.json")
+    data = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {"entries": []}
+    data.setdefault("entries", []).append(
+        {"at": time.time(), **entry})
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+        f.write("\n")
+
+
 def run(csv=True):
     t0 = time.perf_counter()
     out = compute()
@@ -458,6 +562,25 @@ def run(csv=True):
             if reuse["kv_write_cut"] is not None:
                 print(f"serving_sim/{tag}_kv_write_cut,{dt:.1f},{reuse['kv_write_cut']:.4f}")
             print(f"serving_sim/{tag}_ttft_p50_s,{dt:.1f},{reuse['ttft_p50_s']:.6f}")
+    # paged compute plane (DESIGN.md §10): zero-copy hits, bit-identical
+    # tokens, and the KV-tier read stream == the kernel's page gathers;
+    # the trajectory also persists to BENCH_paged.json at the repo root
+    t0 = time.perf_counter()
+    paged = paged_kernel()
+    dt = (time.perf_counter() - t0) * 1e6
+    out["paged_kernel"] = paged
+    _persist_paged_trajectory(paged)
+    if csv:
+        print(f"serving_sim/paged_seed_copy_bytes,{dt:.1f},"
+              f"{paged['seed_copy_bytes']:.0f}")
+        print(f"serving_sim/paged_seed_copy_bytes_ring,{dt:.1f},"
+              f"{paged['seed_copy_bytes_ring']:.0f}")
+        print(f"serving_sim/paged_kernel_read_gb,{dt:.1f},"
+              f"{paged['kernel_read_bytes'] / 1e9:.4f}")
+        print(f"serving_sim/paged_compute_hits,{dt:.1f},"
+              f"{paged['compute_hits']}")
+        print(f"serving_sim/paged_ttft_p50_s,{dt:.1f},"
+              f"{paged['ttft_p50_s']:.6f}")
     # sub-page tails: boundary-straddling prefixes must beat the
     # page-aligned cut strictly (DESIGN.md §9)
     t0 = time.perf_counter()

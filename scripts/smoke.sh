@@ -29,6 +29,17 @@ for key in ("prefix_reuse", "prefix_reuse_ssm", "prefix_reuse_hybrid"):
     assert reuse["prefill_cut"] >= 0.30, (key, reuse)
     if reuse["kv_write_cut"] is not None:
         assert reuse["kv_write_cut"] >= 0.30, (key, reuse)
+# paged compute plane (DESIGN.md §10): a prefix hit must cost ZERO copy
+# bytes (no donor-seed cache copy, no snapshot) at bit-identical decoded
+# tokens, while the ring comparator still pays seed copies per hit, and
+# the KV tier's metered reads must equal the kernel's page-gather bytes
+pk = rep["suites"]["serving"]["paged_kernel"]
+assert pk["seed_copy_bytes"] == 0, pk
+assert pk["snapshot_bytes"] == 0, pk
+assert pk["seed_copy_bytes_ring"] > 0, pk
+assert pk["compute_hits"] > 0, pk
+assert pk["kernel_read_bytes"] > 0, pk
+assert abs(pk["kv_tier_read_bytes"] - pk["kernel_read_bytes"]) < 1e-6, pk
 # sub-page tails (DESIGN.md §9): boundary-straddling prefixes must cut
 # strictly more prefill tokens than the page-aligned matcher, with the
 # tail copies actually metered — a tail-reuse regression fails the build
@@ -56,6 +67,9 @@ print("prefix reuse:", {k: round(reuse[k], 4) for k in
 print("prefix reuse (ssm/hybrid):",
       {k: round(rep["suites"]["serving"][k]["prefill_cut"], 4)
        for k in ("prefix_reuse_ssm", "prefix_reuse_hybrid")})
+print("paged kernel:", {k: round(pk[k], 4) for k in
+                        ("compute_hits", "seed_copy_bytes",
+                         "seed_copy_bytes_ring", "kernel_read_bytes")})
 print("tail reuse:", {k: round(tr[k], 4) for k in
                       ("prefill_cut", "prefill_cut_page_aligned",
                        "tail_hits", "tail_tokens_copied")})

@@ -1,3 +1,5 @@
+"""Batched ring-cache decode attention — a thin compatibility wrapper
+over the ragged paged-attention kernel (see ``ops`` for the mapping)."""
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 

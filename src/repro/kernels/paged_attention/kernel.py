@@ -1,0 +1,219 @@
+"""Ragged paged-attention Pallas TPU kernel.
+
+One grid step per sequence (``grid = (S,)``). The three ragged
+descriptors — ``cu_q_lens``, ``kv_lens``, ``page_table`` — ride in
+scalar-prefetch SMEM so each step can size its own work before its body
+runs. KV pages stay in ``ANY`` memory (HBM); the kernel pulls them one
+page at a time into a two-slot VMEM buffer with ``make_async_copy``,
+starting page ``i+1``'s DMA before computing on page ``i`` so the gather
+overlaps the MXU work. Queries and outputs live whole in VMEM: each step
+dynamically slices its own ``max_q``-row block, and since steps run in
+ascending sequence order, the garbage rows a short sequence writes past
+its true length are overwritten by the next sequence's block (the host
+wrapper pads by ``max_q`` rows and slices them off).
+
+Softmax math matches ``ref.paged_attention_rows`` shape-for-shape: fp32
+online accumulation per KV head with explicit zeroing of masked
+probabilities, so fully-masked (padding) pages leave the accumulator
+bit-identical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _attend_page(qf, kv, kpos, qpos, m, l, acc, *, scale, cap, window):
+    """One page of online softmax for one KV head.
+
+    qf: (N, D) fp32 query block (N = max_q * G rows); kv: (ps, 2, D)
+    this head's fused page slab; kpos: (ps,) key positions; qpos: (N, 1)
+    query positions; m/l: (N, 1) fp32; acc: (N, D) fp32."""
+    k = kv[:, 0, :].astype(jnp.float32)                  # (ps, D)
+    v = kv[:, 1, :].astype(jnp.float32)
+    s = jax.lax.dot_general(qf, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    kp = kpos[None, :]                                   # (1, ps)
+    valid = (kp >= 0) & (kp <= qpos)
+    if window is not None:
+        valid &= kp > (qpos - window)
+    s = jnp.where(valid, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+    # explicit zeroing (not just exp of NEG_INF): when every page so far
+    # was masked, m_new == NEG_INF and exp(s - m_new) would be 1
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m - m_new)
+    l = l * corr + p.sum(axis=-1, keepdims=True)
+    acc = acc * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return m_new, l, acc
+
+
+def _kernel(cu_ref, kvlen_ref, tbl_ref, q_ref, kv_ref, o_ref,
+            kbuf, ksem, m_s, l_s, acc_s,
+            *, ps, max_q, Hkv, G, D, scale, cap, window,
+            qpos_ref=None, kvpos_ref=None, pbuf=None, psem=None):
+    has_pos = kvpos_ref is not None
+    s = pl.program_id(0)
+    q0 = cu_ref[s]
+    qlen = cu_ref[s + 1] - q0
+    kv_len = kvlen_ref[s]
+    n_pages = jax.lax.div(kv_len + ps - 1, ps)
+
+    def page_copy(i, slot):
+        return pltpu.make_async_copy(
+            kv_ref.at[tbl_ref[s, i]], kbuf.at[slot], ksem.at[slot])
+
+    def pos_copy(i, slot):
+        return pltpu.make_async_copy(
+            kvpos_ref.at[tbl_ref[s, i]], pbuf.at[slot], psem.at[slot])
+
+    @pl.when(n_pages > 0)
+    def _warmup():
+        page_copy(0, 0).start()
+        if has_pos:
+            pos_copy(0, 0).start()
+
+    qblk = q_ref[pl.ds(q0, max_q)]                       # (max_q, Hq, D)
+    if has_pos:
+        qpos = qpos_ref[pl.ds(q0, max_q)].reshape(max_q, 1)
+        qpos = jnp.broadcast_to(qpos, (max_q, G)).reshape(max_q * G, 1)
+    else:
+        qpos = (kv_len - qlen
+                + jax.lax.broadcasted_iota(jnp.int32, (max_q, G), 0))
+        qpos = qpos.reshape(max_q * G, 1)
+
+    m_s[...] = jnp.full_like(m_s[...], NEG_INF)
+    l_s[...] = jnp.zeros_like(l_s[...])
+    acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < n_pages)
+        def _prefetch():
+            page_copy(i + 1, 1 - slot).start()
+            if has_pos:
+                pos_copy(i + 1, 1 - slot).start()
+
+        page_copy(i, slot).wait()
+        if has_pos:
+            pos_copy(i, slot).wait()
+            kpos = pbuf[slot]
+        else:
+            kpos = i * ps + jax.lax.broadcasted_iota(jnp.int32, (ps,), 0)
+        kv = kbuf[slot]                                  # (ps, 2*Hkv, D)
+        for h in range(Hkv):
+            qh = qblk[:, h * G:(h + 1) * G, :].astype(jnp.float32)
+            qh = qh.reshape(max_q * G, D)
+            m_new, l_new, a_new = _attend_page(
+                qh, kv[:, 2 * h:2 * h + 2, :], kpos, qpos,
+                m_s[h], l_s[h], acc_s[h],
+                scale=scale, cap=cap, window=window)
+            m_s[h] = m_new
+            l_s[h] = l_new
+            acc_s[h] = a_new
+        return 0
+
+    jax.lax.fori_loop(0, n_pages, body, 0)
+
+    outs = []
+    for h in range(Hkv):
+        l = l_s[h]
+        o = acc_s[h] / jnp.where(l == 0.0, 1.0, l)
+        outs.append(o.reshape(max_q, G, D))
+    out = jnp.concatenate(outs, axis=1).astype(o_ref.dtype)
+    o_ref[pl.ds(q0, max_q)] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "cap", "window", "max_q_len", "interpret"))
+def ragged_paged_attention_pallas(q_pad, kv_pages, page_table, cu_q_lens,
+                                  kv_lens, *, scale: float,
+                                  cap: Optional[float] = None,
+                                  window: Optional[int] = None,
+                                  max_q_len: int = 1,
+                                  q_pos_pad=None, kv_pos_pages=None,
+                                  interpret: bool = False):
+    """Pallas entry. ``q_pad`` must be (T + max_q_len, Hq, D) — padded so
+    every sequence's ``max_q_len`` block load stays in bounds; callers go
+    through ``ops.ragged_paged_attention`` which pads and re-slices."""
+    Tpad, Hq, D = q_pad.shape
+    _, ps, H2, _ = kv_pages.shape
+    Hkv = H2 // 2
+    G = Hq // Hkv
+    S = page_table.shape[0]
+    max_q = max_q_len
+    has_pos = kv_pos_pages is not None
+
+    scratch = [
+        pltpu.VMEM((2, ps, H2, D), kv_pages.dtype),      # kbuf
+        pltpu.SemaphoreType.DMA((2,)),                   # ksem
+        pltpu.VMEM((Hkv, max_q * G, 1), jnp.float32),    # m_s
+        pltpu.VMEM((Hkv, max_q * G, 1), jnp.float32),    # l_s
+        pltpu.VMEM((Hkv, max_q * G, D), jnp.float32),    # acc_s
+    ]
+    q_spec = pl.BlockSpec((Tpad, Hq, D), lambda s, *_: (0, 0, 0))
+    if has_pos:
+        in_specs = [
+            q_spec,
+            pl.BlockSpec(memory_space=pltpu.ANY),        # kv_pages
+            pl.BlockSpec((Tpad,), lambda s, *_: (0,)),       # q_pos
+            pl.BlockSpec(memory_space=pltpu.ANY),        # kv_pos_pages
+        ]
+        args = [q_pad, kv_pages,
+                jnp.asarray(q_pos_pad, jnp.int32),
+                jnp.asarray(kv_pos_pages, jnp.int32)]
+        scratch += [
+            pltpu.VMEM((2, ps), jnp.int32),              # pbuf
+            pltpu.SemaphoreType.DMA((2,)),               # psem
+        ]
+    else:
+        in_specs = [q_spec, pl.BlockSpec(memory_space=pltpu.ANY)]
+        args = [q_pad, kv_pages]
+
+    kernel = functools.partial(
+        _kernel, ps=ps, max_q=max_q, Hkv=Hkv, G=G, D=D, scale=scale,
+        cap=cap, window=window)
+
+    def wrapped(cu_ref, kvlen_ref, tbl_ref, q_ref, kv_ref, *rest):
+        if has_pos:
+            qpos_ref, kvpos_ref, o_ref = rest[0], rest[1], rest[2]
+            kbuf, ksem, m_s, l_s, acc_s, pbuf, psem = rest[3:]
+            kernel(cu_ref, kvlen_ref, tbl_ref, q_ref, kv_ref, o_ref,
+                   kbuf, ksem, m_s, l_s, acc_s,
+                   qpos_ref=qpos_ref, kvpos_ref=kvpos_ref,
+                   pbuf=pbuf, psem=psem)
+        else:
+            o_ref = rest[0]
+            kbuf, ksem, m_s, l_s, acc_s = rest[1:]
+            kernel(cu_ref, kvlen_ref, tbl_ref, q_ref, kv_ref, o_ref,
+                   kbuf, ksem, m_s, l_s, acc_s)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((Tpad, Hq, D), lambda s, *_: (0, 0, 0)),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        wrapped,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tpad, Hq, D), q_pad.dtype),
+        interpret=interpret,
+    )(jnp.asarray(cu_q_lens, jnp.int32),
+      jnp.asarray(kv_lens, jnp.int32),
+      jnp.asarray(page_table, jnp.int32),
+      *args)

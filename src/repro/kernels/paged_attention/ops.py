@@ -1,0 +1,59 @@
+"""Host-side dispatch for ragged paged attention.
+
+``ragged_paged_attention`` pads the flat query block by ``max_q_len``
+rows (so the kernel's fixed-size per-sequence block loads stay in
+bounds), routes to the Pallas kernel or the jnp reference, and slices
+the padding back off. ``backend="auto"`` picks Pallas interpret mode off
+TPU so CI exercises the exact kernel lowering on CPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ragged_paged_attention_pallas
+from .ref import ragged_paged_attention_ref
+
+
+def ragged_paged_attention(q, kv_pages, page_table, cu_q_lens, kv_lens, *,
+                           scale: float, cap: Optional[float] = None,
+                           window: Optional[int] = None,
+                           q_pos=None, kv_pos_pages=None,
+                           max_q_len: Optional[int] = None,
+                           backend: str = "auto",
+                           interpret: Optional[bool] = None):
+    """Attend T concatenated query rows against paged KV storage.
+
+    q: (T, Hq, D); kv_pages: (P, ps, 2*Hkv, D) fused head-interleaved;
+    page_table: (S, W) int32; cu_q_lens: (S+1,) int32 with
+    cu_q_lens[-1] == T; kv_lens: (S,) int32. ``max_q_len`` must be a
+    static bound on every per-sequence query length (defaults to T,
+    which is always safe). ``q_pos``/``kv_pos_pages`` switch on explicit
+    position tracking (ring-layout compatibility); both or neither.
+    Returns (T, Hq, D) in q's dtype.
+    """
+    if (q_pos is None) != (kv_pos_pages is None):
+        raise ValueError("q_pos and kv_pos_pages must be given together")
+    if backend == "ref":
+        return ragged_paged_attention_ref(
+            q, kv_pages, page_table, cu_q_lens, kv_lens, scale=scale,
+            cap=cap, window=window, q_pos=q_pos,
+            kv_pos_pages=kv_pos_pages)
+    if backend not in ("auto", "pallas"):
+        raise ValueError(f"unknown backend: {backend!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    T = q.shape[0]
+    max_q = T if max_q_len is None else int(max_q_len)
+    max_q = max(1, max_q)
+    q_pad = jnp.pad(q, ((0, max_q), (0, 0), (0, 0)))
+    q_pos_pad = None
+    if q_pos is not None:
+        q_pos_pad = jnp.pad(jnp.asarray(q_pos, jnp.int32), (0, max_q))
+    out = ragged_paged_attention_pallas(
+        q_pad, kv_pages, page_table, cu_q_lens, kv_lens, scale=scale,
+        cap=cap, window=window, max_q_len=max_q, q_pos_pad=q_pos_pad,
+        kv_pos_pages=kv_pos_pages, interpret=interpret)
+    return out[:T]

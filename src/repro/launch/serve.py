@@ -51,6 +51,7 @@ def build_engine(args, cfg, full, params):
                      kv_spill_tier=args.spill_tier,
                      prefix_caching=not args.no_prefix_caching,
                      tail_copy=args.tail_copy == "on",
+                     paged_kernel=args.paged_kernel == "on",
                      radix_hot_threshold=args.radix_hot_threshold,
                      radix_hot_tier=args.radix_hot_tier,
                      radix_cold_ttl_s=args.radix_cold_ttl,
@@ -86,6 +87,11 @@ def main(argv=None):
     ap.add_argument("--no-prefix-caching", action="store_true",
                     help="disable the radix prefix tree (cold baseline; "
                          "the prompt layout is unpadded either way)")
+    ap.add_argument("--paged-kernel", choices=("on", "off"), default="on",
+                    help="run attention/MLA extend+decode in place on the "
+                         "paged KV plane (zero-copy prefix hits, kernel-"
+                         "metered tier reads; DESIGN.md §10) — point "
+                         "stacks (SSM/hybrid) fall back to the ring path")
     ap.add_argument("--tail-copy", choices=("on", "off"), default="on",
                     help="sub-page tail reuse: copy the shared mid-page "
                          "tail into the borrower's page and resume prefill "

@@ -25,6 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import (
+    interleave_kv,
+    paged_attention_rows,
+    write_tokens_to_pages,
+)
 from repro.models.layers import apply_rope, rmsnorm, softcap
 from repro.models.param import ParamDef
 
@@ -413,6 +418,7 @@ def attention_sublayer(
     mode: str = "train",  # train | prefill | extend | decode
     cur_pos=None,
     decode_active=None,   # (B,) bool: rows whose cache the decode may touch
+    page_table=None,      # (B, W) int32: paged compute plane (DESIGN.md §10)
 ) -> Tuple[jax.Array, Optional[dict]]:
     """x: (B, S, d) -> (attn_out (B, S, d), updated cache or None)."""
     B, S, d = x.shape
@@ -429,6 +435,30 @@ def attention_sublayer(
 
     scale = _q_scale(cfg)
     new_cache = None
+    if cache is not None and "kv_pages" in cache:
+        # paged compute plane: write this step's KV straight into the
+        # shared page pool and attend page-by-page — extend and decode
+        # are the same rows-form call, only the positions differ.
+        assert page_table is not None
+        if mode == "decode":
+            cur = jnp.asarray(cur_pos, jnp.int32)
+            pos2d = (cur.reshape(-1, 1) if cur.ndim
+                     else jnp.full((B, 1), cur, jnp.int32))
+            act = decode_active
+        else:
+            pos2d = jnp.broadcast_to(
+                jnp.asarray(positions, jnp.int32).reshape(1, S), (B, S))
+            act = None
+        kvp = write_tokens_to_pages(cache["kv_pages"], interleave_kv(k, v),
+                                    pos2d, page_table, active=act)
+        Hq, hd = q.shape[2], q.shape[3]
+        out = paged_attention_rows(
+            q.reshape(B * S, Hq, hd), kvp,
+            jnp.repeat(page_table, S, axis=0), pos2d.reshape(B * S),
+            scale=scale, cap=cfg.attn_softcap, window=window,
+        ).reshape(B, S, Hq, hd)
+        out = jnp.einsum("bshk,hkd->bsd", out.astype(q.dtype), p["wo"])
+        return out, {"kv_pages": kvp}
     if mode == "decode":
         assert cache is not None
         new_cache = append_to_cache(cache, k, v, cur_pos, active=decode_active)

@@ -21,6 +21,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import (
+    paged_attention_rows,
+    write_tokens_to_pages,
+)
 from repro.models.attention import NEG_INF, chunked_attention
 from repro.models.layers import apply_rope, rmsnorm
 from repro.models.param import ParamDef
@@ -125,6 +129,7 @@ def mla_sublayer(
     mode: str = "train",
     cur_pos=None,
     decode_active=None,
+    page_table=None,  # (B, W) int32: paged compute plane (DESIGN.md §10)
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Modes: ``train``/``prefill`` (full-sequence chunked attention over
     the *unpadded* layout — token i at absolute position i, so causal
@@ -144,6 +149,38 @@ def mla_sublayer(
     c, kr = _compress_kv(cfg, p, x, positions)
     new_cache = None
 
+    if cache is not None and "kv_pages" in cache:
+        # paged compute plane, always absorbed: the fused page row stores
+        # K' = [c, kr] and V' = [c, 0] (one Hkv=1 head of width r+dr), so
+        # q' = [qn·W_UK, qr] gives q'·K' = qc·c + qr·kr — the absorbed
+        # score exactly — and p@V' carries the latent context in its
+        # first r lanes, expanded through W_UV after the kernel.
+        assert page_table is not None
+        k_f = jnp.concatenate([c, kr], axis=-1)               # (B, S, r+dr)
+        v_f = jnp.concatenate([c, jnp.zeros_like(kr)], axis=-1)
+        kv_new = jnp.stack([k_f, v_f], axis=2)                # (B, S, 2, r+dr)
+        if mode == "decode":
+            cur = jnp.asarray(cur_pos, jnp.int32)
+            pos2d = (cur.reshape(-1, 1) if cur.ndim
+                     else jnp.full((B, 1), cur, jnp.int32))
+            act = decode_active
+        else:
+            pos2d = jnp.broadcast_to(
+                jnp.asarray(positions, jnp.int32).reshape(1, S), (B, S))
+            act = None
+        kvp = write_tokens_to_pages(cache["kv_pages"], kv_new, pos2d,
+                                    page_table, active=act)
+        qc = jnp.einsum("bshk,rhk->bshr", qn, p["w_uk"])
+        q_f = jnp.concatenate([qc, qr], axis=-1)              # (B, S, H, r+dr)
+        H = q_f.shape[2]
+        o = paged_attention_rows(
+            q_f.reshape(B * S, H, r + dr), kvp,
+            jnp.repeat(page_table, S, axis=0), pos2d.reshape(B * S),
+            scale=scale).reshape(B, S, H, r + dr)
+        out = jnp.einsum("bshr,rhk->bshk", o[..., :r].astype(x.dtype),
+                         p["w_uv"])
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return out, {"kv_pages": kvp}
     if mode == "decode":
         assert cache is not None
         C = cache["c"].shape[1]

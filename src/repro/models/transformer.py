@@ -91,19 +91,24 @@ def abstract_params(cfg: ModelConfig, shardings=None):
 
 def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x, *, positions,
                 sh=None, cache=None, mode="train", cur_pos=None,
-                decode_active=None):
+                decode_active=None, page_table=None):
     """Pre-norm residual block. Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if page_table is not None and spec.kind not in ("attn", "mla"):
+        raise ValueError(
+            f"paged compute plane requires positional caches, got {spec.kind}")
     if spec.kind == "attn":
         h, new_cache = attention_sublayer(cfg, p["mixer"], h, positions=positions,
                                           window=spec.window, sh=sh, cache=cache,
                                           mode=mode, cur_pos=cur_pos,
-                                          decode_active=decode_active)
+                                          decode_active=decode_active,
+                                          page_table=page_table)
     elif spec.kind == "mla":
         h, new_cache = mla_sublayer(cfg, p["mixer"], h, positions=positions, sh=sh,
                                     cache=cache, mode=mode, cur_pos=cur_pos,
-                                    decode_active=decode_active)
+                                    decode_active=decode_active,
+                                    page_table=page_table)
     elif spec.kind == "ssm":
         h, new_cache = ssm_sublayer(cfg, p["mixer"], h, sh=sh, cache=cache,
                                     mode=mode, decode_active=decode_active)
@@ -174,6 +179,37 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
     return tuple(groups)
 
 
+def _paged_unit_cache(cfg: ModelConfig, spec: LayerSpec, n_pages: int,
+                      page_tokens: int, dtype):
+    """One unit's paged-plane pool (DESIGN.md §10). Page id 0 is the
+    reserved null page. Attention pages hold fused head-interleaved KV;
+    MLA pages hold one fused latent head: K' = [c, kr], V' = [c, 0]."""
+    if spec.kind == "attn":
+        shape = (n_pages, page_tokens, 2 * cfg.n_kv_heads,
+                 cfg.resolved_head_dim)
+    elif spec.kind == "mla":
+        shape = (n_pages, page_tokens, 2, cfg.kv_lora_rank + cfg.qk_rope_dim)
+    else:
+        raise ValueError(
+            f"paged compute plane requires positional caches, got {spec.kind}")
+    return {"kv_pages": jnp.zeros(shape, dtype)}
+
+
+def init_paged_caches(cfg: ModelConfig, n_pages: int, page_tokens: int,
+                      dtype=jnp.bfloat16):
+    """Per-group tuple of per-unit page pools stacked over repeats —
+    shaped like ``init_caches`` output so the scan machinery is shared,
+    but sized by pool pages instead of (batch, ring)."""
+    groups = []
+    for g in cfg.scan_groups():
+        groups.append(tuple(
+            jax.tree.map(lambda a: jnp.broadcast_to(
+                a, (g.repeats,) + a.shape).copy(),
+                _paged_unit_cache(cfg, spec, n_pages, page_tokens, dtype))
+            for spec in g.unit))
+    return tuple(groups)
+
+
 # ---------------------------------------------------------------------------
 # Trunk
 # ---------------------------------------------------------------------------
@@ -200,7 +236,8 @@ def _embed_inputs(cfg: ModelConfig, params, batch: dict, sh=None):
 
 
 def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
-                 caches=None, mode="train", cur_pos=None, decode_active=None):
+                 caches=None, mode="train", cur_pos=None, decode_active=None,
+                 page_table=None):
     """Run every scan group. Returns (x, new_caches, aux_total)."""
     groups = cfg.scan_groups()
     aux_total = jnp.zeros((), jnp.float32)
@@ -220,7 +257,7 @@ def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
                 xx, c_new, aux_u = apply_block(
                     cfg, spec, params_t[u], xx, positions=positions, sh=sh,
                     cache=caches_t[u], mode=mode, cur_pos=cur_pos,
-                    decode_active=decode_active)
+                    decode_active=decode_active, page_table=page_table)
                 outs.append(c_new)
                 aux = aux + aux_u
             return (xx, aux), (tuple(outs) if caches is not None else None)
@@ -378,4 +415,66 @@ def extend(cfg: ModelConfig, params, caches, tokens, offset, sh=None):
                                     caches=caches, mode="extend")
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(cfg, params["embed"], x[:, -1])
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Paged serving steps (DESIGN.md §10): compute in place on the page pool
+# ---------------------------------------------------------------------------
+
+
+def paged_prefill(cfg: ModelConfig, params, batch: dict, caches, page_table,
+                  sh=None):
+    """First chunk on the paged plane: embeds the meta/frontend prefix +
+    prompt at absolute positions 0..S-1 and writes KV straight into the
+    pool pages named by ``page_table`` (B, W). Unlike ring ``prefill``
+    there is no per-slot cache to build — the pool is the cache — so this
+    is just ``extend`` from offset 0 with the prefix embedded.
+    Returns (last_logits, caches)."""
+    x, _ = _embed_inputs(cfg, params, batch, sh)
+    S_tot = x.shape[1]
+    positions = jnp.arange(S_tot, dtype=jnp.int32)
+    x, new_caches, _ = apply_groups(cfg, params, x, positions=positions,
+                                    sh=sh, caches=caches, mode="extend",
+                                    page_table=page_table)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params["embed"], x[:, -1])
+    return logits, new_caches
+
+
+def paged_extend(cfg: ModelConfig, params, caches, tokens, offset, page_table,
+                 sh=None):
+    """Later chunks on the paged plane: ``tokens`` (B, S[, K]) at absolute
+    positions ``offset + [0, S)``; earlier context is whatever the pages
+    in ``page_table`` hold — including pages spliced in from a radix or
+    migrated prefix hit at zero copy cost."""
+    x = embed(cfg, params["embed"], tokens)
+    if sh is not None:
+        x = sh.c(x, ("act_batch", "act_seq_res", "act_embed"))
+    S = x.shape[1]
+    positions = jnp.asarray(offset, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    x, new_caches, _ = apply_groups(cfg, params, x, positions=positions,
+                                    sh=sh, caches=caches, mode="extend",
+                                    page_table=page_table)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params["embed"], x[:, -1])
+    return logits, new_caches
+
+
+def paged_decode(cfg: ModelConfig, params, caches, last_tokens, cur_pos,
+                 page_table, sh=None, active=None):
+    """One batched decode step on the paged plane. cur_pos: (B,) absolute
+    positions; rows where ``active`` is False neither write their pages
+    nor advance (their page-table row may be all null pages)."""
+    x = embed(cfg, params["embed"], last_tokens)
+    if sh is not None:
+        x = sh.c(x, ("act_batch", None, "act_embed"))
+    cp = jnp.asarray(cur_pos, jnp.int32)
+    positions = cp if cp.ndim == 0 else cp[:, None]  # (B,) -> (B, 1) for rope
+    x, new_caches, _ = apply_groups(cfg, params, x, positions=positions,
+                                    sh=sh, caches=caches, mode="decode",
+                                    cur_pos=cp, decode_active=active,
+                                    page_table=page_table)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params["embed"], x[:, 0])
     return logits, new_caches

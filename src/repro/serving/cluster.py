@@ -240,7 +240,9 @@ class ClusterFrontend:
         imp = e.import_prefix(exp["tokens"], caches=exp["caches"],
                               hot=exp["hot"], hits=exp["hits"],
                               snap_kind=exp["snap_kind"],
-                              snap_tokens=exp["snap_tokens"])
+                              snap_tokens=exp["snap_tokens"],
+                              page_data=exp.get("page_data"),
+                              page_tokens=exp.get("page_tokens"))
         if imp["total_tokens"] == 0:
             return 0
         moved = (imp["new_tokens"] * e.kv.kv_bytes_token

@@ -111,6 +111,13 @@ class EngineConfig:
     # regression guard (the PR 4 clobbering class): verify after every
     # decode round that no cache family of an inactive slot was written
     audit_decode_masking: bool = False
+    # paged compute plane (DESIGN.md §10): run attention/MLA extend and
+    # decode directly on the pages PagedKVManager owns — a radix or
+    # migrated prefix hit is a page-table splice (zero copy bytes) and
+    # tier reads meter the kernel's actual per-page gather stream.
+    # Positional stacks only; point stacks (SSM/hybrid) fall back to the
+    # ring path (the report records the effective mode).
+    paged_kernel: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -243,20 +250,39 @@ class ComputeBackend:
     (extend), batched decode. Owns the dense ring caches and per-slot
     positions/tokens; knows nothing about tiers, pages or retention."""
 
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 paged: bool = False):
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
+        self.paged = paged
         B = ecfg.max_slots
-        self.caches = tfm.init_caches(cfg, B, ecfg.max_cache_len,
-                                      jnp.dtype(cfg.dtype))
         self.positions = np.full((B,), -1, np.int64)  # last written position
         self.last_tokens = np.zeros((B, 1) if cfg.n_codebooks == 1
                                     else (B, 1, cfg.n_codebooks), np.int32)
         self._prefill_jit: Dict[int, callable] = {}
         self._extend_jit: Dict[int, callable] = {}
-        self._decode_jit = jax.jit(
-            lambda p, c, t, pos, act: tfm.decode(cfg, p, c, t, pos, active=act))
+        self.seed_copy_bytes = 0.0  # ring-path donor seeding copy traffic
+        if paged:
+            # paged compute plane (DESIGN.md §10): one pooled page array per
+            # cache family, owned here, indexed by PagedKVManager pages via
+            # Page.compute_page. Page 0 is the reserved null page (gathered
+            # for padded table slots; auto-masked by slot-derived positions)
+            self.caches = None
+            self.page_tokens = ecfg.page_tokens
+            n0 = max(16, 1 + B * -(-ecfg.max_cache_len // ecfg.page_tokens))
+            self.paged_caches = tfm.init_paged_caches(
+                cfg, n0, ecfg.page_tokens, jnp.dtype(cfg.dtype))
+            self._free = list(range(n0 - 1, 0, -1))  # pop() -> lowest id
+            self._paged_first_jit: Dict[tuple, callable] = {}
+            self._paged_extend_jit: Dict[tuple, callable] = {}
+            self._paged_decode_jit: Dict[int, callable] = {}
+        else:
+            self.caches = tfm.init_caches(cfg, B, ecfg.max_cache_len,
+                                          jnp.dtype(cfg.dtype))
+            self._decode_jit = jax.jit(
+                lambda p, c, t, pos, act: tfm.decode(cfg, p, c, t, pos,
+                                                     active=act))
 
     # -- per-length jit caches -----------------------------------------
     def _prefill_fn(self, length: int):
@@ -278,6 +304,99 @@ class ComputeBackend:
                 lambda p, c, t, off: tfm.extend(cfg, p, c, t, off))
         return self._extend_jit[length]
 
+    # -- paged compute-page pool (DESIGN.md §10) -----------------------
+    @staticmethod
+    def table_width(n_pages: int) -> int:
+        """Power-of-2 page-table width bucket (bounds jit retraces)."""
+        return max(1, 1 << (max(1, n_pages) - 1).bit_length())
+
+    def _grow_pool(self) -> None:
+        """Double the page pool — zeros appended on the page axis of every
+        cache-family leaf. jit'd steps retrace on the new pool shape."""
+        grown = []
+
+        def widen(a):
+            pad = jnp.zeros(a.shape[:1] + (a.shape[1],) + a.shape[2:],
+                            a.dtype)
+            grown.append(a.shape[1])
+            return jnp.concatenate([a, pad], axis=1)
+
+        self.paged_caches = jax.tree.map(widen, self.paged_caches)
+        old = grown[0]
+        self._free.extend(range(2 * old - 1, old - 1, -1))
+
+    def alloc_page(self) -> int:
+        if not self._free:
+            self._grow_pool()
+        return self._free.pop()
+
+    def free_page(self, pid: int) -> None:
+        """Return a compute page to the pool. No zeroing needed: a reused
+        page's stale rows sit above the new owner's written length, where
+        slot-derived key positions exceed every query position (masked)."""
+        self._free.append(pid)
+
+    def copy_page_rows(self, src: int, dst: int, n: int) -> None:
+        """Copy rows [0, n) of compute page `src` into `dst` across every
+        cache family — the sub-page tail seeding primitive (DESIGN.md §9):
+        the only bytes a prefix hit ever copies on the paged plane."""
+        self.paged_caches = jax.tree.map(
+            lambda a: a.at[:, dst, :n].set(a[:, src, :n]), self.paged_caches)
+
+    def export_pages(self, ids: List[int]):
+        """Host-side copy of the listed compute pages (page axis first in
+        each leaf slice) — the migration wire format."""
+        idx = np.asarray(ids, np.int32)
+        return jax.tree.map(lambda a: np.asarray(a[:, idx]),
+                            self.paged_caches)
+
+    def import_pages(self, ids: List[int], data) -> None:
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        self.paged_caches = jax.tree.map(
+            lambda a, d: a.at[:, idx].set(jnp.asarray(d, a.dtype)),
+            self.paged_caches, data)
+
+    def pages_compatible(self, data) -> bool:
+        """Foreign page data is adoptable only when its tree structure and
+        per-page leaf shapes/dtypes match this pool exactly."""
+        try:
+            if (jax.tree.structure(data)
+                    != jax.tree.structure(self.paged_caches)):
+                return False
+        except Exception:
+            return False
+        return all(
+            d.shape[0] == a.shape[0] and d.shape[2:] == a.shape[2:]
+            and d.dtype == a.dtype
+            for d, a in zip(jax.tree.leaves(data),
+                            jax.tree.leaves(self.paged_caches)))
+
+    def _paged_first_fn(self, length: int, W: int):
+        key = (length, W)
+        if key not in self._paged_first_jit:
+            cfg = self.cfg
+            self._paged_first_jit[key] = jax.jit(
+                lambda p, c, batch, tbl: tfm.paged_prefill(cfg, p, batch,
+                                                           c, tbl))
+        return self._paged_first_jit[key]
+
+    def _paged_extend_fn(self, length: int, W: int):
+        key = (length, W)
+        if key not in self._paged_extend_jit:
+            cfg = self.cfg
+            self._paged_extend_jit[key] = jax.jit(
+                lambda p, c, t, off, tbl: tfm.paged_extend(cfg, p, c, t,
+                                                           off, tbl))
+        return self._paged_extend_jit[key]
+
+    def _paged_decode_fn(self, W: int):
+        if W not in self._paged_decode_jit:
+            cfg = self.cfg
+            self._paged_decode_jit[W] = jax.jit(
+                lambda p, c, t, pos, tbl, act: tfm.paged_decode(
+                    cfg, p, c, t, pos, tbl, active=act))
+        return self._paged_decode_jit[W]
+
     # -- slot cache plumbing -------------------------------------------
     def _insert_slot(self, slot: int, new_caches) -> None:
         """Copy a B=1 cache tree into decode-slot `slot`."""
@@ -298,7 +417,14 @@ class ComputeBackend:
         """Seed a slot's ring caches from a donor snapshot (prefix hit).
         Donor entries beyond the matched prefix are harmless: masking is
         position-based (`cache_pos <= cur`), so stale positions stay masked
-        until this request overwrites them via extend/decode."""
+        until this request overwrites them via extend/decode.
+
+        This is the ring path's per-hit copy cost — every hit rewrites a
+        full per-slot cache tree. The paged plane replaces it with a
+        page-table splice (zero copy bytes); ``seed_copy_bytes`` is the
+        comparator the paged_kernel benchmark sweeps against."""
+        self.seed_copy_bytes += float(sum(
+            a.size * a.dtype.itemsize for a in jax.tree.leaves(snapshot)))
         self._insert_slot(slot, snapshot)
 
     def prefix_len(self) -> int:
@@ -309,22 +435,45 @@ class ComputeBackend:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     # -- StepPlan execution --------------------------------------------
-    def run_prefill_chunk(self, ck: PrefillChunk) -> Optional[np.ndarray]:
+    def run_prefill_chunk(self, ck: PrefillChunk,
+                          page_table: Optional[np.ndarray] = None
+                          ) -> Optional[np.ndarray]:
         """Execute one prefill chunk. Returns the sampled next token when
-        the chunk completes the prompt, else None."""
+        the chunk completes the prompt, else None. On the paged plane the
+        chunk computes in place on the pool pages listed in ``page_table``
+        (the request's session pages) — no per-slot ring insert."""
         toks = np.asarray(ck.tokens, np.int32)
-        if ck.first:
+        if self.paged:
+            assert page_table is not None
+            tbl = jnp.asarray(page_table, jnp.int32)[None]
+            W = int(tbl.shape[1])
+            if ck.first:
+                batch = {"tokens": jnp.asarray(toks)[None]}
+                if self.cfg.frontend == "vision":
+                    batch["image_embeds"] = jnp.zeros(
+                        (1, self.cfg.n_frontend_tokens, self.cfg.d_model),
+                        jnp.dtype(self.cfg.dtype))
+                logits, self.paged_caches = self._paged_first_fn(
+                    toks.shape[0], W)(self.params, self.paged_caches,
+                                      batch, tbl)
+            else:
+                logits, self.paged_caches = self._paged_extend_fn(
+                    toks.shape[0], W)(self.params, self.paged_caches,
+                                      jnp.asarray(toks)[None], ck.offset,
+                                      tbl)
+        elif ck.first:
             batch = {"tokens": jnp.asarray(toks)[None]}
             if self.cfg.frontend == "vision":
                 batch["image_embeds"] = jnp.zeros(
                     (1, self.cfg.n_frontend_tokens, self.cfg.d_model),
                     jnp.dtype(self.cfg.dtype))
             logits, caches1 = self._prefill_fn(toks.shape[0])(self.params, batch)
+            self._insert_slot(ck.slot, caches1)
         else:
             caches1 = self._extract_slot(ck.slot)
             logits, caches1 = self._extend_fn(toks.shape[0])(
                 self.params, caches1, jnp.asarray(toks)[None], ck.offset)
-        self._insert_slot(ck.slot, caches1)
+            self._insert_slot(ck.slot, caches1)
         if not ck.last:
             return None
         tok = np.asarray(self.sample(logits))
@@ -332,33 +481,63 @@ class ComputeBackend:
         self.positions[ck.slot] = ck.offset + toks.shape[0] - 1
         return tok
 
-    def run_decode(self, slots: List[int]) -> np.ndarray:
+    def run_decode(self, slots: List[int],
+                   page_tables: Optional[np.ndarray] = None,
+                   audit_pages: Optional[List[int]] = None) -> np.ndarray:
         """One batched decode round over `slots` (other rows' caches are
         left untouched via the active mask — a mid-prefill slot must not be
-        clobbered). Returns the sampled tokens for all B rows."""
+        clobbered). Returns the sampled tokens for all B rows. On the
+        paged plane ``page_tables`` is the (B, W) compute-page table
+        (inactive rows all-null) and ``audit_pages`` lists compute pages
+        the round must not write (other sessions' pages)."""
         B = self.ecfg.max_slots
         act = np.zeros((B,), bool)
         act[slots] = True
         inactive = [s for s in range(B) if not act[s]]
         before = None
-        if self.ecfg.audit_decode_masking and inactive:
-            before = [np.asarray(leaf[:, inactive])
-                      for leaf in jax.tree.leaves(self.caches)]
-        pos = jnp.asarray(np.maximum(self.positions + 1, 0), jnp.int32)
-        logits, self.caches = self._decode_jit(
-            self.params, self.caches, jnp.asarray(self.last_tokens), pos,
-            jnp.asarray(act))
-        if before is not None:
-            # regression guard for the PR 4 clobbering class: with the
-            # padded whole-prompt path gone, chunked prefill interleaves
-            # with decode for every stack — a decode round must not write
-            # ANY cache family (ring KV, MLA latents, conv/SSD state) of
-            # a slot it did not decode
-            for b, leaf in zip(before, jax.tree.leaves(self.caches)):
-                after = np.asarray(leaf[:, inactive])
-                assert np.array_equal(b, after, equal_nan=True), \
-                    "decode wrote an inactive slot's cache (active-slot " \
-                    "masking regression)"
+        if self.paged:
+            assert page_tables is not None
+            if self.ecfg.audit_decode_masking and audit_pages:
+                idx = np.asarray(audit_pages, np.int32)
+                before = [np.asarray(leaf[:, idx])
+                          for leaf in jax.tree.leaves(self.paged_caches)]
+            pos = jnp.asarray(np.maximum(self.positions + 1, 0), jnp.int32)
+            tbl = jnp.asarray(page_tables, jnp.int32)
+            logits, self.paged_caches = self._paged_decode_fn(
+                int(tbl.shape[1]))(self.params, self.paged_caches,
+                                   jnp.asarray(self.last_tokens), pos, tbl,
+                                   jnp.asarray(act))
+            if before is not None:
+                # paged variant of the clobbering guard: a decode round
+                # writes exactly one row of each active session's open
+                # page — shared (sealed) pages and other sessions' pages
+                # must come back bit-identical
+                idx = np.asarray(audit_pages, np.int32)
+                for b, leaf in zip(before,
+                                   jax.tree.leaves(self.paged_caches)):
+                    after = np.asarray(leaf[:, idx])
+                    assert np.array_equal(b, after, equal_nan=True), \
+                        "decode wrote another session's compute page " \
+                        "(paged masking regression)"
+        else:
+            if self.ecfg.audit_decode_masking and inactive:
+                before = [np.asarray(leaf[:, inactive])
+                          for leaf in jax.tree.leaves(self.caches)]
+            pos = jnp.asarray(np.maximum(self.positions + 1, 0), jnp.int32)
+            logits, self.caches = self._decode_jit(
+                self.params, self.caches, jnp.asarray(self.last_tokens), pos,
+                jnp.asarray(act))
+            if before is not None:
+                # regression guard for the PR 4 clobbering class: with the
+                # padded whole-prompt path gone, chunked prefill interleaves
+                # with decode for every stack — a decode round must not write
+                # ANY cache family (ring KV, MLA latents, conv/SSD state) of
+                # a slot it did not decode
+                for b, leaf in zip(before, jax.tree.leaves(self.caches)):
+                    after = np.asarray(leaf[:, inactive])
+                    assert np.array_equal(b, after, equal_nan=True), \
+                        "decode wrote an inactive slot's cache (active-slot " \
+                        "masking regression)"
         next_np = np.asarray(self.sample(logits))
         for slot in slots:
             self.positions[slot] += 1
@@ -507,10 +686,37 @@ class ServeEngine:
         # how this stack's prefix snapshots may be reused (DESIGN.md §8):
         # "positional" (attention/MLA) or "point" (SSM/hybrid)
         self.snapshot_kind = tfm.snapshot_kind(cfg)
+        # paged compute plane (DESIGN.md §10): positional stacks only —
+        # point stacks (SSM/hybrid) carry recurrent state no page table can
+        # splice, so they silently fall back to the ring path (the report's
+        # prefix["paged_kernel"] records the effective mode)
+        self.paged = (bool(ecfg.paged_kernel)
+                      and self.snapshot_kind == "positional"
+                      and tfm.supports_extend(cfg))
         self.sched = ContinuousBatchScheduler(ecfg.max_slots,
                                               ecfg.max_prefills_per_step)
-        self.backend = ComputeBackend(cfg, params, ecfg)
+        self.backend = ComputeBackend(cfg, params, ecfg, paged=self.paged)
         self.memplane = MemoryPlane(self.acct_cfg, mem, ecfg)
+        self.kernel_read_bytes = 0.0   # paged: metered kernel page gathers
+        if self.paged:
+            # every memory-plane page owns one compute page for its life —
+            # a radix hit shares the Page object, hence the compute page:
+            # zero copy bytes
+            self.memplane.kv.on_page_alloc = self._on_page_alloc
+            self.memplane.kv.on_page_release = self._on_page_release
+            # per-layer (bytes_per_token, window) at the accounting scale:
+            # the analytic model of the kernel's per-page read stream
+            self._acct_layers = []
+            for spec in self.acct_cfg.layer_specs():
+                if spec.kind == "mla":
+                    lb = (self.acct_cfg.kv_lora_rank
+                          + self.acct_cfg.qk_rope_dim) * 2
+                elif spec.kind in ("attn", "hybrid"):
+                    lb = (2 * self.acct_cfg.n_kv_heads
+                          * self.acct_cfg.resolved_head_dim * 2)
+                else:
+                    continue
+                self._acct_layers.append((float(lb), spec.window))
         self.outputs: Dict[int, list] = {}
         self._inflight: Dict[int, _SlotPrefill] = {}  # slot -> chunk state
         self._prep_cache: Dict[int, tuple] = {}  # rid -> (tokens, chunk, key)
@@ -685,6 +891,14 @@ class ServeEngine:
         L = toks.shape[0]
         if match.tokens == 0 or not tfm.supports_extend(self.cfg):
             return 0, None, 0
+        if self.paged:
+            # paged plane: the matched pages ARE the compute state — no
+            # donor snapshot exists or is needed. The hit is a page-table
+            # splice; only a sub-page tail copies (page rows, DESIGN.md §9)
+            tail = self.kv.tail_available(match) if self.ecfg.tail_copy else 0
+            reuse = max(0, min(match.tokens + tail - plen, L - 1))
+            tail = max(0, min(tail, reuse - (match.tokens - plen)))
+            return (reuse, None, tail) if reuse else (0, None, 0)
         if self.snapshot_kind == "positional":
             payload, tail = None, 0
             avail = self.kv.tail_available(match)
@@ -773,10 +987,12 @@ class ServeEngine:
                 and self.snapshot_kind == "point":
             self._plan_point_captures(st, reuse)
         if reuse:
-            # the hit is real in the compute plane: seed the slot's caches
-            # from the donor snapshot and extend from the boundary (with a
-            # tail, the exact mid-page token boundary)
-            self.backend.seed_slot(slot, snap.caches)
+            # the hit is real in the compute plane: on the ring path, seed
+            # the slot's caches from the donor snapshot (a full cache-tree
+            # copy); on the paged plane there is nothing to copy — the
+            # matched pages are spliced into the session's table below
+            if snap is not None:
+                self.backend.seed_slot(slot, snap.caches)
             self.prefix_compute_hits += 1
             self.prefill_tokens_skipped += reuse
             req.prompt_pos = min(reuse, req.prompt_len)
@@ -784,6 +1000,14 @@ class ServeEngine:
         # nodes cannot be evicted between planning and execution; the
         # compute-vetted tail is copied into the session's own page there
         self.kv.open_session(req.request_id, match=match, tail_tokens=tail)
+        if self.paged and tail:
+            # the memory plane just copied the tail into the session's own
+            # open page; mirror it on the compute plane — the ONLY copy a
+            # paged hit performs, and only for mid-page resumption
+            src = match.tail_node.pages[0].compute_page
+            dst = self.kv.sessions[req.request_id].pages[-1].compute_page
+            if src is not None and dst is not None:
+                self.backend.copy_page_rows(src, dst, tail)
         self._inflight[slot] = st
         self.sched.mark_prefilling(slot)
         return st
@@ -854,6 +1078,11 @@ class ServeEngine:
         the prompt's last page boundary, when the prefill passed through
         one (DESIGN.md §8)."""
         plen = self.backend.prefix_len()
+        if self.paged:
+            # paged plane: the registered pages are compute-ready as-is —
+            # a donor snapshot would duplicate state the tree already owns
+            # (satellite of DESIGN.md §10: snapshot_bytes stays 0)
+            return None
         if self.snapshot_kind == "positional":
             if not (tfm.supports_extend(self.cfg)
                     and plen + len(st.tokens) <= self._min_ring_len()):
@@ -935,22 +1164,60 @@ class ServeEngine:
             self.mem.read_region(handle.region_id, handle.nbytes)
             caches, snap_bytes = handle.caches, handle.nbytes
             skind, stok = handle.kind, handle.tokens
-        return {"tokens": np.asarray(key_tokens)[:m.tokens],
-                "n_tokens": m.tokens, "kv_bytes": kv_bytes,
-                "caches": caches, "snapshot_bytes": snap_bytes,
-                "snap_kind": skind, "snap_tokens": stok,
-                "hot": m.node.hot, "hits": m.node.hits}
+        out = {"tokens": np.asarray(key_tokens)[:m.tokens],
+               "n_tokens": m.tokens, "kv_bytes": kv_bytes,
+               "caches": caches, "snapshot_bytes": snap_bytes,
+               "snap_kind": skind, "snap_tokens": stok,
+               "hot": m.node.hot, "hits": m.node.hits}
+        if self.paged:
+            # paged plane: the pages themselves are the compute state — no
+            # snapshot exists; ship the matched compute pages instead. The
+            # page-read metering above already charged the transfer.
+            ids = [p.compute_page for p in m.pages]
+            if all(i is not None for i in ids):
+                out["page_data"] = self.backend.export_pages(ids)
+                out["page_tokens"] = self.kv.page_tokens
+        return out
 
     def import_prefix(self, tokens, caches=None, hot: bool = False,
                       hits: int = 0, snap_kind: str = "positional",
-                      snap_tokens: int = 0) -> dict:
+                      snap_tokens: int = 0, page_data=None,
+                      page_tokens: Optional[int] = None) -> dict:
         """Receiver half: adopt the pages (metered writes into this
         replica's tiers; a donor-hot prefix lands in the hot tier with
         long retention — placement re-solved on arrival) and re-publish
         the donor's compute snapshot under a locally-metered handle. A
         *point* snapshot is only republished when the adoption kept every
         token up to its boundary — a truncated adoption cannot vouch for
-        tokens beyond what was grafted (DESIGN.md §8)."""
+        tokens beyond what was grafted (DESIGN.md §8).
+
+        Paged receivers take ``page_data``/``page_tokens`` instead of a
+        snapshot: the donor's compute pages are written straight into the
+        pool pages the adoption allocated — a later local hit on the
+        grafted prefix is then a zero-copy page-table splice. Data that
+        does not match this replica's page geometry or cache families is
+        rejected *before* adoption (a graft this engine cannot compute on
+        would poison later hits)."""
+        if self.paged:
+            if (page_data is None or page_tokens != self.kv.page_tokens
+                    or not self.backend.pages_compatible(page_data)):
+                return {"new_tokens": 0, "total_tokens": 0,
+                        "snapshot_bytes": 0.0}
+            new_tokens, total, node = self.kv.adopt_prefix(tokens, hot=hot,
+                                                           hits=hits)
+            inserted = self.kv._last_adopt_pages
+            if inserted:
+                # the graft kept pages [dup, total) — slice the donor data
+                # to the pages actually inserted and write them in place
+                pt = self.kv.page_tokens
+                dup_pages = (total - new_tokens) // pt
+                ids = [p.compute_page for p in inserted]
+                data = jax.tree.map(
+                    lambda a: a[:, dup_pages:dup_pages + len(ids)],
+                    page_data)
+                self.backend.import_pages(ids, data)
+            return {"new_tokens": new_tokens, "total_tokens": total,
+                    "snapshot_bytes": 0.0}
         new_tokens, total, node = self.kv.adopt_prefix(tokens, hot=hot,
                                                        hits=hits)
         snap_bytes = 0.0
@@ -972,6 +1239,68 @@ class ServeEngine:
         return sum(n.payload.nbytes for n in self.kv.radix.nodes()
                    if isinstance(n.payload, SnapshotHandle) and n.payload.live)
 
+    # -- paged compute plane (DESIGN.md §10) ---------------------------
+    def _on_page_alloc(self, page) -> None:
+        page.compute_page = self.backend.alloc_page()
+
+    def _on_page_release(self, page) -> None:
+        if page.compute_page is not None:
+            self.backend.free_page(page.compute_page)
+            page.compute_page = None
+
+    def _session_table(self, rid: int) -> np.ndarray:
+        """The request's compute-page table, padded with null page 0 to the
+        power-of-2 width bucket. Table slot j covers absolute positions
+        [j*page_tokens, (j+1)*page_tokens) — shared radix pages appear at
+        the same slots for every borrower (zero-copy hit)."""
+        pages = self.kv.sessions[rid].pages
+        W = self.backend.table_width(len(pages))
+        tbl = np.zeros((W,), np.int32)
+        for j, p in enumerate(pages):
+            tbl[j] = p.compute_page if p.compute_page is not None else 0
+        return tbl
+
+    def _decode_tables(self, slots: List[int]) -> tuple:
+        """(B, W) compute-page tables for a decode round (inactive rows
+        all-null) plus the audit list: compute pages resident in sessions
+        that are NOT decoding this round and not shared with one that is —
+        a decode write landing there is the paged clobbering class."""
+        B = self.ecfg.max_slots
+        rows, own = {}, set()
+        for slot in slots:
+            rid = self.sched.active[slot].request_id
+            rows[slot] = self._session_table(rid)
+            own.update(int(p) for p in rows[slot])
+        W = max(r.shape[0] for r in rows.values()) if rows else 1
+        tables = np.zeros((B, W), np.int32)
+        for slot, r in rows.items():
+            tables[slot, :r.shape[0]] = r
+        audit = None
+        if self.ecfg.audit_decode_masking:
+            audit = sorted({
+                int(p.compute_page) for s in self.kv.sessions.values()
+                for p in s.pages
+                if p.compute_page is not None and p.compute_page not in own})
+        return tables, audit
+
+    def _meter_paged_reads(self, rid: int, q0: int, q1: int) -> None:
+        """Meter the paged kernel's page-gather read stream for one step of
+        request ``rid`` whose queries occupy absolute positions [q0, q1):
+        a global layer streams every page up to the last query's page; a
+        windowed layer skips pages wholly below every query's window
+        (lowest reachable position q0 - window + 1). Bytes are charged at
+        the accounting scale per layer, against each page's actual tier —
+        replacing the ring path's synthetic whole-history read_all."""
+        pages = self.kv.sessions[rid].pages
+        pt = self.kv.page_tokens
+        hi = -(-q1 // pt)  # pages the kernel gathers: [lo_layer, hi)
+        page_bytes = [0.0] * len(pages)
+        for lb, w in self._acct_layers:
+            lo = 0 if w is None else max(0, q0 - w + 1) // pt
+            for j in range(lo, min(hi, len(pages))):
+                page_bytes[j] += pt * lb
+        self.kernel_read_bytes += self.kv.read_pages(rid, page_bytes)
+
     def _account_chunk_kv(self, st: _SlotPrefill, ck: PrefillChunk) -> None:
         """This chunk's tokens enter the paged KV — unless a shared prefix
         already holds them (prefix reuse is counted once at open)."""
@@ -990,12 +1319,27 @@ class ServeEngine:
 
         # --- prefill phase (whole prompts or chunks) ------------------
         for ck in plan.prefill:
-            tok = self.backend.run_prefill_chunk(ck)
+            st = self._inflight[ck.slot]
+            if self.paged:
+                # pages must exist BEFORE compute: the kernel writes this
+                # chunk's KV into the session's own pages in place
+                self._account_chunk_kv(st, ck)
+                tok = self.backend.run_prefill_chunk(
+                    ck, page_table=self._session_table(ck.request_id))
+            else:
+                tok = self.backend.run_prefill_chunk(ck)
             self.memplane.weight_pass()
+            if self.paged:
+                # meter the kernel's actual page-gather stream: queries at
+                # [q0, q1) — the first chunk embeds the meta prefix, so its
+                # oldest query is position 0
+                q0 = 0 if ck.first else ck.offset
+                self._meter_paged_reads(ck.request_id, q0,
+                                        ck.offset + len(ck.tokens))
             self.prefill_chunks_run += 1
             self.sched.stats.prefill_chunks += 1
-            st = self._inflight[ck.slot]
-            self._account_chunk_kv(st, ck)
+            if not self.paged:
+                self._account_chunk_kv(st, ck)
             st.done += len(ck.tokens)
             st.req.prompt_pos = min(st.done, st.req.prompt_len)
             # point-snapshot stacks: the recurrent state is only capturable
@@ -1023,7 +1367,18 @@ class ServeEngine:
 
         # --- decode round ---------------------------------------------
         if plan.decode:
-            next_np = self.backend.run_decode(plan.decode)
+            if self.paged:
+                # the new token's page must exist before the kernel writes
+                # its KV row in place
+                for slot in plan.decode:
+                    self.kv.append_tokens(
+                        self.sched.active[slot].request_id, 1)
+                tables, audit = self._decode_tables(plan.decode)
+                next_np = self.backend.run_decode(plan.decode,
+                                                  page_tables=tables,
+                                                  audit_pages=audit)
+            else:
+                next_np = self.backend.run_decode(plan.decode)
             self.memplane.weight_pass()
             finished: List[int] = []
             for slot in plan.decode:
@@ -1034,8 +1389,15 @@ class ServeEngine:
                 self.tokens_generated += 1
                 rpt.decode_tokens += 1
                 self.sched.stats.decode_tokens += 1
-                self.kv.read_all(req.request_id)
-                self.kv.append_tokens(req.request_id, 1)
+                if self.paged:
+                    # one query at the just-written position: the kernel
+                    # gathered the session's pages, not a synthetic
+                    # whole-history read
+                    p = int(self.backend.positions[slot])
+                    self._meter_paged_reads(req.request_id, p, p + 1)
+                else:
+                    self.kv.read_all(req.request_id)
+                    self.kv.append_tokens(req.request_id, 1)
                 done = (req.generated >= req.max_new_tokens or
                         (self.cfg.n_codebooks == 1 and
                          int(np.asarray(tok).flat[0]) == self.ecfg.eos_token))
@@ -1089,8 +1451,11 @@ class ServeEngine:
         prefix["hot_tier"] = self.memplane.hot_tier
         prefix["snapshots_published"] = self.snapshots_published
         prefix["snapshot_bytes"] = snapshot_bytes
+        prefix["paged_kernel"] = self.paged
         return {
             "steps": self.steps,
+            "kernel_read_bytes": self.kernel_read_bytes,
+            "seed_copy_bytes": self.backend.seed_copy_bytes,
             "tokens_generated": self.tokens_generated,
             "finished": self.sched.stats.finished,
             "sim_time_s": self.mem.now,

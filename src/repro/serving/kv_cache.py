@@ -84,6 +84,7 @@ class Page:
     refcount: int = 1          # >1 when shared via the radix prefix index
     tier: str = ""             # where the page lives (spill may differ)
     dropped: bool = False      # soft state dropped; recompute on read
+    compute_page: Optional[int] = None  # paged-plane pool id (DESIGN.md §10)
 
 
 @dataclass
@@ -205,6 +206,13 @@ class PagedKVManager:
         # (full_path, tail_tokens) when a leaf leaves the tree
         self.on_prefix_insert: Optional[Callable[[Sequence], None]] = None
         self.on_prefix_evict: Optional[Callable[[tuple, int], None]] = None
+        # paged-compute-plane hooks (ServeEngine wires these when the
+        # kernel runs in place on the pages, DESIGN.md §10): alloc fires
+        # for every Page this manager creates so the backend can bind a
+        # pool page; release fires exactly when the refcount hits zero
+        self.on_page_alloc: Optional[Callable[[Page], None]] = None
+        self.on_page_release: Optional[Callable[[Page], None]] = None
+        self._last_adopt_pages: List[Page] = []  # adopt_prefix's new pages
 
     # -- prefix tree ---------------------------------------------------
     @property
@@ -357,6 +365,7 @@ class PagedKVManager:
         Returns ``(new_tokens, total_tokens, node)``: tokens newly backed
         here, total matched+adopted tokens, and the deepest node."""
         pt = self.page_tokens
+        self._last_adopt_pages = []
         n = (len(tokens) // pt) * pt
         if n == 0:
             return 0, 0, None
@@ -396,6 +405,8 @@ class PagedKVManager:
                 p = Page(self._next_page, rid, pt, sealed=True, refcount=0,
                          tier=used)
                 self._next_page += 1
+                if self.on_page_alloc is not None:
+                    self.on_page_alloc(p)
                 new_pages.append(p)
         finally:
             self.radix.unlock(m.node)
@@ -408,6 +419,7 @@ class PagedKVManager:
         assert dup2 == dup, "graft walk disagrees with match_len"
         for p in inserted:
             p.refcount += 1    # the tree holds its own reference
+        self._last_adopt_pages = list(inserted)
         self.lifecycle.note_adoption(len(inserted), len(inserted) * pt)
         if node is not self.radix.root:
             self._notify_insert(tokens[:total])
@@ -458,9 +470,14 @@ class PagedKVManager:
     # -- capacity pressure ---------------------------------------------
     def _unref_page(self, page: Page) -> None:
         page.refcount -= 1
-        if page.refcount <= 0 and page.region_id is not None:
-            self.mem.release_region(page.region_id)
-            page.region_id = None
+        if page.refcount <= 0:
+            if page.region_id is not None:
+                self.mem.release_region(page.region_id)
+                page.region_id = None
+            # fired once, region or not: a dropped page still holds a
+            # compute-plane pool page the backend must reclaim
+            if self.on_page_release is not None:
+                self.on_page_release(page)
 
     def _evict_one_prefix_leaf(self) -> bool:
         """Leaf-LRU eviction: unlocked leaves hold pages pinned only by
@@ -553,6 +570,8 @@ class PagedKVManager:
         p = Page(self._next_page, rid, n_tokens, tier=tier, dropped=dropped,
                  sealed=n_tokens >= self.page_tokens)
         self._next_page += 1
+        if self.on_page_alloc is not None:
+            self.on_page_alloc(p)
         s.pages.append(p)
         return p
 
@@ -614,6 +633,27 @@ class PagedKVManager:
                                      page.n_tokens * self.kv_bytes_token,
                                      sequential=True)
                 total += page.n_tokens * self.kv_bytes_token
+        return total
+
+    def read_pages(self, session_id: int, page_bytes: Sequence[float]) -> float:
+        """Meter the paged kernel's actual per-page read stream
+        (DESIGN.md §10): ``page_bytes[i]`` is the byte count the kernel's
+        DMA pulled from the session's i-th page this step — computed by
+        the engine from the layer stack and each layer's window, so tier
+        traffic is charged for exactly what the gather touched (zero for
+        pages outside every window) instead of a synthetic whole-cache
+        read. Dropped pages the kernel touched are re-materialized first.
+        Returns total bytes metered."""
+        s = self.sessions[session_id]
+        total = 0.0
+        for page, nbytes in zip(s.pages, page_bytes):
+            if nbytes <= 0:
+                continue
+            if page.dropped:
+                self._rematerialize(s, page)
+            if page.region_id is not None:
+                self.mem.read_region(page.region_id, nbytes, sequential=True)
+                total += nbytes
         return total
 
     def close_session(self, session_id: int) -> None:
