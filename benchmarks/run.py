@@ -15,7 +15,8 @@ import json
 import sys
 import traceback
 
-SUITES = ("fig1", "workload", "tco", "serving", "kernels", "roofline")
+SUITES = ("fig1", "workload", "tco", "serving", "kernels", "kernel_bench",
+          "roofline")
 
 
 def main(argv=None) -> None:
@@ -48,6 +49,10 @@ def main(argv=None) -> None:
     if "kernels" in want:
         from benchmarks import kernels
         results["kernels"] = _run("kernels", kernels.run, failures)
+    if "kernel_bench" in want:
+        from benchmarks import kernel_bench
+        results["kernel_bench"] = _run("kernel_bench", kernel_bench.run,
+                                       failures)
     if "roofline" in want:
         from benchmarks import roofline
         results["roofline"] = _run("roofline", roofline.run, failures)

@@ -227,9 +227,17 @@ def paged_kernel(arch="deepseek-7b", n_shares=4, head_tokens=48,
                  ask_tokens=12) -> dict:
     """Paged compute plane vs the ring path (DESIGN.md §10) on shared-
     prefix fan-out traffic: the same prompts, decoded greedily in fp32,
-    with ``paged_kernel`` on vs off. Asserts the PR 6 acceptance bar:
+    with ``paged_kernel`` on vs off. The plane is universal (ISSUE 7):
+    attention/MLA serve on KV pages, SSM/hybrid on pooled point-state
+    pages — there is no ring fallback for any family. Asserts:
 
-    - decoded tokens are **bit-identical** between the two planes;
+    - prefix-hit decode on the paged plane is **bit-identical** to a
+      cold paged start, and to the ring plane whenever no sliding window
+      wraps the ring buffer (a wrapped window sums the same values in
+      rotated order — fp32 accumulation order is layout-specific there,
+      so the cross-plane comparison is decoded-token *counts* only);
+    - the paged engine really is paged (``ring_fallbacks == 0`` in the
+      result — the smoke gate for recurrent stacks);
     - the paged plane's prefix-hit copy bytes are exactly **zero** (no
       donor-seed cache-tree copy, no published snapshot) while the ring
       plane pays ``seed_copy_bytes > 0`` per hit (the PR 5 comparator);
@@ -250,7 +258,7 @@ def paged_kernel(arch="deepseek-7b", n_shares=4, head_tokens=48,
     prompts = [head + list(rng.integers(2, cfg.vocab_size, ask_tokens))
                for _ in range(n_shares)]
 
-    def run_one(paged: bool):
+    def run_one(paged: bool, prefix_caching: bool = True):
         mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40),
                             "hbm": (HBM3E, 1 << 37)})
         eng = ServeEngine(cfg, params, mem,
@@ -259,6 +267,7 @@ def paged_kernel(arch="deepseek-7b", n_shares=4, head_tokens=48,
                                        eos_token=-1, chunk_tokens=16,
                                        page_tokens=16, tail_copy=False,
                                        paged_kernel=paged,
+                                       prefix_caching=prefix_caching,
                                        radix_hot_threshold=2),
                           account_cfg=full)
         for p in prompts:   # sequential: every later prompt can hit
@@ -268,10 +277,18 @@ def paged_kernel(arch="deepseek-7b", n_shares=4, head_tokens=48,
 
     eng_p, on = run_one(True)
     eng_r, off = run_one(False)
+    eng_c, _cold = run_one(True, prefix_caching=False)
     outs_p = {k: list(v) for k, v in eng_p.outputs.items()}
     outs_r = {k: list(v) for k, v in eng_r.outputs.items()}
-    assert outs_p == outs_r, "paged plane changed decoded tokens"
-    assert on["prefix"]["paged_kernel"] and not off["prefix"]["paged_kernel"]
+    outs_c = {k: list(v) for k, v in eng_c.outputs.items()}
+    assert outs_p == outs_c, "paged prefix hit changed decoded tokens"
+    specs = cfg.layer_specs() if callable(cfg.layer_specs) \
+        else cfg.layer_specs
+    if not any(s.window for s in specs):
+        assert outs_p == outs_r, "paged plane changed decoded tokens"
+    assert on["tokens_generated"] == off["tokens_generated"]
+    assert eng_p.paged and eng_p.backend.paged, \
+        f"{arch}: paged_kernel=on must not fall back to the ring path"
     assert on["prefix"]["compute_hits"] >= n_shares - 1
     # the zero-copy-hit invariant (and the PR 5 comparator on the ring)
     assert on["seed_copy_bytes"] == 0.0, on["seed_copy_bytes"]
@@ -286,8 +303,10 @@ def paged_kernel(arch="deepseek-7b", n_shares=4, head_tokens=48,
     per_tier_reads = {t: d.stats.read_bytes
                       for t, d in eng_p.mem.devices.items()}
     return {
+        "arch": arch,
         "requests": len(prompts),
-        "paged_kernel": True,
+        "ring_fallbacks": 0,
+        "state_bytes_page": eng_p.kv.state_bytes_page,
         "compute_hits": on["prefix"]["compute_hits"],
         "seed_copy_bytes": on["seed_copy_bytes"],
         "seed_copy_bytes_ring": off["seed_copy_bytes"],
@@ -505,7 +524,11 @@ def _persist_paged_trajectory(entry: dict) -> None:
     """Append the paged_kernel sweep result to BENCH_paged.json at the
     repo root — the benchmark trajectory file CI and later sessions diff
     against (acceptance: seed_copy_bytes stays 0 while the ring
-    comparator stays > 0)."""
+    comparator stays > 0). The sweep is deterministic, so re-runs of the
+    same code produce identical metrics: an entry whose metric fields
+    match the last persisted entry (for the same arch) is dropped instead
+    of appended — ``at`` is tiebreak metadata, not a metric, and without
+    the dedupe every CI run grew the file by one duplicate row."""
     import json
     import os
     path = os.path.join(os.path.dirname(os.path.dirname(
@@ -517,8 +540,15 @@ def _persist_paged_trajectory(entry: dict) -> None:
                 data = json.load(f)
         except (OSError, ValueError):
             data = {"entries": []}
-    data.setdefault("entries", []).append(
-        {"at": time.time(), **entry})
+    entries = data.setdefault("entries", [])
+    arch = entry.get("arch")
+    last = next((e for e in reversed(entries)
+                 if e.get("arch") == arch), None)
+    new = json.loads(json.dumps(entry, default=float))
+    if last is not None and {k: v for k, v in last.items()
+                             if k != "at"} == new:
+        return
+    entries.append({"at": time.time(), **new})
     with open(path, "w") as f:
         json.dump(data, f, indent=1, default=float)
         f.write("\n")
@@ -562,25 +592,32 @@ def run(csv=True):
             if reuse["kv_write_cut"] is not None:
                 print(f"serving_sim/{tag}_kv_write_cut,{dt:.1f},{reuse['kv_write_cut']:.4f}")
             print(f"serving_sim/{tag}_ttft_p50_s,{dt:.1f},{reuse['ttft_p50_s']:.6f}")
-    # paged compute plane (DESIGN.md §10): zero-copy hits, bit-identical
-    # tokens, and the KV-tier read stream == the kernel's page gathers;
-    # the trajectory also persists to BENCH_paged.json at the repo root
-    t0 = time.perf_counter()
-    paged = paged_kernel()
-    dt = (time.perf_counter() - t0) * 1e6
-    out["paged_kernel"] = paged
-    _persist_paged_trajectory(paged)
-    if csv:
-        print(f"serving_sim/paged_seed_copy_bytes,{dt:.1f},"
-              f"{paged['seed_copy_bytes']:.0f}")
-        print(f"serving_sim/paged_seed_copy_bytes_ring,{dt:.1f},"
-              f"{paged['seed_copy_bytes_ring']:.0f}")
-        print(f"serving_sim/paged_kernel_read_gb,{dt:.1f},"
-              f"{paged['kernel_read_bytes'] / 1e9:.4f}")
-        print(f"serving_sim/paged_compute_hits,{dt:.1f},"
-              f"{paged['compute_hits']}")
-        print(f"serving_sim/paged_ttft_p50_s,{dt:.1f},"
-              f"{paged['ttft_p50_s']:.6f}")
+    # paged compute plane (DESIGN.md §10), now universal (ISSUE 7):
+    # zero-copy hits, bit-identical tokens, the KV-tier read stream ==
+    # the kernel's page gathers, and zero ring fallbacks for the
+    # recurrent families; trajectory persists to BENCH_paged.json
+    for key, paged_arch in (("paged_kernel", "deepseek-7b"),
+                            ("paged_kernel_ssm", "mamba2-2.7b"),
+                            ("paged_kernel_hybrid", "hymba-1.5b")):
+        t0 = time.perf_counter()
+        paged = paged_kernel(paged_arch)
+        dt = (time.perf_counter() - t0) * 1e6
+        out[key] = paged
+        _persist_paged_trajectory(paged)
+        if csv:
+            tag = key.replace("paged_kernel", "paged")
+            print(f"serving_sim/{tag}_seed_copy_bytes,{dt:.1f},"
+                  f"{paged['seed_copy_bytes']:.0f}")
+            print(f"serving_sim/{tag}_seed_copy_bytes_ring,{dt:.1f},"
+                  f"{paged['seed_copy_bytes_ring']:.0f}")
+            print(f"serving_sim/{tag}_kernel_read_gb,{dt:.1f},"
+                  f"{paged['kernel_read_bytes'] / 1e9:.4f}")
+            print(f"serving_sim/{tag}_ring_fallbacks,{dt:.1f},"
+                  f"{paged['ring_fallbacks']}")
+            print(f"serving_sim/{tag}_compute_hits,{dt:.1f},"
+                  f"{paged['compute_hits']}")
+            print(f"serving_sim/{tag}_ttft_p50_s,{dt:.1f},"
+                  f"{paged['ttft_p50_s']:.6f}")
     # sub-page tails: boundary-straddling prefixes must beat the
     # page-aligned cut strictly (DESIGN.md §9)
     t0 = time.perf_counter()

@@ -29,17 +29,25 @@ for key in ("prefix_reuse", "prefix_reuse_ssm", "prefix_reuse_hybrid"):
     assert reuse["prefill_cut"] >= 0.30, (key, reuse)
     if reuse["kv_write_cut"] is not None:
         assert reuse["kv_write_cut"] >= 0.30, (key, reuse)
-# paged compute plane (DESIGN.md §10): a prefix hit must cost ZERO copy
-# bytes (no donor-seed cache copy, no snapshot) at bit-identical decoded
-# tokens, while the ring comparator still pays seed copies per hit, and
-# the KV tier's metered reads must equal the kernel's page-gather bytes
+# paged compute plane (DESIGN.md §10), universal: for EVERY family — KV
+# pages (attention), latent pages (MLA covered by tests) and point-state
+# pages (SSM/hybrid) — a prefix hit must cost ZERO copy bytes at
+# bit-identical decoded tokens vs a cold paged start, with ZERO ring
+# fallbacks, while the ring comparator still pays seed copies per hit,
+# and the KV tier's metered reads must equal the kernel's gather bytes
+for key in ("paged_kernel", "paged_kernel_ssm", "paged_kernel_hybrid"):
+    pk = rep["suites"]["serving"][key]
+    assert pk["ring_fallbacks"] == 0, (key, pk)
+    assert pk["seed_copy_bytes"] == 0, (key, pk)
+    assert pk["snapshot_bytes"] == 0, (key, pk)
+    assert pk["seed_copy_bytes_ring"] > 0, (key, pk)
+    assert pk["compute_hits"] > 0, (key, pk)
+    assert pk["kernel_read_bytes"] > 0, (key, pk)
+    assert abs(pk["kv_tier_read_bytes"] - pk["kernel_read_bytes"]) < 1e-6, \
+        (key, pk)
+    if key != "paged_kernel":   # recurrent stacks meter state pages too
+        assert pk["state_bytes_page"] > 0, (key, pk)
 pk = rep["suites"]["serving"]["paged_kernel"]
-assert pk["seed_copy_bytes"] == 0, pk
-assert pk["snapshot_bytes"] == 0, pk
-assert pk["seed_copy_bytes_ring"] > 0, pk
-assert pk["compute_hits"] > 0, pk
-assert pk["kernel_read_bytes"] > 0, pk
-assert abs(pk["kv_tier_read_bytes"] - pk["kernel_read_bytes"]) < 1e-6, pk
 # sub-page tails (DESIGN.md §9): boundary-straddling prefixes must cut
 # strictly more prefill tokens than the page-aligned matcher, with the
 # tail copies actually metered — a tail-reuse regression fails the build
@@ -79,4 +87,26 @@ print("fleet reuse:", {k: round(fr[k], 4) for k in
 print("fleet reuse (ssm):",
       {k: round(rep["suites"]["serving"]["fleet_reuse_ssm"][k], 4) for k in
        ("prefill_cut", "cross_replica_hit_rate", "migration_bytes")})
+EOF
+
+echo "== kernel bench (grouped grid vs ungrouped baseline) =="
+python -m benchmarks.run kernel_bench --json /tmp/smoke_kernels.json
+python - <<'EOF'
+import json
+rep = json.load(open("/tmp/smoke_kernels.json"))
+assert not rep["failures"], rep["failures"]
+# the grouped, null-skipping grid must read strictly fewer page bytes
+# than the ungrouped (PR 6) gather on sparse page tables — at bit-equal
+# outputs (asserted inside the bench) — for every geometry; the same
+# entry lands in BENCH_kernels.json as the persisted trajectory
+entry = rep["suites"]["kernel_bench"]
+for case in entry["cases"]:
+    g, u = (case["kernel_read_bytes_grouped"],
+            case["kernel_read_bytes_ungrouped"])
+    assert 0 < g < u, case
+traj = json.load(open("BENCH_kernels.json"))
+assert traj["entries"], "kernel-bench trajectory must persist"
+print("kernel bench:", [
+    {"ps": c["page_size"], "read_cut": round(c["read_bytes_cut"], 4)}
+    for c in entry["cases"]])
 EOF

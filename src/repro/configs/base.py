@@ -288,6 +288,28 @@ class ModelConfig:
                 total += (self.kv_lora_rank + self.qk_rope_dim) * bytes_per_el
         return total
 
+    def ssm_state_bytes_layer(self, bytes_per_el: int = 2) -> int:
+        """Bytes of one layer's recurrent-state page (paged compute plane,
+        DESIGN.md §10): the depthwise-conv left context at model precision
+        plus the SSD state, which is carried in fp32 regardless of the
+        model dtype."""
+        if not self.ssm_state:
+            return 0
+        conv_dim = self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
+        conv = (self.ssm_conv - 1) * conv_dim * bytes_per_el
+        state = self.ssm_nheads * self.ssm_headdim * self.ssm_state * 4
+        return conv + state
+
+    def state_bytes_per_page(self, bytes_per_el: int = 2) -> int:
+        """Recurrent-state bytes carried per KV-manager page across the
+        whole stack (zero for pure attention/MLA stacks): point stacks
+        (SSM/hybrid) pin one boundary state snapshot per page so a radix
+        hit is a page-table splice for every mixer family."""
+        per_layer = self.ssm_state_bytes_layer(bytes_per_el)
+        n = sum(1 for spec in self.layer_specs()
+                if spec.kind in ("ssm", "hybrid"))
+        return per_layer * n
+
     def validate(self) -> None:
         assert self.num_layers > 0 and self.d_model > 0
         if self.family not in ("ssm",):

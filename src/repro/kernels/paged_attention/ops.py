@@ -1,13 +1,18 @@
 """Host-side dispatch for ragged paged attention.
 
-``ragged_paged_attention`` pads the flat query block by ``max_q_len``
-rows (so the kernel's fixed-size per-sequence block loads stay in
-bounds), routes to the Pallas kernel or the jnp reference, and slices
-the padding back off. ``backend="auto"`` picks Pallas interpret mode off
-TPU so CI exercises the exact kernel lowering on CPU.
+``ragged_paged_attention`` resolves the launch config (explicit
+``block_q``/``block_kv``/``num_buffers`` overrides win, otherwise the
+autotuner's cached best config for this page geometry), pads the flat
+query block to a whole number of q-tiles (so every tile's fixed-size
+block load stays in bounds), routes to the Pallas kernel or the jnp
+reference, and slices the padding back off. ``backend="auto"`` picks
+Pallas interpret mode off TPU so CI exercises the exact kernel lowering
+on CPU; set ``REPRO_KERNEL_INTERPRET=0/1`` to force either mode without
+touching call sites.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -15,6 +20,27 @@ import jax.numpy as jnp
 
 from .kernel import ragged_paged_attention_pallas
 from .ref import ragged_paged_attention_ref
+from .tune import resolve_config
+
+_INTERPRET: Optional[bool] = None
+
+
+def _default_interpret() -> bool:
+    """Process-wide default for Pallas interpret mode, resolved once:
+    the ``REPRO_KERNEL_INTERPRET`` env var (0/1/true/false) wins,
+    otherwise interpret off TPU. Cached because ``jax.default_backend()``
+    walks the backend registry and this sits on the per-step decode
+    path."""
+    global _INTERPRET
+    if _INTERPRET is None:
+        env = os.environ.get("REPRO_KERNEL_INTERPRET", "").strip().lower()
+        if env in ("1", "true", "yes", "on"):
+            _INTERPRET = True
+        elif env in ("0", "false", "no", "off"):
+            _INTERPRET = False
+        else:
+            _INTERPRET = jax.default_backend() != "tpu"
+    return _INTERPRET
 
 
 def ragged_paged_attention(q, kv_pages, page_table, cu_q_lens, kv_lens, *,
@@ -23,6 +49,10 @@ def ragged_paged_attention(q, kv_pages, page_table, cu_q_lens, kv_lens, *,
                            q_pos=None, kv_pos_pages=None,
                            max_q_len: Optional[int] = None,
                            backend: str = "auto",
+                           block_q: Optional[int] = None,
+                           block_kv: Optional[int] = None,
+                           num_buffers: Optional[int] = None,
+                           skip_blocks: bool = True,
                            interpret: Optional[bool] = None):
     """Attend T concatenated query rows against paged KV storage.
 
@@ -32,7 +62,9 @@ def ragged_paged_attention(q, kv_pages, page_table, cu_q_lens, kv_lens, *,
     static bound on every per-sequence query length (defaults to T,
     which is always safe). ``q_pos``/``kv_pos_pages`` switch on explicit
     position tracking (ring-layout compatibility); both or neither.
-    Returns (T, Hq, D) in q's dtype.
+    ``block_q``/``block_kv``/``num_buffers`` override the autotuned
+    kernel config; ``skip_blocks=False`` forces the ungrouped full-gather
+    baseline (bench/parity use). Returns (T, Hq, D) in q's dtype.
     """
     if (q_pos is None) != (kv_pos_pages is None):
         raise ValueError("q_pos and kv_pos_pages must be given together")
@@ -44,16 +76,23 @@ def ragged_paged_attention(q, kv_pages, page_table, cu_q_lens, kv_lens, *,
     if backend not in ("auto", "pallas"):
         raise ValueError(f"unknown backend: {backend!r}")
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = _default_interpret()
     T = q.shape[0]
+    ps = kv_pages.shape[1]
     max_q = T if max_q_len is None else int(max_q_len)
     max_q = max(1, max_q)
-    q_pad = jnp.pad(q, ((0, max_q), (0, 0), (0, 0)))
+    cfg = resolve_config(ps, q.shape[-1], max_q, page_table.shape[1],
+                         block_q, block_kv, num_buffers)
+    pad = -(-max_q // cfg.block_q) * cfg.block_q
+    q_pad = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
     q_pos_pad = None
     if q_pos is not None:
-        q_pos_pad = jnp.pad(jnp.asarray(q_pos, jnp.int32), (0, max_q))
+        q_pos_pad = jnp.pad(jnp.asarray(q_pos, jnp.int32), (0, pad))
     out = ragged_paged_attention_pallas(
         q_pad, kv_pages, page_table, cu_q_lens, kv_lens, scale=scale,
-        cap=cap, window=window, max_q_len=max_q, q_pos_pad=q_pos_pad,
-        kv_pos_pages=kv_pos_pages, interpret=interpret)
+        cap=cap, window=window, max_q_len=max_q,
+        block_q=cfg.block_q, block_kv=cfg.block_kv,
+        num_buffers=cfg.num_buffers, skip_blocks=skip_blocks,
+        q_pos_pad=q_pos_pad, kv_pos_pages=kv_pos_pages,
+        interpret=interpret)
     return out[:T]

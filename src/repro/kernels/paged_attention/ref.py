@@ -11,9 +11,12 @@ where head ``h``'s key rows sit at index ``2*h`` and its value rows at
 ``2*h + 1`` (one contiguous DMA per page streams both). A sequence is a
 row of a ``page_table`` (int32 page ids): table slot ``j`` covers absolute
 positions ``[j*page_size, (j+1)*page_size)``, so key positions are derived
-from the slot index — no stored-position array. Padding table entries
-(conventionally page id 0, the reserved null page) are masked for free:
-their slot-derived positions exceed every causal query position.
+from the slot index — no stored-position array. Null table entries
+(page id 0, the reserved all-zeros page) are masked wherever they sit:
+trailing padding is masked for free (slot-derived positions exceed every
+causal query position) and interior nulls — sparse tables — are masked
+by page id, matching the grouped kernel grid that skips them without a
+gather.
 
 The attention core scans the table one page at a time with an online
 softmax whose accumulator is *exactly* invariant to trailing padding
@@ -134,6 +137,11 @@ def paged_attention_rows(q, kv_pages, page_table, q_pos, *, scale: float,
         valid = (kpos >= 0) & (kpos <= qpos[:, None])
         if window is not None:
             valid &= kpos > (qpos[:, None] - window)
+        if kv_pos_pages is None:
+            # slot-derived tables reserve page 0 as the null page: a null
+            # slot *inside* the causal range (sparse tables) holds no
+            # keys and must mask, exactly as the grouped kernel skips it
+            valid &= (pid != 0)[:, None]
         vmask = valid[:, None, None, :]                  # (R, 1, 1, ps)
         s = jnp.where(vmask, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))

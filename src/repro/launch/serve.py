@@ -52,6 +52,9 @@ def build_engine(args, cfg, full, params):
                      prefix_caching=not args.no_prefix_caching,
                      tail_copy=args.tail_copy == "on",
                      paged_kernel=args.paged_kernel == "on",
+                     kernel_block_q=args.kernel_block_q,
+                     kernel_block_kv=args.kernel_block_kv,
+                     kernel_buffers=args.kernel_buffers,
                      radix_hot_threshold=args.radix_hot_threshold,
                      radix_hot_tier=args.radix_hot_tier,
                      radix_cold_ttl_s=args.radix_cold_ttl,
@@ -88,10 +91,21 @@ def main(argv=None):
                     help="disable the radix prefix tree (cold baseline; "
                          "the prompt layout is unpadded either way)")
     ap.add_argument("--paged-kernel", choices=("on", "off"), default="on",
-                    help="run attention/MLA extend+decode in place on the "
-                         "paged KV plane (zero-copy prefix hits, kernel-"
-                         "metered tier reads; DESIGN.md §10) — point "
-                         "stacks (SSM/hybrid) fall back to the ring path")
+                    help="run extend+decode in place on the paged compute "
+                         "plane — universal across families: attention/MLA "
+                         "on KV pages, SSM/hybrid on pooled point-state "
+                         "pages (zero-copy prefix hits, kernel-metered "
+                         "tier reads; DESIGN.md §10)")
+    ap.add_argument("--kernel-block-q", type=int, default=None,
+                    help="paged-attention kernel: query rows per tile "
+                         "(None = autotuned best config for the page "
+                         "geometry; kernels/paged_attention/tune.py)")
+    ap.add_argument("--kernel-block-kv", type=int, default=None,
+                    help="paged-attention kernel: page-table slots per "
+                         "kv block (None = autotuned)")
+    ap.add_argument("--kernel-buffers", type=int, default=None,
+                    help="paged-attention kernel: DMA pipeline depth "
+                         "2-4 (None = autotuned)")
     ap.add_argument("--tail-copy", choices=("on", "off"), default="on",
                     help="sub-page tail reuse: copy the shared mid-page "
                          "tail into the borrower's page and resume prefill "

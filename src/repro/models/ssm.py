@@ -169,6 +169,45 @@ def ssm_cache_init(cfg: ModelConfig, batch: int, dtype, abstract=False) -> dict:
     return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
 
 
+def ssm_paged_init(cfg: ModelConfig, n_pages: int, dtype) -> dict:
+    """Pooled *state pages* for the paged compute plane (DESIGN.md §10):
+    slot j of a session's page table maps to the page holding the conv
+    left-context and SSD recurrent state *after the last written token of
+    page j* (a sealed page holds the exact page-boundary state; the open
+    page holds the running state). Page 0 is the reserved null page — all
+    zeros, never written — so an empty table entry reads as the
+    empty-history init state, exactly like a fresh ring cache."""
+    di, ng, ns = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    nh, hd, cw = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_conv
+    conv_dim = di + 2 * ng * ns
+    return {
+        "conv_pages": jnp.zeros((n_pages, cw - 1, conv_dim), dtype),
+        "state_pages": jnp.zeros((n_pages, nh, hd, ns), jnp.float32),
+    }
+
+
+def _paged_state_slots(page_table, q0, page_tokens: int):
+    """Resolve the state-page slots for a chunk/step whose first query sits
+    at absolute position ``q0`` ((B,) or scalar). Reads the state after
+    token ``q0 - 1``: slot ``j0 - 1`` when q0 opens page ``j0 = q0 // pt``
+    (the previous page's sealed boundary state), else slot ``j0`` (the open
+    page's running state); an empty history maps to null page 0, whose
+    zeros ARE the zero init state. Writes always land in slot ``j0`` —
+    ``ok`` masks rows whose table entry is null (inactive decode rows carry
+    all-null tables; writing page 0 would corrupt the null page)."""
+    B, W = page_table.shape
+    q0 = jnp.broadcast_to(jnp.asarray(q0, jnp.int32), (B,))
+    j0 = q0 // page_tokens
+    rs = jnp.where(q0 % page_tokens == 0, j0 - 1, j0)
+    rd = jnp.take_along_axis(page_table, jnp.clip(rs, 0, W - 1)[:, None],
+                             axis=1)[:, 0]
+    pid_read = jnp.where(rs >= 0, rd, 0)
+    pid_write = jnp.take_along_axis(page_table, jnp.clip(j0, 0, W - 1)[:, None],
+                                    axis=1)[:, 0]
+    ok = (j0 < W) & (pid_write != 0)
+    return pid_read, pid_write, ok
+
+
 def ssm_sublayer(
     cfg: ModelConfig,
     p: dict,
@@ -178,6 +217,10 @@ def ssm_sublayer(
     cache: Optional[dict] = None,
     mode: str = "train",
     decode_active=None,
+    positions=None,
+    cur_pos=None,
+    page_table=None,
+    page_tokens: Optional[int] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """x: (B, S, d_model) -> (out, updated cache or None).
 
@@ -191,19 +234,37 @@ def ssm_sublayer(
     masking caveat the single-path refactor deleted.
     ``decode_active`` ((B,) bool, decode only): rows where False keep
     their cache untouched — a batched decode round must not clobber the
-    recurrent state of a slot whose prompt is still streaming in."""
+    recurrent state of a slot whose prompt is still streaming in.
+
+    Paged mode (cache holds ``state_pages``, DESIGN.md §10): the conv
+    left-context and SSD state live in pooled pages indexed through
+    ``page_table``; the read slot is resolved from the first query
+    position (``positions[0]`` for prefill/extend — the engine chunks
+    point stacks so every chunk lies within exactly one page — and
+    ``cur_pos`` per row for decode), and the updated state is scattered
+    back to the page owning that position. Null page 0's zeros are the
+    empty-history init, so a cold start and a chunk resumed at a page
+    boundary run the identical recurrence."""
     from repro.models.layers import rmsnorm  # avoid cycle
 
     B, S, d = x.shape
     di, nh, hd = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
     ng, ns = cfg.ssm_ngroups, cfg.ssm_state
+    paged = cache is not None and "state_pages" in cache
+    if paged:
+        q0 = cur_pos if mode == "decode" else positions[0]
+        pid_read, pid_write, ok = _paged_state_slots(page_table, q0,
+                                                     page_tokens)
     zxbcdt = x @ p["in_proj"]
     z, xi, b, c, dt = _split_proj(cfg, zxbcdt)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     a = -jnp.exp(p["a_log"])
 
     xbc = jnp.concatenate([xi, b, c], axis=-1)
-    conv_state = cache["conv"] if cache is not None else None
+    if paged:
+        conv_state = jnp.take(cache["conv_pages"], pid_read, axis=0)
+    else:
+        conv_state = cache["conv"] if cache is not None else None
     xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
     xi, b, c = xbc[..., :di], xbc[..., di:di + ng * ns], xbc[..., di + ng * ns:]
     xh = xi.reshape(B, S, nh, hd)
@@ -215,17 +276,26 @@ def ssm_sublayer(
     new_cache = None
     if mode == "decode":
         assert cache is not None
-        y1, new_state = ssd_decode(xh[:, 0], dt[:, 0], a, bg[:, 0], cg[:, 0], cache["state"])
+        state = (jnp.take(cache["state_pages"], pid_read, axis=0) if paged
+                 else cache["state"])
+        y1, new_state = ssd_decode(xh[:, 0], dt[:, 0], a, bg[:, 0], cg[:, 0], state)
         y = y1[:, None]
         if decode_active is not None:
             act = jnp.asarray(decode_active, bool)
-            new_state = jnp.where(act[:, None, None, None], new_state, cache["state"])
-            new_conv = jnp.where(act[:, None, None], new_conv, cache["conv"])
+            if paged:
+                ok = ok & act
+            else:
+                new_state = jnp.where(act[:, None, None, None], new_state, cache["state"])
+                new_conv = jnp.where(act[:, None, None], new_conv, cache["conv"])
     else:
         # prefill starts from the zero-initialized cache state; extend
         # continues the recurrence from the carried state (same code path —
-        # a fresh cache IS the zero state)
-        init = cache["state"] if cache is not None else None
+        # a fresh cache IS the zero state, and null page 0 IS the zero state
+        # in paged mode)
+        if paged:
+            init = jnp.take(cache["state_pages"], pid_read, axis=0)
+        else:
+            init = cache["state"] if cache is not None else None
         y, final_state = ssd_chunked(xh, dt, a, bg, cg, cfg.ssm_chunk,
                                      init_state=init)
         new_state = final_state
@@ -234,5 +304,16 @@ def ssm_sublayer(
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm_g"], cfg.norm_eps)
     out = y @ p["out_proj"]
     if cache is not None:
-        new_cache = {"conv": new_conv, "state": new_state}
+        if paged:
+            # out-of-range / null rows drop (page 0 is never written)
+            P = cache["state_pages"].shape[0]
+            pw = jnp.where(ok, pid_write, P)
+            new_cache = {
+                "conv_pages": cache["conv_pages"].at[pw].set(
+                    new_conv.astype(cache["conv_pages"].dtype), mode="drop"),
+                "state_pages": cache["state_pages"].at[pw].set(
+                    new_state, mode="drop"),
+            }
+        else:
+            new_cache = {"conv": new_conv, "state": new_state}
     return out, new_cache

@@ -33,7 +33,8 @@ from repro.models.layers import embed, embed_defs, lm_logits, mlp, mlp_defs, rms
 from repro.models.mla import mla_cache_init, mla_defs, mla_sublayer
 from repro.models.moe import moe_defs, moe_sublayer
 from repro.models.param import ParamDef
-from repro.models.ssm import ssm_cache_init, ssm_defs, ssm_sublayer
+from repro.models.ssm import (ssm_cache_init, ssm_defs, ssm_paged_init,
+                              ssm_sublayer)
 
 # ---------------------------------------------------------------------------
 # Parameter definitions
@@ -91,13 +92,14 @@ def abstract_params(cfg: ModelConfig, shardings=None):
 
 def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x, *, positions,
                 sh=None, cache=None, mode="train", cur_pos=None,
-                decode_active=None, page_table=None):
-    """Pre-norm residual block. Returns (x, new_cache, aux)."""
+                decode_active=None, page_table=None, page_tokens=None):
+    """Pre-norm residual block. Returns (x, new_cache, aux). With
+    ``page_table`` every mixer family computes in place on pooled pages
+    (DESIGN.md §10): KV pages for attention/MLA, conv+SSD state pages for
+    SSM, both for the hybrid union (``page_tokens`` is the static page
+    size the point stacks need to resolve state-page slots)."""
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
-    if page_table is not None and spec.kind not in ("attn", "mla"):
-        raise ValueError(
-            f"paged compute plane requires positional caches, got {spec.kind}")
     if spec.kind == "attn":
         h, new_cache = attention_sublayer(cfg, p["mixer"], h, positions=positions,
                                           window=spec.window, sh=sh, cache=cache,
@@ -111,12 +113,17 @@ def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x, *, positions,
                                     page_table=page_table)
     elif spec.kind == "ssm":
         h, new_cache = ssm_sublayer(cfg, p["mixer"], h, sh=sh, cache=cache,
-                                    mode=mode, decode_active=decode_active)
+                                    mode=mode, decode_active=decode_active,
+                                    positions=positions, cur_pos=cur_pos,
+                                    page_table=page_table,
+                                    page_tokens=page_tokens)
     elif spec.kind == "hybrid":
         h, new_cache = hybrid_sublayer(cfg, p["mixer"], h, positions=positions,
                                        window=spec.window, sh=sh, cache=cache,
                                        mode=mode, cur_pos=cur_pos,
-                                       decode_active=decode_active)
+                                       decode_active=decode_active,
+                                       page_table=page_table,
+                                       page_tokens=page_tokens)
     else:
         raise ValueError(spec.kind)
     if cfg.post_norms:
@@ -183,16 +190,25 @@ def _paged_unit_cache(cfg: ModelConfig, spec: LayerSpec, n_pages: int,
                       page_tokens: int, dtype):
     """One unit's paged-plane pool (DESIGN.md §10). Page id 0 is the
     reserved null page. Attention pages hold fused head-interleaved KV;
-    MLA pages hold one fused latent head: K' = [c, kr], V' = [c, 0]."""
+    MLA pages hold one fused latent head: K' = [c, kr], V' = [c, 0];
+    SSM pages hold the conv left-context + SSD recurrent state after the
+    last written token of the page (point-state pages); hybrid pages are
+    the union of the attention and SSM pools under one table."""
     if spec.kind == "attn":
         shape = (n_pages, page_tokens, 2 * cfg.n_kv_heads,
                  cfg.resolved_head_dim)
-    elif spec.kind == "mla":
+        return {"kv_pages": jnp.zeros(shape, dtype)}
+    if spec.kind == "mla":
         shape = (n_pages, page_tokens, 2, cfg.kv_lora_rank + cfg.qk_rope_dim)
-    else:
-        raise ValueError(
-            f"paged compute plane requires positional caches, got {spec.kind}")
-    return {"kv_pages": jnp.zeros(shape, dtype)}
+        return {"kv_pages": jnp.zeros(shape, dtype)}
+    if spec.kind == "ssm":
+        return ssm_paged_init(cfg, n_pages, dtype)
+    if spec.kind == "hybrid":
+        shape = (n_pages, page_tokens, 2 * cfg.n_kv_heads,
+                 cfg.resolved_head_dim)
+        return {"attn": {"kv_pages": jnp.zeros(shape, dtype)},
+                "ssm": ssm_paged_init(cfg, n_pages, dtype)}
+    raise ValueError(spec.kind)
 
 
 def init_paged_caches(cfg: ModelConfig, n_pages: int, page_tokens: int,
@@ -237,7 +253,7 @@ def _embed_inputs(cfg: ModelConfig, params, batch: dict, sh=None):
 
 def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
                  caches=None, mode="train", cur_pos=None, decode_active=None,
-                 page_table=None):
+                 page_table=None, page_tokens=None):
     """Run every scan group. Returns (x, new_caches, aux_total)."""
     groups = cfg.scan_groups()
     aux_total = jnp.zeros((), jnp.float32)
@@ -257,7 +273,8 @@ def apply_groups(cfg: ModelConfig, params, x, *, positions, sh=None,
                 xx, c_new, aux_u = apply_block(
                     cfg, spec, params_t[u], xx, positions=positions, sh=sh,
                     cache=caches_t[u], mode=mode, cur_pos=cur_pos,
-                    decode_active=decode_active, page_table=page_table)
+                    decode_active=decode_active, page_table=page_table,
+                    page_tokens=page_tokens)
                 outs.append(c_new)
                 aux = aux + aux_u
             return (xx, aux), (tuple(outs) if caches is not None else None)
@@ -424,7 +441,7 @@ def extend(cfg: ModelConfig, params, caches, tokens, offset, sh=None):
 
 
 def paged_prefill(cfg: ModelConfig, params, batch: dict, caches, page_table,
-                  sh=None):
+                  sh=None, page_tokens=None):
     """First chunk on the paged plane: embeds the meta/frontend prefix +
     prompt at absolute positions 0..S-1 and writes KV straight into the
     pool pages named by ``page_table`` (B, W). Unlike ring ``prefill``
@@ -436,18 +453,21 @@ def paged_prefill(cfg: ModelConfig, params, batch: dict, caches, page_table,
     positions = jnp.arange(S_tot, dtype=jnp.int32)
     x, new_caches, _ = apply_groups(cfg, params, x, positions=positions,
                                     sh=sh, caches=caches, mode="extend",
-                                    page_table=page_table)
+                                    page_table=page_table,
+                                    page_tokens=page_tokens)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(cfg, params["embed"], x[:, -1])
     return logits, new_caches
 
 
 def paged_extend(cfg: ModelConfig, params, caches, tokens, offset, page_table,
-                 sh=None):
+                 sh=None, page_tokens=None):
     """Later chunks on the paged plane: ``tokens`` (B, S[, K]) at absolute
     positions ``offset + [0, S)``; earlier context is whatever the pages
     in ``page_table`` hold — including pages spliced in from a radix or
-    migrated prefix hit at zero copy cost."""
+    migrated prefix hit at zero copy cost. Point stacks read their state
+    page for the slot preceding ``offset`` (the engine chunks them so a
+    chunk never crosses a page boundary)."""
     x = embed(cfg, params["embed"], tokens)
     if sh is not None:
         x = sh.c(x, ("act_batch", "act_seq_res", "act_embed"))
@@ -455,14 +475,15 @@ def paged_extend(cfg: ModelConfig, params, caches, tokens, offset, page_table,
     positions = jnp.asarray(offset, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
     x, new_caches, _ = apply_groups(cfg, params, x, positions=positions,
                                     sh=sh, caches=caches, mode="extend",
-                                    page_table=page_table)
+                                    page_table=page_table,
+                                    page_tokens=page_tokens)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(cfg, params["embed"], x[:, -1])
     return logits, new_caches
 
 
 def paged_decode(cfg: ModelConfig, params, caches, last_tokens, cur_pos,
-                 page_table, sh=None, active=None):
+                 page_table, sh=None, active=None, page_tokens=None):
     """One batched decode step on the paged plane. cur_pos: (B,) absolute
     positions; rows where ``active`` is False neither write their pages
     nor advance (their page-table row may be all null pages)."""
@@ -474,7 +495,8 @@ def paged_decode(cfg: ModelConfig, params, caches, last_tokens, cur_pos,
     x, new_caches, _ = apply_groups(cfg, params, x, positions=positions,
                                     sh=sh, caches=caches, mode="decode",
                                     cur_pos=cp, decode_active=active,
-                                    page_table=page_table)
+                                    page_table=page_table,
+                                    page_tokens=page_tokens)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(cfg, params["embed"], x[:, 0])
     return logits, new_caches

@@ -111,13 +111,20 @@ class EngineConfig:
     # regression guard (the PR 4 clobbering class): verify after every
     # decode round that no cache family of an inactive slot was written
     audit_decode_masking: bool = False
-    # paged compute plane (DESIGN.md §10): run attention/MLA extend and
-    # decode directly on the pages PagedKVManager owns — a radix or
-    # migrated prefix hit is a page-table splice (zero copy bytes) and
-    # tier reads meter the kernel's actual per-page gather stream.
-    # Positional stacks only; point stacks (SSM/hybrid) fall back to the
-    # ring path (the report records the effective mode).
+    # paged compute plane (DESIGN.md §10): run extend and decode directly
+    # on the pages PagedKVManager owns — a radix or migrated prefix hit
+    # is a page-table splice (zero copy bytes) and tier reads meter the
+    # kernel's actual per-page gather stream. Universal across mixer
+    # families: attention/MLA compute on KV pages, SSM/hybrid on pooled
+    # point-state pages (conv + SSD state at page-boundary capture
+    # points) drawn from the same free-list.
     paged_kernel: bool = False
+    # paged-attention kernel block shape / DMA pipeline depth overrides
+    # (None = the autotuner's cached best config for this geometry;
+    # kernels/paged_attention/tune.py)
+    kernel_block_q: Optional[int] = None
+    kernel_block_kv: Optional[int] = None
+    kernel_buffers: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
@@ -374,27 +381,29 @@ class ComputeBackend:
     def _paged_first_fn(self, length: int, W: int):
         key = (length, W)
         if key not in self._paged_first_jit:
-            cfg = self.cfg
+            cfg, pt = self.cfg, self.page_tokens
             self._paged_first_jit[key] = jax.jit(
                 lambda p, c, batch, tbl: tfm.paged_prefill(cfg, p, batch,
-                                                           c, tbl))
+                                                           c, tbl,
+                                                           page_tokens=pt))
         return self._paged_first_jit[key]
 
     def _paged_extend_fn(self, length: int, W: int):
         key = (length, W)
         if key not in self._paged_extend_jit:
-            cfg = self.cfg
+            cfg, pt = self.cfg, self.page_tokens
             self._paged_extend_jit[key] = jax.jit(
                 lambda p, c, t, off, tbl: tfm.paged_extend(cfg, p, c, t,
-                                                           off, tbl))
+                                                           off, tbl,
+                                                           page_tokens=pt))
         return self._paged_extend_jit[key]
 
     def _paged_decode_fn(self, W: int):
         if W not in self._paged_decode_jit:
-            cfg = self.cfg
+            cfg, pt = self.cfg, self.page_tokens
             self._paged_decode_jit[W] = jax.jit(
                 lambda p, c, t, pos, tbl, act: tfm.paged_decode(
-                    cfg, p, c, t, pos, tbl, active=act))
+                    cfg, p, c, t, pos, tbl, active=act, page_tokens=pt))
         return self._paged_decode_jit[W]
 
     # -- slot cache plumbing -------------------------------------------
@@ -588,7 +597,7 @@ class MemoryPlane:
     (``acct_cfg``) is decoupled from the compute scale."""
 
     def __init__(self, acct_cfg: ModelConfig, mem: MemorySystem,
-                 ecfg: EngineConfig):
+                 ecfg: EngineConfig, paged: bool = False):
         self.cfg = acct_cfg
         self.mem = mem
         self.ecfg = ecfg
@@ -599,6 +608,10 @@ class MemoryPlane:
             raise ValueError(f"radix_hot_tier {hot_tier!r} is not a tier "
                              f"({sorted(mem.devices)})")
         self.hot_tier = hot_tier
+        # point-state pages ride on KV pages only on the paged plane; the
+        # ring path meters recurrent state through the engine's
+        # SnapshotHandle regions instead (charging both would double-count)
+        state_bp = float(acct_cfg.state_bytes_per_page()) if paged else 0.0
         self.kv = PagedKVManager(acct_cfg, mem, ecfg.kv_tier,
                                  ecfg.page_tokens, ecfg.expected_session_s,
                                  spill_tier=ecfg.kv_spill_tier,
@@ -609,7 +622,8 @@ class MemoryPlane:
                                  hot_tier=hot_tier,
                                  cold_ttl_s=ecfg.radix_cold_ttl_s,
                                  tail_copy=ecfg.tail_copy,
-                                 demote_on_pressure=ecfg.demote_on_pressure)
+                                 demote_on_pressure=ecfg.demote_on_pressure,
+                                 state_bytes_page=state_bp)
         counts = acct_cfg.param_counts()
         self.weight_bytes = counts["total"] * 2  # bf16
         self.active_weight_bytes = counts["active"] * 2
@@ -686,17 +700,32 @@ class ServeEngine:
         # how this stack's prefix snapshots may be reused (DESIGN.md §8):
         # "positional" (attention/MLA) or "point" (SSM/hybrid)
         self.snapshot_kind = tfm.snapshot_kind(cfg)
-        # paged compute plane (DESIGN.md §10): positional stacks only —
-        # point stacks (SSM/hybrid) carry recurrent state no page table can
-        # splice, so they silently fall back to the ring path (the report's
-        # prefix["paged_kernel"] records the effective mode)
-        self.paged = (bool(ecfg.paged_kernel)
-                      and self.snapshot_kind == "positional"
-                      and tfm.supports_extend(cfg))
+        # paged compute plane (DESIGN.md §10), universal across mixer
+        # families: positional stacks compute on KV pages, point stacks
+        # (SSM/hybrid) on pooled state pages capturing the recurrent state
+        # at every page boundary — so a radix or migrated hit is a
+        # page-table splice for all four families
+        self.paged = bool(ecfg.paged_kernel) and tfm.supports_extend(cfg)
+        if (ecfg.kernel_block_q or ecfg.kernel_block_kv
+                or ecfg.kernel_buffers):
+            # pin the Pallas launch config for this page geometry: the
+            # explicit overrides land in the autotuner's config cache,
+            # which every ragged_paged_attention launch consults
+            from repro.kernels.paged_attention.tune import (KernelConfig,
+                                                            best_config,
+                                                            set_config)
+            base = best_config(ecfg.page_tokens, cfg.resolved_head_dim)
+            set_config(ecfg.page_tokens, cfg.resolved_head_dim,
+                       KernelConfig(
+                           block_q=ecfg.kernel_block_q or base.block_q,
+                           block_kv=ecfg.kernel_block_kv or base.block_kv,
+                           num_buffers=(ecfg.kernel_buffers
+                                        or base.num_buffers)))
         self.sched = ContinuousBatchScheduler(ecfg.max_slots,
                                               ecfg.max_prefills_per_step)
         self.backend = ComputeBackend(cfg, params, ecfg, paged=self.paged)
-        self.memplane = MemoryPlane(self.acct_cfg, mem, ecfg)
+        self.memplane = MemoryPlane(self.acct_cfg, mem, ecfg,
+                                    paged=self.paged)
         self.kernel_read_bytes = 0.0   # paged: metered kernel page gathers
         if self.paged:
             # every memory-plane page owns one compute page for its life —
@@ -704,19 +733,26 @@ class ServeEngine:
             # zero copy bytes
             self.memplane.kv.on_page_alloc = self._on_page_alloc
             self.memplane.kv.on_page_release = self._on_page_release
-            # per-layer (bytes_per_token, window) at the accounting scale:
-            # the analytic model of the kernel's per-page read stream
+            # per-layer (kv_bytes_per_token, window, state_bytes) at the
+            # accounting scale: the analytic model of the kernel's per-page
+            # read stream — positional layers gather token rows, point
+            # layers additionally pull one state-page snapshot per step
             self._acct_layers = []
+            state_lb = float(self.acct_cfg.ssm_state_bytes_layer())
             for spec in self.acct_cfg.layer_specs():
                 if spec.kind == "mla":
-                    lb = (self.acct_cfg.kv_lora_rank
-                          + self.acct_cfg.qk_rope_dim) * 2
-                elif spec.kind in ("attn", "hybrid"):
+                    lb, sb = (self.acct_cfg.kv_lora_rank
+                              + self.acct_cfg.qk_rope_dim) * 2, 0.0
+                elif spec.kind == "attn":
+                    lb, sb = (2 * self.acct_cfg.n_kv_heads
+                              * self.acct_cfg.resolved_head_dim * 2), 0.0
+                elif spec.kind == "hybrid":
                     lb = (2 * self.acct_cfg.n_kv_heads
                           * self.acct_cfg.resolved_head_dim * 2)
-                else:
-                    continue
-                self._acct_layers.append((float(lb), spec.window))
+                    sb = state_lb
+                else:                      # ssm: no KV token stream
+                    lb, sb = 0.0, state_lb
+                self._acct_layers.append((float(lb), spec.window, sb))
         self.outputs: Dict[int, list] = {}
         self._inflight: Dict[int, _SlotPrefill] = {}  # slot -> chunk state
         self._prep_cache: Dict[int, tuple] = {}  # rid -> (tokens, chunk, key)
@@ -894,10 +930,18 @@ class ServeEngine:
         if self.paged:
             # paged plane: the matched pages ARE the compute state — no
             # donor snapshot exists or is needed. The hit is a page-table
-            # splice; only a sub-page tail copies (page rows, DESIGN.md §9)
-            tail = self.kv.tail_available(match) if self.ecfg.tail_copy else 0
+            # splice; only a sub-page tail copies (page rows, DESIGN.md §9).
+            # Point stacks have no mid-page state snapshot, so tails stay
+            # off and resumption is clamped DOWN to the last page boundary
+            # (the state page there holds the exact boundary state)
+            tail = (self.kv.tail_available(match)
+                    if self.ecfg.tail_copy
+                    and self.snapshot_kind == "positional" else 0)
             reuse = max(0, min(match.tokens + tail - plen, L - 1))
             tail = max(0, min(tail, reuse - (match.tokens - plen)))
+            if self.snapshot_kind == "point":
+                pt = self.ecfg.page_tokens
+                reuse = max(0, ((plen + reuse) // pt) * pt - plen)
             return (reuse, None, tail) if reuse else (0, None, 0)
         if self.snapshot_kind == "positional":
             payload, tail = None, 0
@@ -984,7 +1028,10 @@ class ServeEngine:
         st = _SlotPrefill(req=req, tokens=toks, chunk=chunk,
                           key=key, match=match, done=reuse, grid=grid)
         if ecfg.prefix_caching and key is not None \
-                and self.snapshot_kind == "point":
+                and self.snapshot_kind == "point" and not self.paged:
+            # ring path only: the paged plane captures point state in its
+            # page pool at EVERY page boundary as a side effect of compute
+            # (state pages, DESIGN.md §10) — no snapshot planning needed
             self._plan_point_captures(st, reuse)
         if reuse:
             # the hit is real in the compute plane: on the ring path, seed
@@ -1147,8 +1194,10 @@ class ServeEngine:
             return None
         kv_bytes = 0.0
         for p in m.pages:
-            nb = p.n_tokens * self.kv.kv_bytes_token
-            if p.region_id is not None:
+            # paged point stacks: the page's region also carries its
+            # recurrent-state snapshot, which the transfer ships too
+            nb = p.n_tokens * self.kv.kv_bytes_token + self.kv.state_bytes_page
+            if p.region_id is not None and nb > 0:
                 self.mem.read_region(p.region_id, nb, sequential=True)
             kv_bytes += nb
         # per-kind snapshot resolution (DESIGN.md §8): positional — the
@@ -1288,17 +1337,25 @@ class ServeEngine:
         request ``rid`` whose queries occupy absolute positions [q0, q1):
         a global layer streams every page up to the last query's page; a
         windowed layer skips pages wholly below every query's window
-        (lowest reachable position q0 - window + 1). Bytes are charged at
-        the accounting scale per layer, against each page's actual tier —
-        replacing the ring path's synthetic whole-history read_all."""
+        (lowest reachable position q0 - window + 1); a point layer pulls
+        exactly one recurrent-state snapshot — the previous page's
+        boundary state when q0 opens a page, else the open page's running
+        state (nothing for an empty history: that read is null page 0).
+        Bytes are charged at the accounting scale per layer, against each
+        page's actual tier — replacing the ring path's synthetic
+        whole-history read_all."""
         pages = self.kv.sessions[rid].pages
         pt = self.kv.page_tokens
         hi = -(-q1 // pt)  # pages the kernel gathers: [lo_layer, hi)
+        rs = q0 // pt - 1 if q0 % pt == 0 else q0 // pt  # state-read slot
         page_bytes = [0.0] * len(pages)
-        for lb, w in self._acct_layers:
-            lo = 0 if w is None else max(0, q0 - w + 1) // pt
-            for j in range(lo, min(hi, len(pages))):
-                page_bytes[j] += pt * lb
+        for lb, w, sb in self._acct_layers:
+            if lb:
+                lo = 0 if w is None else max(0, q0 - w + 1) // pt
+                for j in range(lo, min(hi, len(pages))):
+                    page_bytes[j] += pt * lb
+            if sb and 0 <= rs < len(pages):
+                page_bytes[rs] += sb
         self.kernel_read_bytes += self.kv.read_pages(rid, page_bytes)
 
     def _account_chunk_kv(self, st: _SlotPrefill, ck: PrefillChunk) -> None:
@@ -1451,7 +1508,6 @@ class ServeEngine:
         prefix["hot_tier"] = self.memplane.hot_tier
         prefix["snapshots_published"] = self.snapshots_published
         prefix["snapshot_bytes"] = snapshot_bytes
-        prefix["paged_kernel"] = self.paged
         return {
             "steps": self.steps,
             "kernel_read_bytes": self.kernel_read_bytes,

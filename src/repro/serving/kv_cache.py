@@ -163,7 +163,8 @@ class PagedKVManager:
                  hot_tier: Optional[str] = None,
                  cold_ttl_s: Optional[float] = None,
                  tail_copy: bool = False,
-                 demote_on_pressure: bool = False):
+                 demote_on_pressure: bool = False,
+                 state_bytes_page: float = 0.0):
         if policy not in PRESSURE_POLICIES:
             raise ValueError(f"policy {policy!r} not in {PRESSURE_POLICIES}")
         if policy == "spill" and spill_tier is None:
@@ -178,7 +179,14 @@ class PagedKVManager:
         self.high_watermark = high_watermark
         self.tail_copy = tail_copy
         self.kv_bytes_token = cfg.kv_bytes_per_token()
-        self.page_bytes = self.kv_bytes_token * page_tokens
+        # paged point stacks (DESIGN.md §10) pin one recurrent-state
+        # snapshot per page alongside the KV token stream, so every page
+        # region is sized (and its writes metered) with those bytes. Zero
+        # on the ring path — there state lives in the engine's metered
+        # SnapshotHandle regions and would be double-counted here.
+        self.state_bytes_page = float(state_bytes_page)
+        self.page_bytes = (self.kv_bytes_token * page_tokens
+                           + self.state_bytes_page)
         # every retention transition — promote, demote, decay, arrival —
         # goes through the one lifecycle state machine (DESIGN.md §9)
         self.lifecycle = RetentionLifecycle(
@@ -383,7 +391,7 @@ class PagedKVManager:
         new_pages: List[Page] = []
         try:
             for _start in range(dup, n, pt):
-                nbytes = pt * self.kv_bytes_token
+                nbytes = pt * self.kv_bytes_token + self.state_bytes_page
                 rid = self.mem.write_region(tier, "prefix:adopt", nbytes,
                                             expected_lifetime_s=life)
                 used = tier
@@ -562,7 +570,7 @@ class PagedKVManager:
     def _new_page(self, s: SessionKV, n_tokens: int) -> Page:
         self._check_watermark()
         owner = f"session:{s.session_id}"
-        nbytes = n_tokens * self.kv_bytes_token
+        nbytes = n_tokens * self.kv_bytes_token + self.state_bytes_page
         tier, dropped = self.tier, False
         rid = self._alloc(owner, nbytes, self.tier)
         if rid is None:
@@ -607,7 +615,7 @@ class PagedKVManager:
         was dropped, so only recompute_tokens accrues here."""
         self.pressure.recompute_tokens += page.n_tokens
         owner = f"session:{s.session_id}"
-        nbytes = page.n_tokens * self.kv_bytes_token
+        nbytes = page.n_tokens * self.kv_bytes_token + self.state_bytes_page
         tier = page.tier
         rid = self._alloc(owner, nbytes, tier)
         if rid is None and self.policy in ("evict-lru", "spill"):

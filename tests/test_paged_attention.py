@@ -96,6 +96,56 @@ def test_table_padding_bit_invariance():
     assert np.array_equal(np.asarray(p0), np.asarray(p4))
 
 
+@pytest.mark.parametrize("ps", [8, 16, 32])
+@pytest.mark.parametrize("q_lens,kv_lens", [
+    ([5, 1, 9], [37, 12, 9]),          # mixed extend + decode, ragged
+    ([1, 1, 1, 1], [33, 7, 64, 17]),   # pure batched decode
+])
+def test_grouped_grid_sparse_table_parity(ps, q_lens, kv_lens):
+    """Sparse page tables (interior null slots): the grouped grid skips
+    null page blocks without a gather, the ungrouped baseline pulls and
+    masks them in-register, the reference masks by page id — all three
+    bit-identical in fp32. The host-side gather replica confirms the
+    grouped grid reads strictly fewer pages."""
+    from repro.kernels.paged_attention.kernel import pages_gathered
+    q, kvp, tbl, cu, kl = _case(q_lens, kv_lens, ps, Hq=4, Hkv=2, D=16)
+    tbl = np.array(tbl)
+    tbl[:, 1::2] = 0                    # null out every other slot
+    tbl = jnp.asarray(tbl)
+    kw = dict(scale=16 ** -0.5, max_q_len=max(q_lens))
+    ref = ragged_paged_attention_ref(q, kvp, tbl, cu, kl, scale=kw["scale"])
+    for bq, bkv, nb in [(4, 2, 2), (8, 4, 3), (64, 64, 4)]:
+        out = ragged_paged_attention(q, kvp, tbl, cu, kl, backend="pallas",
+                                     interpret=True, block_q=bq,
+                                     block_kv=bkv, num_buffers=nb, **kw)
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+    base = ragged_paged_attention(q, kvp, tbl, cu, kl, backend="pallas",
+                                  interpret=True, skip_blocks=False, **kw)
+    assert np.array_equal(np.asarray(base), np.asarray(ref))
+    grouped = pages_gathered(tbl, cu, kl, page_size=ps,
+                             max_q_len=kw["max_q_len"])
+    full = pages_gathered(tbl, cu, kl, page_size=ps,
+                          max_q_len=kw["max_q_len"], skip_blocks=False)
+    assert 0 < grouped < full
+
+
+def test_kernel_config_resolution():
+    """Explicit block/buffer overrides win over the tuned cache and are
+    clamped to the launch shape; the env-driven interpret default is
+    resolved once per process."""
+    from repro.kernels.paged_attention.tune import (KernelConfig,
+                                                    best_config,
+                                                    resolve_config,
+                                                    set_config)
+    set_config(64, 48, KernelConfig(block_q=32, block_kv=16, num_buffers=4))
+    assert best_config(64, 48) == KernelConfig(32, 16, 4)
+    eff = resolve_config(64, 48, max_q_len=5, table_width=3)
+    assert eff == KernelConfig(block_q=5, block_kv=3, num_buffers=4)
+    eff = resolve_config(64, 48, max_q_len=100, table_width=100,
+                         block_q=8, block_kv=2, num_buffers=9)
+    assert eff == KernelConfig(block_q=8, block_kv=2, num_buffers=4)
+
+
 def test_explicit_positions_ring_layout():
     """The q_pos/kv_pos_pages variant (ring-cache compatibility: the
     decode_attention wrapper) masks by stored positions, not slot-derived
@@ -191,8 +241,6 @@ def test_paged_hit_bit_equal_zero_copy_metered(arch_setup):
     _run(cold, prompts)
 
     assert _outputs(ring) == _outputs(paged) == _outputs(cold)
-    assert rep["prefix"]["paged_kernel"] is True
-    assert rep_ring["prefix"]["paged_kernel"] is False
     assert rep["prefix"]["compute_hits"] >= 1
     # zero-copy hit: the ring path pays a full cache-tree copy per hit,
     # the paged path splices the page table
@@ -271,18 +319,84 @@ def test_paged_migration_splices_pages(arch_setup):
     assert recv2.kv.radix.match(key, recv2.mem.now).tokens == 0
 
 
-def test_paged_point_stack_falls_back_to_ring():
-    """paged_kernel=True on a point-snapshot stack (recurrent state — no
-    page table can splice it) silently keeps the ring path; the report
-    records the effective mode."""
-    full = get_config("hymba-1.5b")
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "hymba-1.5b"])
+def test_paged_point_stack_hit_bit_equal(arch):
+    """paged_kernel=True is universal: SSM and hybrid stacks serve on
+    pooled point-state pages (conv + recurrent state captured at page
+    boundaries) — no ring fallback exists any more — and a prefix hit
+    resumes from a sealed page's state bit-identically (fp32) to the
+    ring path and a cold start, with zero seed-copy bytes."""
+    full = get_config(arch)
     cfg = reduced(full, dtype="float32", param_dtype="float32")
     params = init_params(cfg, jax.random.key(0))
-    eng = _mk_engine(full, cfg, params, paged_kernel=True)
-    assert eng.paged is False and eng.backend.paged is False
-    rep = _run(eng, [np.arange(2, 40)], max_new=4)
-    assert rep["prefix"]["paged_kernel"] is False
-    assert rep["tokens_generated"] >= 4
+    rng = np.random.default_rng(13)
+    base = rng.integers(2, 400, 40)
+    prompts = [base, np.concatenate([base[:32], rng.integers(2, 400, 9)])]
+
+    ring = _mk_engine(full, cfg, params, paged_kernel=False)
+    _run(ring, prompts)
+    paged = _mk_engine(full, cfg, params, paged_kernel=True)
+    assert paged.paged is True and paged.backend.paged is True
+    rep = _run(paged, prompts)
+    cold = _mk_engine(full, cfg, params, paged_kernel=True,
+                      prefix_caching=False)
+    _run(cold, prompts)
+
+    assert _outputs(ring) == _outputs(paged) == _outputs(cold)
+    assert rep["prefix"]["compute_hits"] >= 1
+    assert rep["seed_copy_bytes"] == 0.0
+    assert rep["snapshot_bytes"] == 0.0
+    # recurrent-state pages ride the same accounting: page reads carry
+    # the per-page state snapshot bytes
+    assert paged.kv.state_bytes_page > 0
+    assert paged.prefill_tokens_computed < cold.prefill_tokens_computed
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "hymba-1.5b"])
+def test_paged_state_page_migration(arch):
+    """Cross-replica migration of point-state pages: the receiver grafts
+    conv/state pages and a local hit decodes identically to the donor;
+    wrong page geometry or mangled state leaves are rejected BEFORE
+    adoption."""
+    full = get_config(arch)
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(17)
+    p = rng.integers(2, 400, 32)
+    donor = _mk_engine(full, cfg, params, paged_kernel=True)
+    _run(donor, [p], max_new=4)
+
+    key = donor.radix_key_for(list(p))
+    exp = donor.export_prefix(key)
+    assert exp is not None and exp.get("page_data") is not None
+    assert exp["snapshot_bytes"] == 0.0
+
+    recv = _mk_engine(full, cfg, params, paged_kernel=True)
+    imp = recv.import_prefix(exp["tokens"], caches=exp["caches"],
+                             hot=exp["hot"], hits=exp["hits"],
+                             snap_kind=exp["snap_kind"],
+                             snap_tokens=exp["snap_tokens"],
+                             page_data=exp["page_data"],
+                             page_tokens=exp["page_tokens"])
+    assert imp["total_tokens"] > 0 and imp["snapshot_bytes"] == 0.0
+    rep = _run(recv, [p], max_new=4)
+    assert list(donor.outputs[0]) == list(recv.outputs[0])
+    assert rep["prefix"]["compute_hits"] == 1
+    assert rep["seed_copy_bytes"] == 0.0
+
+    # page-size mismatch: state captured at foreign page boundaries is
+    # meaningless here
+    recv2 = _mk_engine(full, cfg, params, paged_kernel=True)
+    bad = recv2.import_prefix(exp["tokens"], page_data=exp["page_data"],
+                              page_tokens=exp["page_tokens"] * 2)
+    assert bad["total_tokens"] == 0
+    assert recv2.kv.radix.match(key, recv2.mem.now).tokens == 0
+    # mangled state-page leaves (wrong recurrent-state geometry)
+    mangled = jax.tree.map(lambda a: a[..., :-1], exp["page_data"])
+    bad = recv2.import_prefix(exp["tokens"], page_data=mangled,
+                              page_tokens=exp["page_tokens"])
+    assert bad["total_tokens"] == 0
+    assert recv2.kv.radix.match(key, recv2.mem.now).tokens == 0
 
 
 def test_paged_pool_growth_and_row_copy():
