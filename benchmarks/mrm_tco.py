@@ -1,11 +1,19 @@
 """MRM vs HBM-only: placement feasibility, sustained memory power, capacity
 cost, and tokens/joule for a llama2-70b-class inference machine (the
-paper's 'tokens per dollar' §5 motivation, made concrete)."""
+paper's 'tokens per dollar' §5 motivation, made concrete).
+
+Also reports the reliability plane's density lever (DESIGN.md §11): per
+MRM technology and retention state, the ECC check-bit overhead of the
+domain-specific split codeword vs a uniform strict code — the domain code
+must shrink on every demoted/cold/spilled state — plus the placement
+solve re-run with ``ecc_profile="domain"`` so the check bits show up as a
+metered capacity/bandwidth tenant."""
 from __future__ import annotations
 
 import time
 
 from repro.configs import get_config
+from repro.core.ecc import STATE_RETENTION_FRAC, TierEcc
 from repro.core.memclass import HBM3E, HOUR, LPDDR5X, MRM_MRAM, MRM_PCM, MRM_RRAM
 from repro.core.tiering import DataClassProfile, Tier, solve_placement
 
@@ -39,12 +47,39 @@ SYSTEMS = {
 }
 
 
+def ecc_table() -> dict:
+    """Per-(MRM technology, retention state) ECC check-bit overhead:
+    domain-specific split codeword vs uniform strict code. The density
+    lever the paper's §4 co-design argues for — lower-retention states
+    (cheaper cells, higher RBER) pay more parity, but the domain code
+    pays measurably less than uniform on every derated state."""
+    out = {}
+    for tech in (MRM_PCM, MRM_RRAM, MRM_MRAM):
+        dom = TierEcc(tech, "domain")
+        uni = TierEcc(tech, "uniform")
+        rows = {}
+        for state, frac in STATE_RETENTION_FRAC.items():
+            r = tech.retention_s * frac
+            od, ou = dom.overhead_for("kv", r), uni.overhead_for("kv", r)
+            shrink = 1.0 - od / ou if ou else 0.0
+            if state != "hot":
+                # the CI density gate: the split code must beat uniform on
+                # every derated (demoted/cold/spilled) retention state
+                assert od < ou, (
+                    f"{tech.name}/{state}: domain {od:.5f} !< uniform {ou:.5f}")
+            rows[state] = {"retention_s": r, "domain": od, "uniform": ou,
+                           "shrink": shrink}
+        out[tech.name] = rows
+    return out
+
+
 def compute() -> dict:
     classes = _classes()
     out = {}
     for name, tiers in SYSTEMS.items():
         res = solve_placement(classes, tiers)
         tokens_per_joule = DECODE_TOKENS_PER_S / res.energy_w if res.feasible else 0.0
+        ecc = solve_placement(classes, tiers, ecc_profile="domain")
         out[name] = {
             "feasible": res.feasible,
             "assignment": res.assignment,
@@ -52,10 +87,14 @@ def compute() -> dict:
             "capacity_cost_usd": res.cost_usd,
             "tokens_per_joule": tokens_per_joule,
             "violations": res.violations[:3],
+            # same placement with ECC check bits metered as a tenant
+            "ecc_overhead": ecc.ecc_overhead,
+            "ecc_energy_w": ecc.energy_w,
         }
     base = out["hbm_only"]["energy_w"]
     for name in out:
         out[name]["energy_vs_hbm"] = out[name]["energy_w"] / base if base else None
+    out["ecc_table"] = ecc_table()
     return out
 
 
@@ -65,9 +104,15 @@ def run(csv=True):
     dt = (time.perf_counter() - t0) * 1e6
     if csv:
         for name, r in out.items():
+            if name == "ecc_table":
+                continue
             print(f"mrm_tco/{name}_energy_w,{dt:.1f},{r['energy_w']:.2f}")
             print(f"mrm_tco/{name}_tokens_per_j,{dt:.1f},{r['tokens_per_joule']:.3f}")
             print(f"mrm_tco/{name}_cost_usd,{dt:.1f},{r['capacity_cost_usd']:.0f}")
+        for tech, rows in out["ecc_table"].items():
+            for state, row in rows.items():
+                print(f"mrm_tco/ecc_{tech}_{state}_shrink,{dt:.1f},"
+                      f"{row['shrink']:.4f}")
     return out
 
 

@@ -17,11 +17,27 @@ from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
 
-def analytic_kernel_bytes(arch: str, shape_name: str, n_chips: int = 256) -> float:
+def ecc_kv_read_overhead(state: str = "demoted") -> dict:
+    """Check-bit read overhead for KV pages held on MRM (mrm_rram) at one
+    retention state, per ECC profile (DESIGN.md §11). Every KV byte the
+    kernel streams drags its parity bytes across the same interface, so
+    the roofline's memory term scales by ``1 + overhead`` — the domain
+    split code keeps that scaling smaller than a uniform strict code."""
+    from repro.core.ecc import STATE_RETENTION_FRAC, TierEcc
+    from repro.core.memclass import MRM_RRAM
+    r = MRM_RRAM.retention_s * STATE_RETENTION_FRAC[state]
+    return {prof: TierEcc(MRM_RRAM, prof).overhead_for("kv", r)
+            for prof in ("uniform", "domain")}
+
+
+def analytic_kernel_bytes(arch: str, shape_name: str, n_chips: int = 256,
+                          ecc_kv_overhead: float = 0.0) -> float:
     """Per-device HBM bytes for a fused-kernel implementation (lower bound):
     weights read once per step + residual-stream activations (fwd+bwd with
     full remat ~ 3 passes) + flash-attention KV streaming (K,V re-read once
-    per q-block pass) + logits/loss traffic. bf16 everywhere."""
+    per q-block pass) + logits/loss traffic. bf16 everywhere.
+    ``ecc_kv_overhead`` scales the KV-stream terms by ``1 + overhead`` —
+    the reliability plane's check-bit reads on paged KV (DESIGN.md §11)."""
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     counts = cfg.param_counts()
@@ -33,7 +49,7 @@ def analytic_kernel_bytes(arch: str, shape_name: str, n_chips: int = 256) -> flo
         w = counts["active"] * bpe / n_chips
         kv = B * S * cfg.kv_bytes_per_token() / n_chips
         act = B * cfg.num_layers * cfg.d_model * bpe * 8 / n_chips
-        return w + kv + act
+        return w + kv * (1.0 + ecc_kv_overhead) + act
 
     tokens = B * S
     passes = 3 if shape.kind == "train" else 1  # fwd + remat-fwd + bwd
@@ -54,7 +70,7 @@ def analytic_kernel_bytes(arch: str, shape_name: str, n_chips: int = 256) -> flo
             attn_kv += tokens * (cfg.kv_lora_rank + cfg.qk_rope_dim) * bpe * \
                 max(S // q_block, 1) / n_chips * passes
     logits = tokens * cfg.padded_vocab * 4 / n_chips * (2 if shape.kind == "train" else 0)
-    return w_stream + act + attn_kv + logits
+    return w_stream + act + attn_kv * (1.0 + ecc_kv_overhead) + logits
 
 
 def load_cells(mesh="single", variant="base"):
@@ -67,15 +83,19 @@ def load_cells(mesh="single", variant="base"):
 
 
 def table(mesh="single") -> list:
+    ecc_ov = ecc_kv_read_overhead("demoted")
     rows = []
     for d in load_cells(mesh):
         rt = d["roofline"]
         ka_bytes = analytic_kernel_bytes(d["arch"], d["shape"], d["n_devices"])
+        ka_ecc = analytic_kernel_bytes(d["arch"], d["shape"], d["n_devices"],
+                                       ecc_kv_overhead=ecc_ov["domain"])
         rows.append({
             "arch": d["arch"], "shape": d["shape"],
             "compute_s": rt["compute_s"], "memory_s": rt["memory_s"],
             "collective_s": rt["collective_s"], "dominant": rt["dominant"],
             "kernel_memory_s": ka_bytes / HBM_BW,
+            "kernel_memory_ecc_s": ka_ecc / HBM_BW,
             "useful_ratio": d["model_flops"]["useful_ratio"],
             "per_device_gib": d["memory"]["per_device_gib"],
             "fits": d["memory"]["fits_16gib"],
@@ -94,6 +114,12 @@ def run(csv=True):
         for r in rows:
             print(f"roofline/{r['arch']}__{r['shape']}_dom_{r['dominant']},"
                   f"{dt:.1f},{r['roofline_fraction']:.4f}")
+        ov = ecc_kv_read_overhead("demoted")
+        # density gate: domain check bits must undercut uniform on the
+        # demoted state the roofline models
+        assert 0.0 < ov["domain"] < ov["uniform"]
+        for prof, o in ov.items():
+            print(f"roofline/ecc_kv_overhead_{prof}_demoted,{dt:.1f},{o:.5f}")
     return rows
 
 

@@ -16,7 +16,7 @@ import sys
 import traceback
 
 SUITES = ("fig1", "workload", "tco", "serving", "kernels", "kernel_bench",
-          "roofline")
+          "roofline", "reliability")
 
 
 def main(argv=None) -> None:
@@ -56,6 +56,10 @@ def main(argv=None) -> None:
     if "roofline" in want:
         from benchmarks import roofline
         results["roofline"] = _run("roofline", roofline.run, failures)
+    if "reliability" in want:
+        from benchmarks import serving_sim
+        results["reliability"] = _run("serving_sim.reliability",
+                                      serving_sim.run_reliability, failures)
 
     if args.json:
         with open(args.json, "w") as f:

@@ -27,6 +27,14 @@
    identical decoded tokens, non-zero metered interconnect traffic, and
    zero pressure-ledger imbalance. Runs for an attention stack and an SSM
    stack (the latter transfers a *point* state snapshot over the wire).
+6. Reliability sweep (DESIGN.md §11; suite ``reliability``, trajectory in
+   ``BENCH_reliability.json``): fault injection over the paged plane at a
+   target RBER, three arms on identical prompts — clean (no injection),
+   protected (domain ECC + refresh: scrubs fire, decode matches clean
+   within tolerance) and over-aged (refresh disabled, the clock jumped
+   past 4x retention: uncorrectable blocks reported, decode measurably
+   degrades) — plus the per-state ECC overhead ladder showing the split
+   code shrinking check bits on demoted/cold/spilled pages.
 """
 from __future__ import annotations
 
@@ -520,6 +528,132 @@ def fleet_reuse(arch="deepseek-7b", replicas=3, fanout=12,
     }
 
 
+def reliability(arch="deepseek-7b", rber=1e-3, n_shares=3, head_tokens=32,
+                ask_tokens=8, max_new=6, session_s=600.0) -> dict:
+    """Fault-injection A/B gate (DESIGN.md §11). Three engine runs on the
+    paged plane with identical prompts, greedy fp32 decode:
+
+    - **clean** — domain ECC profile, refresh on, no injection;
+    - **protected** — same, plus ``inject_rber``; after the first decode
+      tokens the clock jumps to 80% of the refresh deadline, so the next
+      page visits cross the scrub threshold deterministically (scrub-on-
+      read corrects + re-arms, metered through the lifecycle) and decode
+      must match the clean run within ``tolerance``;
+    - **over-aged** — refresh servicing disabled and the clock jumped past
+      4x the pages' programmed retention: RBER saturates, the strict code
+      fails at the accounting scale (uncorrectable blocks > 0 in the
+      report) and decoded tokens must degrade measurably vs protected.
+
+    Also emits the per-retention-state ECC overhead ladder (mrm_rram)
+    asserting the domain split code's check bits shrink vs the uniform
+    code on every demoted-or-colder state — the density lever.
+    """
+    from repro.configs import get_config, reduced
+    from repro.core.ecc import STATE_RETENTION_FRAC, TierEcc
+    from repro.core.memclass import HBM3E, MRM_RRAM
+    from repro.core.simulator import MemorySystem
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServeEngine
+
+    full = get_config(arch)
+    cfg = reduced(full, dtype="float32", param_dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    head = list(rng.integers(2, cfg.vocab_size, head_tokens))
+    prompts = [head + list(rng.integers(2, cfg.vocab_size, ask_tokens))
+               for _ in range(n_shares)]
+    # session pages are DCM-programmed at retention = 2 * session_s
+    # (margin); the refresh deadline sits at half that
+    retention_s = 2.0 * session_s
+    deadline_s = retention_s / 2.0
+
+    def run_one(inject, refresh=True, age_jump=0.0):
+        mem = MemorySystem({"mrm": (MRM_RRAM, 1 << 40),
+                            "hbm": (HBM3E, 1 << 37)},
+                           ecc_profile="domain", service_refresh=refresh)
+        eng = ServeEngine(cfg, params, mem,
+                          EngineConfig(max_slots=2, max_cache_len=96,
+                                       weight_tier="hbm", kv_tier="mrm",
+                                       eos_token=-1, chunk_tokens=16,
+                                       page_tokens=16, tail_copy=False,
+                                       paged_kernel=True,
+                                       expected_session_s=session_s,
+                                       inject_rber=inject, inject_seed=0),
+                          account_cfg=full)
+        for p in prompts:
+            eng.submit(list(p), max_new)
+        # run prefill through the first decode tokens, then age every page
+        # with one clock jump before the remaining decode rounds
+        steps = 0
+        while not eng.sched.idle and eng.tokens_generated < 2 and steps < 500:
+            eng.step()
+            steps += 1
+        if age_jump:
+            eng.mem.advance(age_jump)
+        rep = eng.run_until_idle()
+        outs = {k: list(v) for k, v in eng.outputs.items()}
+        return eng, rep, outs
+
+    _, clean_rep, outs_clean = run_one(None, age_jump=0.8 * deadline_s)
+    eng_p, prot_rep, outs_prot = run_one(rber, age_jump=0.8 * deadline_s)
+    eng_o, over_rep, outs_over = run_one(rber, refresh=False,
+                                         age_jump=4.0 * retention_s)
+
+    def match_fraction(a, b):
+        total = hits = 0
+        for k, toks in a.items():
+            other = b.get(k, [])
+            total += max(len(toks), len(other))
+            hits += sum(1 for x, y in zip(toks, other) if x == y)
+        return hits / max(total, 1)
+
+    prot_match = match_fraction(outs_clean, outs_prot)
+    over_match = match_fraction(outs_clean, outs_over)
+    prot_rel = prot_rep["reliability"]
+    over_rel = over_rep["reliability"]
+    # the CI gate: corrected decode holds, unrefreshed decode degrades
+    assert prot_match >= 0.95, \
+        f"protected decode match {prot_match:.2%} under RBER {rber}"
+    assert prot_rel["injection"]["uncorrectable_blocks"] == 0, prot_rel
+    assert eng_p.kv.lifecycle.stats.scrubbed_pages > 0, \
+        "scrub-on-read never fired in the protected arm"
+    assert prot_rel["tiers"]["mrm"]["scrub_read_bytes"] > 0
+    assert prot_rel["tiers"]["mrm"]["ecc_write_bytes"] > 0
+    assert over_rel["injection"]["uncorrectable_blocks"] > 0, \
+        "over-aged pages must report uncorrectable blocks"
+    assert over_match < prot_match, (over_match, prot_match)
+    assert over_match <= 0.9, \
+        f"over-aged decode match {over_match:.2%} — no measurable degradation"
+    # density lever: the domain split code must spend fewer check bits
+    # than the uniform-strong baseline on every demoted-or-colder state
+    dom = TierEcc(MRM_RRAM, "domain")
+    uni = TierEcc(MRM_RRAM, "uniform")
+    ladder = {}
+    for state, frac in STATE_RETENTION_FRAC.items():
+        r = MRM_RRAM.retention_s * frac
+        od, ou = dom.overhead_for("kv", r), uni.overhead_for("kv", r)
+        ladder[state] = {"domain": od, "uniform": ou,
+                         "shrink": 1.0 - od / ou}
+        if state != "hot":
+            assert od < ou, f"{state}: domain {od} !< uniform {ou}"
+    return {
+        "arch": arch,
+        "inject_rber": rber,
+        "requests": len(prompts),
+        "tokens_generated": clean_rep["tokens_generated"],
+        "protected_match": prot_match,
+        "overaged_match": over_match,
+        "scrubbed_pages": eng_p.kv.lifecycle.stats.scrubbed_pages,
+        "scrub_read_bytes": prot_rel["tiers"]["mrm"]["scrub_read_bytes"],
+        "ecc_write_bytes": prot_rel["tiers"]["mrm"]["ecc_write_bytes"],
+        "ecc_read_bytes": prot_rel["tiers"]["mrm"]["ecc_read_bytes"],
+        "protected_injection": prot_rel["injection"],
+        "overaged_injection": over_rel["injection"],
+        "overaged_uncorrectable": over_rel["injection"]["uncorrectable_blocks"],
+        "ecc_overhead_ladder": ladder,
+    }
+
+
 def _persist_paged_trajectory(entry: dict) -> None:
     """Append the paged_kernel sweep result to BENCH_paged.json at the
     repo root — the benchmark trajectory file CI and later sessions diff
@@ -529,10 +663,21 @@ def _persist_paged_trajectory(entry: dict) -> None:
     match the last persisted entry (for the same arch) is dropped instead
     of appended — ``at`` is tiebreak metadata, not a metric, and without
     the dedupe every CI run grew the file by one duplicate row."""
+    _persist_trajectory("BENCH_paged.json", entry)
+
+
+def _persist_reliability_trajectory(entry: dict) -> None:
+    """Append the reliability sweep result to BENCH_reliability.json —
+    the CI artifact tracking decode-match / scrub / uncorrectable metrics
+    run over run (same dedupe rule as the paged trajectory)."""
+    _persist_trajectory("BENCH_reliability.json", entry)
+
+
+def _persist_trajectory(filename: str, entry: dict) -> None:
     import json
     import os
     path = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "BENCH_paged.json")
+        os.path.abspath(__file__))), filename)
     data = {"entries": []}
     if os.path.exists(path):
         try:
@@ -552,6 +697,29 @@ def _persist_paged_trajectory(entry: dict) -> None:
     with open(path, "w") as f:
         json.dump(data, f, indent=1, default=float)
         f.write("\n")
+
+
+def run_reliability(csv=True):
+    """The ``reliability`` benchmark suite (its own CI leg — the fault-
+    injection gate is an A/B over three full engine runs and stays out of
+    the smoke-path serving suite)."""
+    t0 = time.perf_counter()
+    rel = reliability()
+    dt = (time.perf_counter() - t0) * 1e6
+    _persist_reliability_trajectory(rel)
+    if csv:
+        print(f"serving_sim/reliability_protected_match,{dt:.1f},"
+              f"{rel['protected_match']:.4f}")
+        print(f"serving_sim/reliability_overaged_match,{dt:.1f},"
+              f"{rel['overaged_match']:.4f}")
+        print(f"serving_sim/reliability_scrubbed_pages,{dt:.1f},"
+              f"{rel['scrubbed_pages']}")
+        print(f"serving_sim/reliability_uncorrectable,{dt:.1f},"
+              f"{rel['overaged_uncorrectable']}")
+        for state, row in rel["ecc_overhead_ladder"].items():
+            print(f"serving_sim/reliability_ecc_shrink_{state},{dt:.1f},"
+                  f"{row['shrink']:.4f}")
+    return {"reliability": rel}
 
 
 def run(csv=True):

@@ -7,6 +7,9 @@
 4. Serve a few real requests through the full stack — radix prefix reuse
    cuts the second identical prompt's prefill in both planes
    (DESIGN.md §6, §8).
+5. Age a KV page past its retention deadline and watch the reliability
+   plane correct it: scrub-on-read metered as refresh + check bits, the
+   retention clock re-armed (DESIGN.md §11).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -85,3 +88,22 @@ print(f"== served 2x the same 40-token prompt: "
       f"KV tokens reused {rep['prefix_tokens_reused']}")
 assert rep["prefix_hits"] >= 1
 assert rep["prefill_tokens_skipped"] > 0
+
+# --- 5. reliability plane: age a page, scrub it back (DESIGN.md §11) --------
+mem_r = MemorySystem({"mrm": (MRM_RRAM, 64 << 30)}, ecc_profile="domain")
+rid = mem_r.write_region("mrm", "kv:demo", 1 << 20, expected_lifetime_s=600)
+region = mem_r.region(rid)
+dev = mem_r.devices["mrm"]
+print(f"== ECC (domain profile): a 1 MiB KV page at 10-min retention "
+      f"carries {dev.stats.ecc_write_bytes:,.0f} check-bit bytes "
+      f"({dev.ecc.overhead_for('kv', region.retention_s):.2%} overhead)")
+mem_r.advance(0.8 * region.retention_s / mem_r.tracker.margin)  # near deadline
+scrubbed = mem_r.scrub_region(rid)
+print(f"== scrub-on-read near the deadline: corrected in place, metered as "
+      f"refresh ({dev.stats.refresh_bytes:,.0f} B) + scrub reads "
+      f"({dev.stats.scrub_read_bytes:,.0f} B incl. check bits), wear "
+      f"{dev.wear.scrub_rewrites} block rewrites; retention clock re-armed "
+      f"(next deadline {region.written_at + region.retention_s:.0f}s)")
+assert scrubbed
+assert dev.stats.ecc_write_bytes > 0 and dev.stats.scrub_read_bytes > 0
+assert region.written_at == mem_r.now  # the scrub re-armed the clock

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency gate (CI `docs` job).
 
-Three checks, all cheap and dependency-free:
+Five checks, all cheap and dependency-free:
 
 1. **README file references** — every path-looking token in README.md
    (backticked or inside fenced code blocks, containing a `/` or a known
@@ -16,6 +16,13 @@ Three checks, all cheap and dependency-free:
    resolve to a matching section heading in DESIGN.md. Bare paper
    references like (2.2) and single-letter placeholders are out of
    scope (they cite the source paper / are documentation meta-text).
+4. **DESIGN.md CLI flags** — same rule as (2) for DESIGN.md: flags the
+   architecture doc cites (e.g. the §11 `--inject-rber` contract) must
+   still be defined.
+5. **README DESIGN-map completeness** — the README's "Where to read
+   next" map must carry a row for every `## §` heading DESIGN.md
+   actually has, so new sections cannot land undocumented on the
+   front page.
 
 Run:  python scripts/check_docs.py
 """
@@ -61,21 +68,43 @@ def check_readme_paths(errors: list) -> None:
             errors.append(f"README.md references missing file: {tok}")
 
 
-def check_readme_flags(errors: list) -> None:
-    text = (ROOT / "README.md").read_text()
-    flags = set(re.findall(r"(--[a-z][a-z0-9-]+)", text))
+def _defined_flags() -> set:
     defined = set()
     for path in list((ROOT / "src" / "repro" / "launch").glob("*.py")) \
             + list((ROOT / "benchmarks").glob("*.py")):
         defined.update(re.findall(r"add_argument\(\s*\"(--[a-z0-9-]+)\"",
                                   path.read_text()))
+    return defined
+
+
+def _check_doc_flags(doc: str, errors: list) -> None:
+    text = (ROOT / doc).read_text()
+    flags = set(re.findall(r"(--[a-z][a-z0-9-]+)", text))
+    defined = _defined_flags()
     for flag in sorted(flags - defined):
         if flag in ("--json", "--help"):  # runner/argparse built-ins
             defined_runner = any(
                 flag in p.read_text() for p in (ROOT / "benchmarks").glob("*.py"))
             if flag == "--help" or defined_runner:
                 continue
-        errors.append(f"README.md documents unknown CLI flag: {flag}")
+        errors.append(f"{doc} documents unknown CLI flag: {flag}")
+
+
+def check_readme_flags(errors: list) -> None:
+    _check_doc_flags("README.md", errors)
+
+
+def check_design_flags(errors: list) -> None:
+    _check_doc_flags("DESIGN.md", errors)
+
+
+def check_readme_design_map(errors: list) -> None:
+    design = (ROOT / "DESIGN.md").read_text()
+    readme = (ROOT / "README.md").read_text()
+    for heading in re.findall(r"^## (§[\w-]+)", design, re.M):
+        if not re.search(rf"^\|\s*{re.escape(heading)}\s*\|", readme, re.M):
+            errors.append(f"README.md DESIGN map has no row for DESIGN.md "
+                          f"heading '{heading}'")
 
 
 def check_design_sections(errors: list) -> None:
@@ -106,9 +135,11 @@ def main() -> None:
     check_readme_paths(errors)
     check_readme_flags(errors)
     check_design_sections(errors)
+    check_design_flags(errors)
+    check_readme_design_map(errors)
     fail(errors)
-    print("docs OK: README file/flag references and DESIGN.md § "
-          "cross-references all resolve")
+    print("docs OK: README file/flag references, DESIGN.md § "
+          "cross-references/flags, and the README DESIGN map all resolve")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,10 @@
 - tiering:   retention-aware placement of weights / KV / activations
 - refresh:   cluster-level retention tracking + refresh/migrate/drop
 - endurance: Fig.-1 arithmetic, wear accounting, software wear-levelling
-- ecc:       retention-aware large-block error correction
+- ecc:       retention-aware large-block error correction + the domain-
+             specific (exponent-protected / mantissa-relaxed) reliability
+             plane of DESIGN.md §11
+- faults:    age-driven bit-flip injection over paged KV/state arrays
 - simulator: instrumented device/system simulator driven by the serving engine
 """
 from repro.core.memclass import (TECHNOLOGIES, MemTechnology, get_technology,
@@ -13,9 +16,15 @@ from repro.core.memclass import (TECHNOLOGIES, MemTechnology, get_technology,
 from repro.core.dcm import WriteOp, endurance_at, plan_write, write_energy
 from repro.core.endurance import (WearLevelingAllocator, WearState,
                                   weight_update_writes, writes_per_cell)
-from repro.core.ecc import BlockCode, design_code, max_safe_age, rber_at_age
+from repro.core.ecc import (BlockCode, ECC_PROFILES, STATE_RETENTION_FRAC,
+                            SplitCode, TierEcc, cell_cost_factor,
+                            derated_rber_at_age, design_code,
+                            design_split_code, margin_derate, max_safe_age,
+                            rber_at_age, uncorrectable_log10)
+from repro.core.faults import FaultInjector, FaultStats, flip_bits
 from repro.core.tiering import (DataClassProfile, PlacementResult, Tier,
                                 evaluate_placement, solve_placement)
 from repro.core.refresh import (Action, RefreshScheduler, RetentionTracker,
                                 ScheduledAction, TrackedRegion)
-from repro.core.simulator import IOStats, MemDevice, MemorySystem
+from repro.core.simulator import (IOStats, MemDevice, MemorySystem,
+                                  data_class_of)

@@ -50,6 +50,7 @@ class WearState:
     block_bytes: int
     endurance: float
     writes: np.ndarray = field(default=None)  # type: ignore
+    scrub_rewrites: int = 0  # corrective rewrites (DESIGN.md §11 scrubs)
 
     def __post_init__(self):
         if self.writes is None:
@@ -57,6 +58,12 @@ class WearState:
 
     def record_write(self, block_ids) -> None:
         self.writes[np.asarray(block_ids)] += 1.0
+
+    def record_scrub(self, block_ids) -> None:
+        """Scrub-on-read rewrite: same wear as a refresh rewrite, counted
+        separately so the endurance budget attributes reliability traffic."""
+        self.scrub_rewrites += len(block_ids)
+        self.record_write(block_ids)
 
     @property
     def max_wear(self) -> float:
@@ -127,6 +134,10 @@ class WearLevelingAllocator:
     def rewrite_in_place(self, block_ids) -> None:
         """A refresh rewrite (costs wear, keeps placement)."""
         self.wear.record_write(block_ids)
+
+    def scrub_in_place(self, block_ids) -> None:
+        """A scrub's corrective rewrite — refresh wear, scrub-attributed."""
+        self.wear.record_scrub(block_ids)
 
     @property
     def utilization(self) -> float:

@@ -1,0 +1,190 @@
+"""Fault injection for the reliability plane (DESIGN.md §11).
+
+Flips bits in paged KV/state compute arrays according to each page's age
+and retention state, so CI can measure — not assert — that the ECC plane
+holds decode together at the target RBER and that an over-aged page
+without refresh degrades.
+
+The injector works at two scales, mirroring how the repo meters memory:
+
+- **accounting scale** — the region's deployment-size byte count, where
+  uncorrectable-block *events* are sampled (``Poisson(n_blocks * P[block
+  uncorrectable at this RBER])``); a tier's ECC either corrects a block
+  or it doesn't, and that probability depends on the real block
+  population, not the reduced model's array sizes;
+- **compute scale** — the actual (reduced-model) page array, where raw
+  flips land (``Poisson(array_bits * rber)``) so corruption propagates
+  through real decode math.
+
+Contract with the ECC profile (engine ``--inject-rber`` plumbing):
+
+- profile ``off``: every sampled raw flip lands — no correction, no scrub;
+- profile ``uniform``/``domain``: critical (sign+exponent) flips land only
+  when an accounting-scale block is uncorrectable; mantissa flips beyond
+  the bulk code's per-block budget pass through as bounded activation
+  noise (that *is* the relaxed-mantissa trade); pages whose age crosses
+  ``scrub_age_frac`` of the refresh interval request a scrub-on-read
+  instead, which corrects everything and re-arms the retention clock
+  (metered by :meth:`repro.core.simulator.MemorySystem.scrub_region`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.ecc import SplitCode, rber_at_age, uncorrectable_log10
+
+#: sign+exponent ("critical") bit range per float dtype: (low bit, word bits)
+CRIT_BIT_RANGE = {
+    "bfloat16": (7, 16),
+    "float16": (10, 16),
+    "float32": (23, 32),
+}
+
+_UINT_FOR_ITEMSIZE = {2: np.uint16, 4: np.uint32}
+
+#: hard cap on flips applied to one array per visit — keeps the clamped
+#: RBER=0.5 regime (over-aged pages) linear in array size
+MAX_FLIPS_PER_VISIT = 1 << 20
+
+
+@dataclass
+class FaultStats:
+    """Counters surfaced in the engine report's ``reliability`` section."""
+    pages_visited: int = 0
+    scrubs_requested: int = 0
+    crit_flips: int = 0
+    bulk_flips: int = 0
+    corrected_bits: int = 0
+    uncorrectable_blocks: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "pages_visited": self.pages_visited,
+            "scrubs_requested": self.scrubs_requested,
+            "crit_flips": self.crit_flips,
+            "bulk_flips": self.bulk_flips,
+            "corrected_bits": self.corrected_bits,
+            "uncorrectable_blocks": self.uncorrectable_blocks,
+        }
+
+
+def flip_bits(arr: np.ndarray, n_crit: int, n_bulk: int,
+              rng: np.random.Generator) -> np.ndarray:
+    """Return a copy of ``arr`` with ``n_crit`` sign/exponent flips and
+    ``n_bulk`` mantissa flips at uniformly random positions (with
+    replacement — colliding flips cancel, as real double errors do)."""
+    if n_crit <= 0 and n_bulk <= 0:
+        return arr
+    name = arr.dtype.name
+    lo, word_bits = CRIT_BIT_RANGE.get(name, CRIT_BIT_RANGE["float32"])
+    uint = _UINT_FOR_ITEMSIZE[arr.dtype.itemsize]
+    flat = np.ascontiguousarray(arr).view(uint).reshape(-1).copy()
+    size = flat.size
+    if size == 0:
+        return arr
+    if n_crit > 0:
+        idx = rng.integers(0, size, int(n_crit))
+        bit = rng.integers(lo, word_bits, int(n_crit))
+        np.bitwise_xor.at(flat, idx, (np.ones(1, uint) << bit.astype(uint)))
+    if n_bulk > 0:
+        idx = rng.integers(0, size, int(n_bulk))
+        bit = rng.integers(0, lo, int(n_bulk))
+        np.bitwise_xor.at(flat, idx, (np.ones(1, uint) << bit.astype(uint)))
+    return flat.view(arr.dtype).reshape(arr.shape)
+
+
+class FaultInjector:
+    """Age-driven bit-flip source for paged KV/state arrays.
+
+    ``rber_at_retention`` (the ``--inject-rber`` value) anchors the error
+    curve: a page exactly at its programmed retention sees that RBER; a
+    freshly written page sees 1e-5 of it; growth between is exponential in
+    age/retention (same law as :func:`repro.core.ecc.rber_at_age`), and a
+    page at >= 4x its retention saturates at the 0.5 clamp — pure noise.
+    """
+
+    def __init__(self, mem, rber_at_retention: float, seed: int = 0,
+                 scrub_age_frac: float = 0.75):
+        self.mem = mem
+        self.rber = float(rber_at_retention)
+        self.scrub_age_frac = scrub_age_frac
+        self.rng = np.random.default_rng(seed)
+        self.stats = FaultStats()
+
+    # -- error model ------------------------------------------------------
+    def page_rber(self, region) -> float:
+        """Raw bit error rate of a tracked region at the current sim time."""
+        age = max(self.mem.now - region.written_at, 0.0)
+        tech = self.mem.devices[region.tier].tech
+        return rber_at_age(tech, age, region.retention_s,
+                           rber0=self.rber * 1e-5,
+                           rber_at_retention=self.rber)
+
+    def wants_scrub(self, region) -> bool:
+        """True when the page is old enough that a real controller would
+        scrub on read (deterministic at ``scrub_age_frac`` of the refresh
+        interval — the CI gate relies on this firing before the refresh
+        deadline)."""
+        age = self.mem.now - region.written_at
+        interval = region.retention_s / self.mem.tracker.margin
+        return age >= self.scrub_age_frac * interval
+
+    # -- injection --------------------------------------------------------
+    def corrupt(self, arr, region, protected: bool) -> Tuple[Optional[np.ndarray], int]:
+        """Sample faults for one page visit; returns (corrupted array or
+        None if nothing landed, uncorrectable block count this visit).
+
+        ``protected`` states whether an ECC profile is active for the
+        page's tier (engine passes ``ecc_profile != "off"``). Callers own
+        the ``pages_visited`` counter — one page may span several cache
+        leaves, each corrupted by its own call.
+        """
+        a = np.asarray(arr)
+        if a.dtype.itemsize not in _UINT_FOR_ITEMSIZE:
+            return None, 0
+        p = self.page_rber(region)
+        if p <= 0:
+            return None, 0
+        name = a.dtype.name
+        lo, word_bits = CRIT_BIT_RANGE.get(name, CRIT_BIT_RANGE["float32"])
+        crit_frac = (word_bits - lo) / word_bits
+        bits = a.size * a.dtype.itemsize * 8
+        n_crit_raw = int(self.rng.poisson(bits * crit_frac * p))
+        n_bulk_raw = int(self.rng.poisson(bits * (1.0 - crit_frac) * p))
+        n_bad = 0
+        if protected:
+            dev = self.mem.devices[region.tier]
+            code = dev.ecc.code_for("kv", region.retention_s)
+            crit_code = code.crit if isinstance(code, SplitCode) else code
+            bulk_t = (code.bulk.correctable if isinstance(code, SplitCode)
+                      else code.correctable)
+            # accounting scale: does any real block fail to correct?
+            n_blocks = max(1, int(region.bytes // dev.tech.block_bytes))
+            p_fail = min(10.0 ** uncorrectable_log10(crit_code, p), 1.0)
+            n_bad = int(min(self.rng.poisson(n_blocks * p_fail), n_blocks))
+            frac_bad = n_bad / n_blocks
+            n_crit = int(round(n_crit_raw * frac_bad))
+            if n_bad > 0:
+                n_crit = max(n_crit, 1)
+            # bulk code corrects up to t per compute-scale block; the rest
+            # passes through as activation noise
+            blocks_compute = max(1, bits // (dev.tech.block_bytes * 8))
+            budget = int(blocks_compute * bulk_t)
+            n_bulk = max(0, n_bulk_raw - budget)
+            self.stats.corrected_bits += (n_crit_raw - n_crit) + (n_bulk_raw - n_bulk)
+        else:
+            n_crit, n_bulk = n_crit_raw, n_bulk_raw
+        n_crit = min(n_crit, MAX_FLIPS_PER_VISIT)
+        n_bulk = min(n_bulk, MAX_FLIPS_PER_VISIT)
+        self.stats.crit_flips += n_crit
+        self.stats.bulk_flips += n_bulk
+        self.stats.uncorrectable_blocks += n_bad
+        if n_crit == 0 and n_bulk == 0:
+            return None, n_bad
+        return flip_bits(a, n_crit, n_bulk, self.rng), n_bad
+
+    def note_scrub(self) -> None:
+        self.stats.scrubs_requested += 1

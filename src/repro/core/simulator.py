@@ -15,10 +15,18 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import dcm
-from repro.core.ecc import design_code, rber_at_age
+from repro.core.ecc import TierEcc, design_code, rber_at_age
 from repro.core.endurance import WearLevelingAllocator, WearState
 from repro.core.memclass import YEAR, MemTechnology
 from repro.core.refresh import Action, RefreshScheduler, RetentionTracker
+
+
+def data_class_of(owner: str) -> str:
+    """Map a region owner tag to its ECC data class: ``weights*`` regions
+    carry the strict uniform code, everything else (KV pages, state
+    snapshots, activations) is inference cache and may take the relaxed
+    mantissa protection under the ``domain`` profile (DESIGN.md §11)."""
+    return "weights" if owner.startswith("weights") else "kv"
 
 
 @dataclass
@@ -31,6 +39,14 @@ class IOStats:
     n_reads: int = 0
     n_writes: int = 0
     seq_read_bytes: float = 0.0  # reads declared sequential by the caller
+    # ECC check-bit traffic rides in separate counters so data-plane
+    # identities (kv tier reads == kernel page-gather bytes) survive any
+    # profile: the step-latency model adds them in, read_bytes never
+    # includes them (DESIGN.md §11)
+    ecc_read_bytes: float = 0.0
+    ecc_write_bytes: float = 0.0
+    scrub_read_bytes: float = 0.0  # data+check bytes re-read by scrubs
+    n_scrubs: int = 0
 
     @property
     def rw_ratio(self) -> float:
@@ -45,9 +61,10 @@ class MemDevice:
     """One tier: a technology + capacity with wear, retention and ECC."""
 
     def __init__(self, tech: MemTechnology, capacity_bytes: int,
-                 uber_target: float = 1e-15):
+                 uber_target: float = 1e-15, ecc_profile: str = "off"):
         self.tech = tech
         self.capacity = capacity_bytes
+        self.ecc = TierEcc(tech, ecc_profile, uber_target)
         # wear-tracking granularity: cap the array at ~1M entries so huge
         # simulated devices stay cheap to track (a tracking block may span
         # several physical blocks; wear stats are per tracking block)
@@ -68,16 +85,30 @@ class MemDevice:
             self.code = design_code(tech.block_bytes, 1e-9, uber_target)
 
     # -- IO ---------------------------------------------------------------
-    def read(self, nbytes: float, sequential: bool = True) -> None:
+    def read(self, nbytes: float, sequential: bool = True,
+             data_class: str = "kv",
+             retention_s: Optional[float] = None) -> None:
+        """Meter a data read. Invariant: ``read_bytes`` counts *data* bytes
+        only — the check bits that ride along under an active ECC profile
+        land in ``ecc_read_bytes`` (energy charged, latency charged via
+        :meth:`MemorySystem.step_latency_since`), so data-plane byte
+        identities are profile-independent."""
         s = self.stats
         s.read_bytes += nbytes
         s.n_reads += 1
         if sequential:
             s.seq_read_bytes += nbytes
-        s.read_energy_j += nbytes * 8 * self.tech.read_energy_pj_bit * 1e-12
+        eb = nbytes * self.ecc.overhead_for(
+            data_class, retention_s if retention_s is not None
+            else self.tech.retention_s)
+        s.ecc_read_bytes += eb
+        s.read_energy_j += (nbytes + eb) * 8 * self.tech.read_energy_pj_bit * 1e-12
 
     def write(self, nbytes: float, expected_lifetime_s: Optional[float] = None,
-              refresh: bool = False) -> dcm.WriteOp:
+              refresh: bool = False, data_class: str = "kv") -> dcm.WriteOp:
+        """Meter a data write (or refresh rewrite). Same ECC invariant as
+        :meth:`read`: check bits for the write's programmed retention land
+        in ``ecc_write_bytes``, never in ``write_bytes``/``refresh_bytes``."""
         if expected_lifetime_s is None:
             expected_lifetime_s = self.tech.retention_s / 2.0
         op = dcm.plan_write(self.tech, expected_lifetime_s)
@@ -87,11 +118,22 @@ class MemDevice:
         else:
             s.write_bytes += nbytes
             s.n_writes += 1
-        s.write_energy_j += nbytes * 8 * op.energy_pj_bit * 1e-12
+        eb = nbytes * self.ecc.overhead_for(data_class, op.retention_s)
+        s.ecc_write_bytes += eb
+        s.write_energy_j += (nbytes + eb) * 8 * op.energy_pj_bit * 1e-12
         return op
 
     def blocks_for(self, nbytes: float) -> int:
         return max(1, int(-(-nbytes // self.track_block_bytes)))
+
+    def blocks_for_stored(self, nbytes: float, data_class: str,
+                          retention_s: float) -> int:
+        """Capacity-ledger tenant rule (DESIGN.md §11): a stored region
+        occupies blocks for its data bytes *plus* the check bits its code
+        requires at this retention — ECC overhead is charged into the same
+        per-tier block ledger as the data it protects."""
+        ov = self.ecc.overhead_for(data_class, retention_s)
+        return self.blocks_for(nbytes * (1.0 + ov))
 
     @property
     def energy_j(self) -> float:
@@ -112,6 +154,11 @@ class MemDevice:
             "wear_ratio": self.wear.wear_ratio,
             "life_used": self.wear.life_used(),
             "ecc_overhead": self.code.overhead,
+            "ecc_profile": self.ecc.profile,
+            "ecc_read_gb": s.ecc_read_bytes / 1e9,
+            "ecc_write_gb": s.ecc_write_bytes / 1e9,
+            "scrub_read_gb": s.scrub_read_bytes / 1e9,
+            "n_scrubs": s.n_scrubs,
             "utilization": self.alloc.utilization,
         }
 
@@ -120,9 +167,17 @@ class MemorySystem:
     """Tiers + retention tracker + refresh scheduler, as one control plane."""
 
     def __init__(self, tiers: Dict[str, Tuple[MemTechnology, int]],
-                 margin: float = 2.0):
+                 margin: float = 2.0, ecc_profile: str = "off",
+                 service_refresh: bool = True):
         self.devices: Dict[str, MemDevice] = {
-            name: MemDevice(tech, cap) for name, (tech, cap) in tiers.items()}
+            name: MemDevice(tech, cap, ecc_profile=ecc_profile)
+            for name, (tech, cap) in tiers.items()}
+        self.ecc_profile = ecc_profile
+        #: A/B switch for the reliability gate: with ``service_refresh``
+        #: off, retention deadlines are never serviced, so regions age past
+        #: their programmed retention and the fault injector sees the
+        #: over-aged RBER (CI asserts decode degrades; DESIGN.md §11).
+        self.service_refresh = service_refresh
         self.tracker = RetentionTracker(margin=margin)
         self.scheduler = RefreshScheduler(self.tracker)
         self.now = 0.0
@@ -131,13 +186,15 @@ class MemorySystem:
     def advance(self, dt: float) -> List:
         """Advance simulation time; service refresh deadlines."""
         self.now += dt
+        if not self.service_refresh:
+            return []
         actions = self.scheduler.tick(self.now)
         for a in actions:
             dev = self.devices[a.region.tier]
             if a.action == Action.REFRESH:
                 dev.write(a.region.bytes,
                           expected_lifetime_s=a.region.retention_s / self.tracker.margin,
-                          refresh=True)
+                          refresh=True, data_class=data_class_of(a.region.owner))
                 blocks = self._regions.get(a.region.region_id, (None, []))[1]
                 if blocks:
                     dev.alloc.rewrite_in_place(blocks)
@@ -152,11 +209,16 @@ class MemorySystem:
         """Allocate + write a region with DCM-programmed retention.
         Returns a region id (None = allocation failure)."""
         dev = self.devices[tier]
-        nblocks = dev.blocks_for(nbytes)
+        dc = data_class_of(owner)
+        # size the block claim at the *programmed* retention's code so the
+        # capacity ledger carries the check-bit tenant from allocation on
+        ret = dcm.plan_write(dev.tech, expected_lifetime_s).retention_s
+        nblocks = dev.blocks_for_stored(nbytes, dc, ret)
         blocks = dev.alloc.alloc(nblocks)
         if blocks is None:
             return None
-        op = dev.write(nbytes, expected_lifetime_s=expected_lifetime_s)
+        op = dev.write(nbytes, expected_lifetime_s=expected_lifetime_s,
+                       data_class=dc)
         rid = self.tracker.track(owner, tier, nblocks, nbytes, self.now,
                                  op.retention_s)
         self._regions[rid] = (tier, blocks)
@@ -168,8 +230,38 @@ class MemorySystem:
         if r is None:
             return
         self.devices[r.tier].read(nbytes if nbytes is not None else r.bytes,
-                                  sequential)
+                                  sequential, data_class=data_class_of(r.owner),
+                                  retention_s=r.retention_s)
         self.tracker.touch(rid, self.now)
+
+    def scrub_region(self, rid: int) -> bool:
+        """Scrub-on-read: re-read the region's data + check bits, correct,
+        and rewrite in place at the same retention point.
+
+        Metering invariant ("scrub-charged-as-refresh", DESIGN.md §11):
+        the read side lands in ``scrub_read_bytes`` (data + check bits,
+        read energy charged), the corrective rewrite is charged exactly
+        like a scheduled refresh — ``refresh_bytes`` + ECC check bits +
+        in-place wear — and the retention clock re-arms, so a scrubbed
+        page needs no separate refresh this deadline. Returns False for
+        unknown/released regions."""
+        r = self.tracker.get(rid)
+        if r is None:
+            return False
+        dev = self.devices[r.tier]
+        dc = data_class_of(r.owner)
+        ov = dev.ecc.overhead_for(dc, r.retention_s)
+        s = dev.stats
+        s.scrub_read_bytes += r.bytes * (1.0 + ov)
+        s.read_energy_j += r.bytes * (1.0 + ov) * 8 * dev.tech.read_energy_pj_bit * 1e-12
+        s.n_scrubs += 1
+        dev.write(r.bytes, expected_lifetime_s=r.retention_s / self.tracker.margin,
+                  refresh=True, data_class=dc)
+        blocks = self._regions.get(rid, (None, []))[1]
+        if blocks:
+            dev.alloc.scrub_in_place(blocks)
+        self.tracker.rearm(r, self.now)
+        return True
 
     def region(self, rid: int):
         """O(1) region metadata lookup (tier, bytes, deadlines)."""
@@ -182,9 +274,14 @@ class MemorySystem:
     # -- per-tier step-latency model -----------------------------------
     def snapshot(self) -> Dict[str, Tuple[float, float]]:
         """Per-tier (read_bytes, write+refresh_bytes) counters; pair with
-        :meth:`step_latency_since` to time an engine step."""
-        return {n: (d.stats.read_bytes,
-                    d.stats.write_bytes + d.stats.refresh_bytes)
+        :meth:`step_latency_since` to time an engine step. ECC check-bit
+        and scrub traffic is folded into the totals here (the wire moves
+        those bits, so the step-latency model must charge them) while the
+        per-class data counters stay ECC-free."""
+        return {n: (d.stats.read_bytes + d.stats.ecc_read_bytes
+                    + d.stats.scrub_read_bytes,
+                    d.stats.write_bytes + d.stats.refresh_bytes
+                    + d.stats.ecc_write_bytes)
                 for n, d in self.devices.items()}
 
     def step_latency_since(self, snap: Dict[str, Tuple[float, float]],
@@ -198,8 +295,10 @@ class MemorySystem:
         per_tier: Dict[str, dict] = {}
         for n, d in self.devices.items():
             r0, w0 = snap.get(n, (0.0, 0.0))
-            dr = d.stats.read_bytes - r0
-            dw = (d.stats.write_bytes + d.stats.refresh_bytes) - w0
+            dr = (d.stats.read_bytes + d.stats.ecc_read_bytes
+                  + d.stats.scrub_read_bytes) - r0
+            dw = (d.stats.write_bytes + d.stats.refresh_bytes
+                  + d.stats.ecc_write_bytes) - w0
             lat = (dr / (d.tech.read_bw_gbps * 1e9) +
                    dw / (d.tech.write_bw_gbps * 1e9))
             per_tier[n] = {"read_bytes": dr, "write_bytes": dw,
@@ -217,6 +316,7 @@ class MemorySystem:
     def report(self) -> dict:
         return {
             "now_s": self.now,
+            "ecc_profile": self.ecc_profile,
             "tiers": {n: d.report() for n, d in self.devices.items()},
             "refresh_stats": dict(self.tracker.stats),
             "total_energy_j": sum(d.energy_j for d in self.devices.values()),

@@ -39,7 +39,8 @@ def build_engine(args, cfg, full, params):
     if args.spill_tier and args.spill_tier not in tiers:
         tiers[args.spill_tier] = (get_technology(args.spill_tier),
                                   int(args.mrm_gb * 2**30))
-    mem = MemorySystem(tiers)
+    mem = MemorySystem(tiers, ecc_profile=args.ecc_profile,
+                       service_refresh=not args.no_refresh)
     return ServeEngine(
         cfg, params, mem,
         EngineConfig(max_slots=args.slots, max_cache_len=128,
@@ -58,7 +59,9 @@ def build_engine(args, cfg, full, params):
                      radix_hot_threshold=args.radix_hot_threshold,
                      radix_hot_tier=args.radix_hot_tier,
                      radix_cold_ttl_s=args.radix_cold_ttl,
-                     demote_on_pressure=args.demote_on_pressure),
+                     demote_on_pressure=args.demote_on_pressure,
+                     inject_rber=args.inject_rber,
+                     inject_seed=args.seed),
         account_cfg=full)
 
 
@@ -127,6 +130,23 @@ def main(argv=None):
                     help="fleet prefix directory migrates a hot prefix to "
                          "a less-loaded replica instead of queueing on the "
                          "owner (metered inter-replica transfer)")
+    ap.add_argument("--ecc-profile", choices=("off", "uniform", "domain"),
+                    default="off",
+                    help="reliability plane (DESIGN.md §11): meter ECC "
+                         "check bits per tier — 'uniform' sizes one strict "
+                         "code per retention point, 'domain' additionally "
+                         "lets KV/state pages use the exponent-protected / "
+                         "mantissa-relaxed split codeword (denser on "
+                         "demoted/cold pages); 'off' meters nothing")
+    ap.add_argument("--inject-rber", type=float, default=None,
+                    help="inject age-driven bit flips into paged KV/state "
+                         "pages: a page exactly at its programmed retention "
+                         "sees this raw bit error rate; correction/scrub "
+                         "behavior follows --ecc-profile (DESIGN.md §11)")
+    ap.add_argument("--no-refresh", action="store_true",
+                    help="disable retention-deadline servicing (pages age "
+                         "past retention unrefreshed) — the reliability "
+                         "gate's degradation A/B arm")
     ap.add_argument("--interconnect-gbps", type=float, default=50.0,
                     help="inter-replica transfer bandwidth in GBYTES/s — "
                          "the same unit as the memclass tier "

@@ -125,6 +125,14 @@ class EngineConfig:
     kernel_block_q: Optional[int] = None
     kernel_block_kv: Optional[int] = None
     kernel_buffers: Optional[int] = None
+    # reliability plane (DESIGN.md §11): inject age-driven bit flips into
+    # the paged KV/state pages of decoding sessions, anchored so a page
+    # exactly at its programmed retention sees this RBER (None = off).
+    # Whether flips are corrected follows the MemorySystem's ecc_profile:
+    # under an active profile, critical flips land only on uncorrectable
+    # blocks and near-deadline pages scrub-on-read instead (metered).
+    inject_rber: Optional[float] = None
+    inject_seed: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -753,6 +761,13 @@ class ServeEngine:
                 else:                      # ssm: no KV token stream
                     lb, sb = 0.0, state_lb
                 self._acct_layers.append((float(lb), spec.window, sb))
+        # fault injection (DESIGN.md §11): age-driven flips over the paged
+        # compute plane, sampled against each page's tracked region
+        self.faults = None
+        if ecfg.inject_rber:
+            from repro.core.faults import FaultInjector
+            self.faults = FaultInjector(mem, ecfg.inject_rber,
+                                        seed=ecfg.inject_seed)
         self.outputs: Dict[int, list] = {}
         self._inflight: Dict[int, _SlotPrefill] = {}  # slot -> chunk state
         self._prep_cache: Dict[int, tuple] = {}  # rid -> (tokens, chunk, key)
@@ -1358,6 +1373,51 @@ class ServeEngine:
                 page_bytes[rs] += sb
         self.kernel_read_bytes += self.kv.read_pages(rid, page_bytes)
 
+    def _inject_faults(self, slots: List[int]) -> None:
+        """Reliability-plane injection point (DESIGN.md §11): before the
+        decode kernel gathers its pages, visit every page of every decoding
+        session and let the fault injector act on its tracked region's age.
+        Near-deadline pages under an active ECC profile scrub-on-read
+        (corrected + re-armed, metered through the lifecycle); otherwise
+        sampled flips land in the compute page in place, so corruption
+        propagates through the real decode math."""
+        if self.faults is None or not self.paged:
+            return
+        import jax
+        protected = getattr(self.mem, "ecc_profile", "off") != "off"
+        for slot in slots:
+            rid = self.sched.active[slot].request_id
+            sess = self.kv.sessions.get(rid)
+            if sess is None:
+                continue
+            for page in sess.pages:
+                if page.region_id is None or page.compute_page is None:
+                    continue
+                r = self.mem.region(page.region_id)
+                if r is None:
+                    continue
+                self.faults.stats.pages_visited += 1
+                # scrub-on-read is retention servicing: with --no-refresh
+                # (service_refresh=False) the controller neither refreshes
+                # nor scrubs, so over-aged corruption lands un-corrected
+                if (protected and self.mem.service_refresh
+                        and self.faults.wants_scrub(r)):
+                    if self.kv.lifecycle.scrub(page):
+                        self.faults.note_scrub()
+                        continue
+                pid = int(page.compute_page)
+                data = self.backend.export_pages([pid])
+                leaves, treedef = jax.tree.flatten(data)
+                hit = False
+                out_leaves = []
+                for leaf in leaves:
+                    flipped, _ = self.faults.corrupt(leaf, r, protected)
+                    out_leaves.append(leaf if flipped is None else flipped)
+                    hit = hit or flipped is not None
+                if hit:
+                    self.backend.import_pages(
+                        [pid], jax.tree.unflatten(treedef, out_leaves))
+
     def _account_chunk_kv(self, st: _SlotPrefill, ck: PrefillChunk) -> None:
         """This chunk's tokens enter the paged KV — unless a shared prefix
         already holds them (prefix reuse is counted once at open)."""
@@ -1430,6 +1490,7 @@ class ServeEngine:
                 for slot in plan.decode:
                     self.kv.append_tokens(
                         self.sched.active[slot].request_id, 1)
+                self._inject_faults(plan.decode)
                 tables, audit = self._decode_tables(plan.decode)
                 next_np = self.backend.run_decode(plan.decode,
                                                   page_tables=tables,
@@ -1530,7 +1591,27 @@ class ServeEngine:
             "prefix_tokens_reused": self.kv.prefix_tokens_reused,
             "prefix": prefix,
             "latency": latency_percentiles(self.sched.latency),
+            "reliability": self._reliability_report(),
         }
+
+    def _reliability_report(self) -> dict:
+        """The reliability plane's ledger (DESIGN.md §11): ECC profile,
+        per-tier check-bit / scrub traffic, and — when injection is on —
+        the fault injector's flip/correction/uncorrectable counters."""
+        out = {
+            "ecc_profile": getattr(self.mem, "ecc_profile", "off"),
+            "tiers": {
+                n: {"ecc_read_bytes": d.stats.ecc_read_bytes,
+                    "ecc_write_bytes": d.stats.ecc_write_bytes,
+                    "scrub_read_bytes": d.stats.scrub_read_bytes,
+                    "n_scrubs": d.stats.n_scrubs,
+                    "scrub_rewrites": d.wear.scrub_rewrites}
+                for n, d in self.mem.devices.items()},
+        }
+        if self.faults is not None:
+            out["injection"] = self.faults.stats.as_dict()
+            out["inject_rber"] = self.faults.rber
+        return out
 
 
 def latency_percentiles(records: List[dict]) -> dict:

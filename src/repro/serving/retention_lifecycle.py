@@ -66,6 +66,7 @@ class LifecycleStats:
     adopted_tokens: int = 0        # tokens those pages cover
     arrivals_hot: int = 0          # migrations programmed hot on arrival
     arrivals_short: int = 0        # migrations programmed at session life
+    scrubbed_pages: int = 0        # scrub-on-read corrections (DESIGN.md §11)
 
     def as_dict(self) -> dict:
         return {
@@ -80,6 +81,7 @@ class LifecycleStats:
             "adopted_tokens": self.adopted_tokens,
             "arrivals_hot": self.arrivals_hot,
             "arrivals_short": self.arrivals_short,
+            "scrubbed_pages": self.scrubbed_pages,
         }
 
 
@@ -140,6 +142,23 @@ class RetentionLifecycle:
             nbytes, expected_lifetime_s=retention_s, refresh=True)
         self.mem.tracker.rearm(r, self.mem.now, retention_s=op.retention_s)
         return True
+
+    # -- scrub-on-read (reliability plane, DESIGN.md §11) ---------------
+    def scrub(self, page) -> bool:
+        """Correct a page whose age-driven raw error count crossed the
+        scrub threshold. Invariant (scrub-charged-as-refresh): the
+        corrective rewrite is metered exactly like a scheduled refresh —
+        refresh bytes + check bits + in-place wear — and the retention
+        clock re-arms, so scrub and refresh traffic share one budget and
+        a scrubbed page skips its next refresh deadline. This is the
+        *only* entry point for scrub metering in the serving layer, same
+        single-metering-point rule as :meth:`_reprogram`."""
+        if page.region_id is None:
+            return False
+        if self.mem.scrub_region(page.region_id):
+            self.stats.scrubbed_pages += 1
+            return True
+        return False
 
     # -- SHORT -> HOT ---------------------------------------------------
     def observe_reuse(self, node) -> None:
