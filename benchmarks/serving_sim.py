@@ -674,29 +674,10 @@ def _persist_reliability_trajectory(entry: dict) -> None:
 
 
 def _persist_trajectory(filename: str, entry: dict) -> None:
-    import json
-    import os
-    path = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), filename)
-    data = {"entries": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                data = json.load(f)
-        except (OSError, ValueError):
-            data = {"entries": []}
-    entries = data.setdefault("entries", [])
-    arch = entry.get("arch")
-    last = next((e for e in reversed(entries)
-                 if e.get("arch") == arch), None)
-    new = json.loads(json.dumps(entry, default=float))
-    if last is not None and {k: v for k, v in last.items()
-                             if k != "at"} == new:
-        return
-    entries.append({"at": time.time(), **new})
-    with open(path, "w") as f:
-        json.dump(data, f, indent=1, default=float)
-        f.write("\n")
+    # shared with experiments/run_fleet.py (BENCH_fleet.json) — one
+    # dedupe-on-identical-metrics rule for every trajectory file
+    from repro.core.trajectory import persist_trajectory
+    persist_trajectory(filename, entry, key="arch")
 
 
 def run_reliability(csv=True):

@@ -1,0 +1,5 @@
+"""Fleet-scale stress scenarios for the event-driven simulator.
+
+Not unit tests — the actual test suite is in ``tests/``. See
+``experiments/README.md`` and DESIGN.md §12.
+"""

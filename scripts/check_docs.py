@@ -8,7 +8,8 @@ Five checks, all cheap and dependency-free:
    source suffix) must exist in the repo. Catches entry points that moved
    or were renamed after the docs were written.
 2. **README CLI flags** — every `--flag` README mentions must be defined
-   somewhere under `src/repro/launch/` or `benchmarks/` (argparse
+   somewhere under `src/repro/launch/`, `benchmarks/` or `experiments/`
+   (argparse
    definitions are greppable as string literals). Catches documented
    flags that were dropped or renamed.
 3. **DESIGN.md section cross-references** — every explicit DESIGN.md
@@ -71,7 +72,8 @@ def check_readme_paths(errors: list) -> None:
 def _defined_flags() -> set:
     defined = set()
     for path in list((ROOT / "src" / "repro" / "launch").glob("*.py")) \
-            + list((ROOT / "benchmarks").glob("*.py")):
+            + list((ROOT / "benchmarks").glob("*.py")) \
+            + list((ROOT / "experiments").glob("*.py")):
         defined.update(re.findall(r"add_argument\(\s*\"(--[a-z0-9-]+)\"",
                                   path.read_text()))
     return defined

@@ -61,7 +61,8 @@ def build_engine(args, cfg, full, params):
                      radix_cold_ttl_s=args.radix_cold_ttl,
                      demote_on_pressure=args.demote_on_pressure,
                      inject_rber=args.inject_rber,
-                     inject_seed=args.seed),
+                     inject_seed=args.seed,
+                     abandon_after_s=args.abandon_after),
         account_cfg=full)
 
 
@@ -147,6 +148,16 @@ def main(argv=None):
                     help="disable retention-deadline servicing (pages age "
                          "past retention unrefreshed) — the reliability "
                          "gate's degradation A/B arm")
+    ap.add_argument("--clock", choices=("lockstep", "event"),
+                    default="lockstep",
+                    help="cluster clock discipline (DESIGN.md §12): "
+                         "'lockstep' advances every replica together each "
+                         "frontend step (the PR 3-8 compat driver); 'event' "
+                         "drains a priority event queue so replicas advance "
+                         "independently and idle ones jump their clocks")
+    ap.add_argument("--abandon-after", type=float, default=None,
+                    help="seconds a request may wait queued before the "
+                         "scheduler abandons it (None = wait forever)")
     ap.add_argument("--interconnect-gbps", type=float, default=50.0,
                     help="inter-replica transfer bandwidth in GBYTES/s — "
                          "the same unit as the memclass tier "
@@ -190,7 +201,8 @@ def main(argv=None):
     else:
         fe = ClusterFrontend(engines,
                              migrate_prefixes=args.migrate_prefixes,
-                             interconnect_gbps=args.interconnect_gbps)
+                             interconnect_gbps=args.interconnect_gbps,
+                             clock_mode=args.clock)
         for i in range(args.requests):
             fe.submit(gen_prompt(), max_new_tokens=args.max_new,
                       session_key=f"session-{i % max(args.sessions, 1)}")

@@ -3,6 +3,10 @@ from repro.serving.engine import (ComputeBackend, EngineConfig, MemoryPlane,
                                   PrefillChunk, ServeEngine, SnapshotHandle,
                                   StepPlan, StepReport, choose_hot_tier,
                                   latency_percentiles)
+from repro.serving.events import (Event, EventKind, EventQueue, EventTrace,
+                                  NonQuiescentError)
+from repro.serving.fleet_sim import (FleetConfig, FleetRequest, FleetSim,
+                                     latency_slo)
 from repro.serving.kv_cache import PagedKVManager, PressureStats, RadixStats
 from repro.serving.radix import PrefixMatch, RadixKVIndex, RadixNode
 from repro.serving.retention_lifecycle import LifecycleStats, RetentionLifecycle
@@ -14,4 +18,6 @@ __all__ = ["EngineConfig", "ServeEngine", "ComputeBackend", "MemoryPlane",
            "RetentionLifecycle", "ContinuousBatchScheduler",
            "Request", "ClusterFrontend", "PrefixDirectory", "RadixKVIndex",
            "RadixNode", "PrefixMatch", "SnapshotHandle", "choose_hot_tier",
-           "latency_percentiles"]
+           "latency_percentiles", "Event", "EventKind", "EventQueue",
+           "EventTrace", "NonQuiescentError", "FleetConfig", "FleetRequest",
+           "FleetSim", "latency_slo"]

@@ -37,12 +37,20 @@ recomputing them cold.
   tier's physical occupancy (live session pages, directory-owned
   radix-resident prefixes and metered snapshots all count, so a replica
   stuffed with pinned shared prefixes is not treated as empty);
-- **shared simulated clock** — a cluster round lasts as long as the
-  slowest replica; lagging replicas advance to the fleet clock;
+- **two clock disciplines** (DESIGN.md §12) — ``clock_mode="lockstep"``
+  is the PR 3–8 compatibility driver: a cluster round lasts as long as
+  the slowest replica and lagging replicas advance to the fleet clock
+  (every existing sweep reproduces bit-for-bit). ``clock_mode="event"``
+  runs the same replicas on the typed-event core of
+  :mod:`repro.serving.events`: each replica's steps are events on its
+  *own* clock, arrivals are timestamped events, migrations deliver at
+  the link's free time (the triggering request admits only after
+  delivery), and replicas synchronize solely through the directory, the
+  links and the fleet event queue;
 - **aggregated fleet report** — tokens, per-tier bytes, energy, pressure
   resolutions, prefix-reuse and interconnect counters, pooled TTFT/ITL
   percentiles, with the per-replica breakdown attached (conservation is
-  testable).
+  testable), plus a ``quiesced`` flag and the event-trace digest.
 """
 from __future__ import annotations
 
@@ -50,6 +58,8 @@ import hashlib
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.serving.engine import ServeEngine, latency_percentiles
+from repro.serving.events import (Event, EventKind, EventQueue, EventTrace,
+                                  NonQuiescentError)
 from repro.serving.radix import _flat
 
 
@@ -153,11 +163,16 @@ class ClusterFrontend:
                  migrate_prefixes: bool = False,
                  interconnect_gbps: float = 50.0,
                  migrate_load_gap: int = 2,
-                 prefix_affinity: bool = True):
+                 prefix_affinity: bool = True,
+                 clock_mode: str = "lockstep",
+                 record_trace: bool = False):
         if not engines:
             raise ValueError("ClusterFrontend needs at least one replica")
         if interconnect_gbps <= 0:
             raise ValueError("interconnect_gbps must be > 0")
+        if clock_mode not in ("lockstep", "event"):
+            raise ValueError(f"unknown clock_mode {clock_mode!r}")
+        self.clock_mode = clock_mode
         self.engines = list(engines)
         self.migrate_prefixes = migrate_prefixes
         # GBYTES/s — deliberately the same (historically misnamed) unit as
@@ -202,6 +217,17 @@ class ClusterFrontend:
                     self.directory.invalidate(_i, tokens, tail))
             for node in e.kv.radix.nodes():
                 self.directory.register(i, e.kv.radix.full_key(node))
+        # event clock (DESIGN.md §12): typed events on a deterministic
+        # queue; replicas advance independently. Unused in lockstep mode.
+        self.events = EventQueue()
+        self.trace = EventTrace(record=record_trace)
+        self._pending_arrivals: Dict[int, tuple] = {}  # rid -> submit args
+        self._step_pending: Dict[int, bool] = {}
+        self._step_seq: Dict[int, int] = {}
+        self._last_delivery_at: Optional[float] = None
+        self._route_time = 0.0
+        self._migration_seq = 0
+        self._decay_next: Dict[int, Optional[float]] = {}
 
     # ------------------------------------------------------------------
     @property
@@ -250,17 +276,27 @@ class ClusterFrontend:
         if moved > 0:
             # admission control on the receiver's one interconnect link:
             # the transfer starts when the link frees (queue wait, ROADMAP)
-            # and occupies it for bytes / bandwidth. The receiver's clock
-            # is advanced to the delivery time at the next cluster step
-            # (see _flush_transfer) — after the triggering requests are
-            # enqueued, so their TTFT pays queue wait + transfer.
+            # and occupies it for bytes / bandwidth. Lockstep advances the
+            # receiver's clock at the next cluster step (_flush_transfer);
+            # event mode schedules a MIGRATION_DELIVERY event at the
+            # link-free time and gates the triggering request's admission
+            # on it. Either way TTFT pays queue wait + transfer.
             dur = moved / (self.interconnect_gbps * 1e9)
-            t_req = e.mem.now
+            t_req = (self._route_time if self.clock_mode == "event"
+                     else e.mem.now)
             start = max(t_req, self._link_busy_until.get(target, 0.0))
             wait = start - t_req
             self._link_busy_until[target] = start + dur
-            self._pending_transfer[target] = \
-                self._link_busy_until[target] - t_req
+            if self.clock_mode == "event":
+                self._last_delivery_at = self._link_busy_until[target]
+                self._migration_seq += 1
+                self.events.push(Event(self._last_delivery_at,
+                                       EventKind.MIGRATION_DELIVERY, target,
+                                       key=self._migration_seq,
+                                       info=(imp["new_tokens"],)))
+            else:
+                self._pending_transfer[target] = \
+                    self._link_busy_until[target] - t_req
             if wait > 0:
                 self.migrations_queued += 1
                 self.migration_queue_wait_s += wait
@@ -326,8 +362,30 @@ class ClusterFrontend:
         return min(range(len(self.engines)), key=self._load_key)
 
     def submit(self, prompt_tokens: list, max_new_tokens: int,
-               session_key: Optional[str] = None) -> int:
-        """Route and enqueue a request; returns a cluster-wide request id."""
+               session_key: Optional[str] = None,
+               at: Optional[float] = None,
+               abandon_after_s: Optional[float] = None) -> int:
+        """Route and enqueue a request; returns a cluster-wide request id.
+
+        Lockstep mode routes immediately on the shared clock (exactly the
+        PR 3–8 behavior). Event mode records an ARRIVAL event at ``at``
+        (default: the fleet clock) — routing happens when the event
+        fires, against the replica loads of *that* simulated instant, and
+        an optional ``abandon_after_s`` schedules a timeout event that
+        drops the request if it is still queued."""
+        rid = self._next_rid
+        self._next_rid += 1
+        if self.clock_mode == "event":
+            t = self.now if at is None else at
+            self._pending_arrivals[rid] = (
+                prompt_tokens, max_new_tokens, session_key)
+            self.events.push(Event(max(t, self.events.last_time),
+                                   EventKind.ARRIVAL, -1, key=rid))
+            if abandon_after_s is not None:
+                self.events.push(Event(max(t, self.events.last_time)
+                                       + abandon_after_s,
+                                       EventKind.ABANDON, -1, key=rid))
+            return rid
         self._last_migrated = 0
         replica = self.route(session_key, prompt_tokens)
         local = self.engines[replica].submit(
@@ -338,8 +396,6 @@ class ClusterFrontend:
         # pays the link's queue wait + transfer time); deferring past the
         # whole submit burst is what makes same-burst migrations to one
         # receiver contend for its link (admission control)
-        rid = self._next_rid
-        self._next_rid += 1
         self.requests[rid] = (replica, local)
         return rid
 
@@ -368,10 +424,159 @@ class ClusterFrontend:
         self.steps += 1
         return {"now_s": now, "busy_replicas": len(busy)}
 
-    def run_until_idle(self, max_steps: int = 10000) -> dict:
-        while not self.idle and self.steps < max_steps:
-            self.step()
+    # -- event clock (DESIGN.md §12) -----------------------------------
+    def _ensure_step(self, i: int, t: float) -> None:
+        """Schedule a STEP event for replica ``i`` no earlier than its own
+        clock — an idle replica's clock *jumps* to the arrival instant at
+        the step (replicas advance independently)."""
+        if self._step_pending.get(i):
+            return
+        self._step_pending[i] = True
+        self._step_seq[i] = self._step_seq.get(i, 0) + 1
+        when = max(self.engines[i].mem.now, t, self.events.last_time)
+        self.events.push(Event(when, EventKind.STEP, i,
+                               key=self._step_seq[i]))
+
+    def _ev_arrival(self, ev: Event) -> None:
+        prompt_tokens, max_new_tokens, session_key = \
+            self._pending_arrivals.pop(ev.key)
+        self._last_migrated = 0
+        self._last_delivery_at = None
+        self._route_time = ev.time
+        replica = self.route(session_key, prompt_tokens)
+        admit_after = (self._last_delivery_at
+                       if self._last_delivery_at is not None else ev.time)
+        local = self.engines[replica].submit(
+            prompt_tokens, max_new_tokens,
+            migrated_tokens=self._last_migrated,
+            at=ev.time, admit_after=admit_after)
+        self.requests[ev.key] = (replica, local)
+        self._ensure_step(replica, max(ev.time, admit_after))
+
+    def _schedule_decay(self, i: int) -> None:
+        """Wall-clock retention decay (DESIGN.md §12): instead of per-step
+        polling, an idle replica gets a RETENTION_DECAY event at the
+        earliest leaf deadline — its clock jumps there and the cold sweep
+        runs exactly on time. Already-due leaves sweep inline."""
+        e = self.engines[i]
+        due = e.kv.next_decay_due()
+        if due is None:
+            return
+        if due <= e.mem.now:
+            e.kv.maintain()
+            due = e.kv.next_decay_due()
+            if due is None or due <= e.mem.now:
+                return  # nothing further can decay (e.g. spilled leaves)
+        cur = self._decay_next.get(i)
+        due = max(due + 1e-9, self.events.last_time)  # decay_due is strict >
+        if cur is not None and cur <= due:
+            return
+        self._decay_next[i] = due
+        self.events.push(Event(due, EventKind.RETENTION_DECAY, i))
+
+    def _ev_decay(self, ev: Event) -> None:
+        self._decay_next[ev.replica] = None
+        e = self.engines[ev.replica]
+        if not e.sched.idle:
+            return  # busy replica: per-step maintain() already polls
+        if e.mem.now < ev.time:
+            e.mem.advance(ev.time - e.mem.now)
+        e.kv.maintain()
+        self._schedule_decay(ev.replica)
+
+    def _ev_step(self, ev: Event) -> None:
+        i = ev.replica
+        self._step_pending[i] = False
+        e = self.engines[i]
+        if e.sched.idle:
+            return
+        if e.mem.now < ev.time:
+            e.mem.advance(ev.time - e.mem.now)
+        before = e.mem.now
+        e.step()
+        self.steps += 1
+        if e.sched.idle:
+            self._schedule_decay(i)
+            return
+        next_t = e.mem.now
+        if next_t <= before + 1e-12:
+            # the step did no work: everything queued admits in the
+            # future (in-flight migration) — sleep to the earliest
+            future = [r.admit_after for r in e.sched.queue
+                      if r.admit_after > before]
+            if not future:
+                raise NonQuiescentError(
+                    f"replica {i} stalled at t={before}: work queued but "
+                    "no step progress and no future admission")
+            next_t = min(future)
+        self._ensure_step(i, next_t)
+
+    def _ev_delivery(self, ev: Event) -> None:
+        # pages were grafted (and metered) at migration time; the event
+        # marks when the link actually frees. An otherwise-idle receiver
+        # moves its clock to the delivery instant so later steps (and the
+        # gated request's admission) start after the wire time.
+        e = self.engines[ev.replica]
+        if e.mem.now < ev.time:
+            e.mem.advance(ev.time - e.mem.now)
+        self._ensure_step(ev.replica, ev.time)
+
+    def _ev_abandon(self, ev: Event) -> None:
+        entry = self.requests.get(ev.key)
+        if entry is None:
+            return  # arrival never fired (cancelled before routing)
+        replica, local = entry
+        self.engines[replica].sched.abandon(local, ev.time)
+
+    _EVENT_HANDLERS = {
+        EventKind.ARRIVAL: _ev_arrival,
+        EventKind.STEP: _ev_step,
+        EventKind.MIGRATION_DELIVERY: _ev_delivery,
+        EventKind.ABANDON: _ev_abandon,
+        EventKind.RETENTION_DECAY: _ev_decay,
+    }
+
+    def run_events(self, max_events: int = 1_000_000,
+                   on_stall: str = "raise") -> dict:
+        """Drain the event queue (event clock mode): replicas step on
+        their own clocks, synchronizing only through the directory, the
+        interconnect links and the fleet event queue."""
+        for i, e in enumerate(self.engines):
+            if e.sched.idle:
+                self._schedule_decay(i)  # pre-existing trees decay on time
+        processed = 0
+        while self.events:
+            if processed >= max_events:
+                rep = self.report()
+                if on_stall == "report":
+                    return rep
+                raise NonQuiescentError(
+                    f"cluster not quiescent after {processed} events: "
+                    f"{len(self.events)} pending", rep)
+            ev = self.events.pop()
+            self.trace.add(ev)
+            self._EVENT_HANDLERS[ev.kind](self, ev)
+            processed += 1
         return self.report()
+
+    def run_until_idle(self, max_steps: int = 10000,
+                       on_stall: str = "raise") -> dict:
+        """Run to quiescence. Exhausting the budget with requests still
+        queued raises :class:`NonQuiescentError` (default) or returns the
+        report flagged ``quiesced=False`` (``on_stall="report"``) — the
+        PR 1–8 behavior was a silent truncated return."""
+        if self.clock_mode == "event":
+            return self.run_events(max_events=max_steps, on_stall=on_stall)
+        start = self.steps
+        while not self.idle and self.steps - start < max_steps:
+            self.step()
+        rep = self.report()
+        if not self.idle and on_stall != "report":
+            raise NonQuiescentError(
+                f"cluster not quiescent after {max_steps} steps: "
+                f"{sum(len(e.sched.queue) + len(e.sched.active) for e in self.engines)}"
+                " requests pending", rep)
+        return rep
 
     # ------------------------------------------------------------------
     def report(self) -> dict:
@@ -395,7 +600,13 @@ class ClusterFrontend:
         return {
             "replicas": len(self.engines),
             "cluster_steps": self.steps,
+            "clock_mode": self.clock_mode,
             "sim_time_s": self.now,
+            "quiesced": self.idle,
+            "pending_requests": sum(len(e.sched.queue) + len(e.sched.active)
+                                    for e in self.engines),
+            "abandoned": sum(e.sched.stats.abandoned for e in self.engines),
+            "trace": self.trace.as_dict(),
             "finished": sum(r["finished"] for r in reps),
             "tokens_generated": tokens,
             "fleet_tokens_per_s": tokens / max(self.now, 1e-9),

@@ -133,6 +133,10 @@ class EngineConfig:
     # blocks and near-deadline pages scrub-on-read instead (metered).
     inject_rber: Optional[float] = None
     inject_seed: int = 0
+    # abandonment (DESIGN.md §12): queued requests older than this are
+    # dropped before admission — the user hung up before first token.
+    # Sessions already holding slots always run to completion (None = off).
+    abandon_after_s: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -814,11 +818,18 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens: list, max_new_tokens: int,
-               migrated_tokens: int = 0) -> int:
+               migrated_tokens: int = 0, at: Optional[float] = None,
+               admit_after: Optional[float] = None) -> int:
         """``migrated_tokens`` marks how many leading tokens a cross-replica
         migration just grafted into this replica's tree for this request —
         the scheduler counts them as a match for prefix-aware admission
         even if the grafted leaf is evicted before the request is picked.
+
+        ``at`` stamps an explicit arrival time (event-driven drivers
+        submit from a fleet clock that may be ahead of this replica's);
+        ``admit_after`` defers admission — an event-mode migration lands
+        its pages at the link's delivery time and the triggering request
+        waits for them, so its TTFT pays queue wait + transfer.
 
         Any prompt length is admissible: there is one unpadded chunked
         path (DESIGN.md §5), and a prompt longer than the smallest
@@ -827,9 +838,12 @@ class ServeEngine:
         window's tail, exactly as decode does."""
         rid = len(self.outputs)
         self.outputs[rid] = []
+        submitted = self.mem.now if at is None else at
         self.sched.submit(Request(rid, prompt_tokens, max_new_tokens,
-                                  self.mem.now,
-                                  migrated_tokens=migrated_tokens))
+                                  submitted,
+                                  migrated_tokens=migrated_tokens,
+                                  admit_after=(submitted if admit_after is None
+                                               else admit_after)))
         return rid
 
     # ------------------------------------------------------------------
@@ -1081,6 +1095,11 @@ class ServeEngine:
         admissions fill the remaining prefill budget — preferring queued
         requests that share a hot prefix (prefix-aware admission)."""
         plan = StepPlan()
+        if self.ecfg.abandon_after_s is not None:
+            # queued sessions older than the timeout hung up before first
+            # token; sweep them before admission so they never take a slot
+            self.sched.abandon_timed_out(self.mem.now,
+                                         self.ecfg.abandon_after_s)
         prefix_len = self.backend.prefix_len()
         budget = self.ecfg.max_prefills_per_step
         for slot in sorted(self._inflight):
@@ -1092,7 +1111,8 @@ class ServeEngine:
             match_len = (self._sched_match_len if self.ecfg.prefix_caching
                          else None)
             for slot, req in self.sched.admissions(limit=budget,
-                                                   match_len=match_len):
+                                                   match_len=match_len,
+                                                   now=self.mem.now):
                 st = self._admit(slot, req)
                 plan.prefill.append(st.next_chunk(slot, prefix_len))
                 budget -= 1
@@ -1547,10 +1567,24 @@ class ServeEngine:
                 "queued": len(self.sched.queue)}
 
     # ------------------------------------------------------------------
-    def run_until_idle(self, max_steps: int = 10000) -> dict:
-        while not self.sched.idle and self.steps < max_steps:
+    def run_until_idle(self, max_steps: int = 10000,
+                       on_stall: str = "raise") -> dict:
+        """Step until the scheduler drains. Exhausting ``max_steps`` with
+        work still queued/resident is *non-quiescence*: an explicit
+        :class:`~repro.serving.events.NonQuiescentError` by default, or —
+        with ``on_stall="report"`` — the report with ``quiesced=False``
+        (the PR 1–8 behavior silently returned a truncated report)."""
+        from repro.serving.events import NonQuiescentError
+        start = self.steps
+        while not self.sched.idle and self.steps - start < max_steps:
             self.step()
-        return self.report()
+        rep = self.report()
+        if not self.sched.idle and on_stall != "report":
+            raise NonQuiescentError(
+                f"engine not quiescent after {max_steps} steps: "
+                f"{len(self.sched.queue)} queued, "
+                f"{len(self.sched.active)} resident", rep)
+        return rep
 
     def report(self) -> dict:
         rep = self.memplane.report()
@@ -1575,6 +1609,9 @@ class ServeEngine:
             "seed_copy_bytes": self.backend.seed_copy_bytes,
             "tokens_generated": self.tokens_generated,
             "finished": self.sched.stats.finished,
+            "abandoned": self.sched.stats.abandoned,
+            "quiesced": self.sched.idle,
+            "pending_requests": len(self.sched.queue) + len(self.sched.active),
             "sim_time_s": self.mem.now,
             "tokens_per_s": self.tokens_generated / max(self.mem.now, 1e-9),
             "energy_per_token_j": total_energy / max(self.tokens_generated, 1),

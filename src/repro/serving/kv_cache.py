@@ -475,6 +475,19 @@ class PagedKVManager:
                     self._unref_page(page)
                 self.lifecycle.note_decay()
 
+    def next_decay_due(self) -> Optional[float]:
+        """Earliest wall-clock time any evictable leaf becomes decay-due
+        (None when decay is off or nothing can decay). The event-driven
+        clock (DESIGN.md §12) schedules a RETENTION_DECAY event at this
+        instant instead of polling :meth:`maintain` every step — an idle
+        replica whose clock jumps between arrivals still decays on time."""
+        if self.lifecycle.cold_ttl_s is None:
+            return None
+        deadlines = [self.lifecycle.decay_deadline(leaf)
+                     for leaf in self.radix.evictable_leaves()]
+        deadlines = [d for d in deadlines if d is not None]
+        return min(deadlines) if deadlines else None
+
     # -- capacity pressure ---------------------------------------------
     def _unref_page(self, page: Page) -> None:
         page.refcount -= 1

@@ -220,6 +220,14 @@ class RetentionLifecycle:
             return False
         return now - node.last_access > self.cold_ttl_s
 
+    def decay_deadline(self, node) -> Optional[float]:
+        """Wall-clock instant this node becomes decay-due — the
+        event-driven clock schedules a RETENTION_DECAY event here instead
+        of polling :meth:`decay_due` every step (DESIGN.md §12)."""
+        if self.cold_ttl_s is None:
+            return None
+        return node.last_access + self.cold_ttl_s
+
     def spill_cold(self, node, now: float) -> int:
         """Cold demotion to the spill tier: move every page that is not
         already there (migration read + colder write, session retention).

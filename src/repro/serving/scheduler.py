@@ -39,6 +39,11 @@ class Request:
     # request: prefix-aware admission counts them as a match even if the
     # grafted leaf is evicted before the request is picked
     migrated_tokens: int = 0
+    # earliest simulated time this request may be admitted — event-mode
+    # migrations land their pages at the link's delivery time, and the
+    # triggering request waits for them (TTFT pays queue wait + transfer)
+    admit_after: float = 0.0
+    abandoned_at: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -55,6 +60,7 @@ class SchedulerStats:
     prefill_chunks: int = 0
     prefix_reorders: int = 0  # admissions that jumped the FIFO order
     migrated_admissions: int = 0  # admitted requests with a migrated prefix
+    abandoned: int = 0        # queued requests dropped by timeout/cancel
 
 
 class ContinuousBatchScheduler:
@@ -82,36 +88,58 @@ class ContinuousBatchScheduler:
         self.queue.append(req)
         self.stats.queue_peak = max(self.stats.queue_peak, len(self.queue))
 
-    def _pick(self, match_len: Optional[Callable[[Request], int]]) -> Request:
+    def _pick(self, match_len: Optional[Callable[[Request], int]],
+              now: Optional[float] = None) -> Optional[Request]:
         """Next request to admit: FIFO head, unless prefix-aware scoring
-        finds a longer-match request further back (bounded by max_skip)."""
-        if match_len is None or len(self.queue) == 1:
-            return self.queue.popleft()
-        head = self.queue[0]
+        finds a longer-match request further back (bounded by max_skip).
+        With ``now`` (arrival-time admission, event clock), requests whose
+        ``admit_after`` is still in the future are invisible — their pages
+        (or their arrival itself) haven't happened yet on this replica's
+        clock. Returns None when nothing is admissible."""
+        if now is None:
+            eligible = list(range(len(self.queue)))
+        else:
+            eligible = [i for i, r in enumerate(self.queue)
+                        if r.admit_after <= now]
+            if not eligible:
+                return None
+
+        def _take(idx: int) -> Request:
+            req = self.queue[idx]
+            del self.queue[idx]
+            return req
+
+        first = eligible[0]
+        if match_len is None or len(eligible) == 1:
+            return _take(first)
+        head = self.queue[first]
         if head.sched_skipped >= self.max_skip:
-            return self.queue.popleft()
+            return _take(first)
         # a freshly migrated prefix scores as a match even when the
         # grafted leaf was evicted between migration and admission
-        scores = [max(match_len(r), r.migrated_tokens) for r in self.queue]
+        scores = [max(match_len(self.queue[i]), self.queue[i].migrated_tokens)
+                  for i in eligible]
         best = max(scores)
-        idx = scores.index(best)  # earliest submitter among ties (FIFO)
-        if idx == 0 or best <= 0:
-            return self.queue.popleft()
-        req = self.queue[idx]
-        del self.queue[idx]
-        for r in list(self.queue)[:idx]:
-            r.sched_skipped += 1
+        idx = eligible[scores.index(best)]  # earliest submitter among ties
+        if idx == first or best <= 0:
+            return _take(first)
+        req = _take(idx)
+        for i in eligible:
+            if i < idx:  # indices below idx are unshifted by the delete
+                self.queue[i].sched_skipped += 1
         self.stats.prefix_reorders += 1
         return req
 
     def admissions(self, limit: Optional[int] = None,
-                   match_len: Optional[Callable[[Request], int]] = None
-                   ) -> List[tuple]:
+                   match_len: Optional[Callable[[Request], int]] = None,
+                   now: Optional[float] = None) -> List[tuple]:
         """Pick (slot, request) pairs to start prefilling this step."""
         n = self.max_prefills if limit is None else min(limit, self.max_prefills)
         out = []
         while self.queue and self.free_slots and len(out) < n:
-            req = self._pick(match_len)
+            req = self._pick(match_len, now)
+            if req is None:
+                break
             slot = self.free_slots.pop(0)
             self.active[slot] = req
             self.stats.admitted += 1
@@ -120,6 +148,31 @@ class ContinuousBatchScheduler:
             self.stats.prefill_tokens += req.prompt_len
             out.append((slot, req))
         return out
+
+    def abandon_timed_out(self, now: float, timeout: float) -> List[Request]:
+        """Drop queued requests older than ``timeout`` — the user hung up
+        before first token. Only *queued* requests abandon (a session
+        already holding slots runs to completion); every dropped request
+        is fully removed, so abandonment can never leak queue entries."""
+        dropped = [r for r in self.queue if now - r.submitted_at >= timeout]
+        if dropped:
+            self.queue = deque(r for r in self.queue
+                               if now - r.submitted_at < timeout)
+            for r in dropped:
+                r.abandoned_at = now
+            self.stats.abandoned += len(dropped)
+        return dropped
+
+    def abandon(self, request_id: int, now: float) -> bool:
+        """Drop one queued request by id (event-driven abandonment).
+        Returns False if it already left the queue (admitted/finished)."""
+        for i, r in enumerate(self.queue):
+            if r.request_id == request_id:
+                del self.queue[i]
+                r.abandoned_at = now
+                self.stats.abandoned += 1
+                return True
+        return False
 
     # -- chunked-prefill phase tracking (engine-driven) ----------------
     def mark_prefilling(self, slot: int) -> None:

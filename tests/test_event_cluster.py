@@ -1,0 +1,173 @@
+"""Event-driven clock discipline on the *real* serving cluster
+(DESIGN.md §12): the event queue drives actual ``ServeEngine`` replicas —
+decoded tokens must match the lockstep compat driver bit-for-bit, event
+traces must replay identically, non-quiescence must raise or flag
+(never silently return), and queued-request abandonment must drop
+requests without leaking queue entries.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.memclass import HBM3E, MRM_RRAM
+from repro.core.simulator import MemorySystem
+from repro.serving import (ClusterFrontend, EngineConfig, NonQuiescentError,
+                           ServeEngine)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.models import init_params
+    full = get_config("deepseek-7b")
+    cfg = reduced(full)
+    return full, cfg, init_params(cfg, jax.random.key(0))
+
+
+def _mk_engine(full, cfg, params, **kw):
+    mem = MemorySystem({"mrm": (MRM_RRAM, 64 << 30), "hbm": (HBM3E, 16 << 30)})
+    ecfg = dict(max_slots=2, max_cache_len=96, weight_tier="hbm",
+                kv_tier="mrm", eos_token=-1, chunk_tokens=16, page_tokens=16)
+    ecfg.update(kw)
+    return ServeEngine(cfg, params, mem, EngineConfig(**ecfg), account_cfg=full)
+
+
+def _mk_cluster(setup, n=2, clock_mode="event", **kw):
+    full, cfg, params = setup
+    engines = [_mk_engine(full, cfg, params) for _ in range(n)]
+    return ClusterFrontend(engines, clock_mode=clock_mode, **kw)
+
+
+def _prompts(cfg, n=3, shared=32, tail=16, seed=0):
+    rng = np.random.default_rng(seed)
+    head = list(rng.integers(2, cfg.vocab_size, shared))
+    return [head + list(rng.integers(2, cfg.vocab_size, tail))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# lockstep <-> event equivalence on real engines
+# ---------------------------------------------------------------------------
+
+
+def test_event_clock_matches_lockstep_tokens(setup):
+    _, cfg, _ = setup
+    prompts = _prompts(cfg)
+
+    def run(clock_mode):
+        fe = _mk_cluster(setup, clock_mode=clock_mode,
+                         migrate_prefixes=True, migrate_load_gap=-1,
+                         record_trace=True)
+        # wave 1 establishes the shared head on one replica; the fan-out
+        # wave then hits the directory and migrates (fleet_reuse shape)
+        rids = [fe.submit(list(prompts[0]), 6, session_key="s0")]
+        fe.run_until_idle()
+        rids += [fe.submit(list(p), 6, session_key=f"s{i}")
+                 for i, p in enumerate(prompts[1:], start=1)]
+        rep = fe.run_until_idle()
+        return fe, rep, [list(fe.output(r)) for r in rids]
+
+    _, rep_ev, toks_ev = run("event")
+    _, rep_ls, toks_ls = run("lockstep")
+    assert toks_ev == toks_ls, "event clock changed decoded tokens"
+    assert rep_ev["finished"] == rep_ls["finished"] == len(prompts)
+    assert rep_ev["quiesced"] and rep_ls["quiesced"]
+    assert rep_ev["clock_mode"] == "event"
+    assert rep_ls["clock_mode"] == "lockstep"
+    # migration still flowed through the event-scheduled delivery path
+    assert rep_ev["interconnect"]["migrations"] > 0
+
+
+def test_event_trace_is_replay_identical(setup):
+    _, cfg, _ = setup
+    prompts = _prompts(cfg)
+
+    def run():
+        fe = _mk_cluster(setup, migrate_prefixes=True, record_trace=True)
+        for i, p in enumerate(prompts):
+            fe.submit(list(p), 4, session_key=f"s{i}")
+        rep = fe.run_until_idle()
+        return rep["trace"]["digest"], fe.trace.events
+
+    d1, ev1 = run()
+    d2, ev2 = run()
+    assert d1 == d2 and ev1 == ev2
+    # per-replica event times never run backwards
+    last = {}
+    for (t, kind, replica, key, info) in ev1:
+        assert t >= last.get(replica, 0.0) - 1e-12
+        last[replica] = t
+
+
+# ---------------------------------------------------------------------------
+# non-quiescence is loud (the silent-max_steps fix)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stall_raises_with_partial_report(setup):
+    full, cfg, params = setup
+    eng = _mk_engine(full, cfg, params)
+    eng.submit(list(range(2, 34)), 8)
+    with pytest.raises(NonQuiescentError, match="not quiescent") as ei:
+        eng.run_until_idle(max_steps=1)
+    assert ei.value.report["quiesced"] is False
+    assert ei.value.report["pending_requests"] >= 1
+
+
+def test_engine_stall_report_mode_flags_and_resumes(setup):
+    full, cfg, params = setup
+    eng = _mk_engine(full, cfg, params)
+    eng.submit(list(range(2, 34)), 8)
+    rep = eng.run_until_idle(max_steps=1, on_stall="report")
+    assert rep["quiesced"] is False and rep["pending_requests"] >= 1
+    rep = eng.run_until_idle()
+    assert rep["quiesced"] is True and rep["pending_requests"] == 0
+    assert rep["finished"] == 1
+
+
+@pytest.mark.parametrize("clock_mode", ["lockstep", "event"])
+def test_cluster_stall_paths(setup, clock_mode):
+    _, cfg, _ = setup
+    fe = _mk_cluster(setup, clock_mode=clock_mode)
+    fe.submit(_prompts(cfg, n=1)[0], 8, session_key="a")
+    budget = dict(max_steps=1) if clock_mode == "lockstep" else \
+        dict(max_steps=1)
+    with pytest.raises(NonQuiescentError):
+        fe.run_until_idle(**budget)
+    rep = fe.run_until_idle(on_stall="report", **budget)
+    assert rep["quiesced"] is False
+    rep = fe.run_until_idle()
+    assert rep["quiesced"] is True and rep["finished"] == 1
+
+
+# ---------------------------------------------------------------------------
+# abandonment on the real scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_engine_abandons_timed_out_queued_requests(setup):
+    full, cfg, params = setup
+    eng = _mk_engine(full, cfg, params, max_slots=1,
+                     abandon_after_s=1e-6)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(list(rng.integers(2, cfg.vocab_size, 24)), 8)
+    rep = eng.run_until_idle()
+    assert rep["quiesced"] is True
+    # slot holder finishes; the queue drains by timeout, never leaks
+    assert rep["finished"] >= 1 and rep["abandoned"] >= 1
+    assert rep["finished"] + rep["abandoned"] == 3
+    assert rep["pending_requests"] == 0
+
+
+def test_cluster_event_abandon_only_hits_queued_requests(setup):
+    full, cfg, params = setup
+    fe = ClusterFrontend([_mk_engine(full, cfg, params, max_slots=1)],
+                         clock_mode="event")
+    prompts = _prompts(cfg, n=3, seed=1)
+    # generous timeout: every request admits before its deadline
+    rids = [fe.submit(list(p), 4, session_key=f"s{i}", abandon_after_s=1e9)
+            for i, p in enumerate(prompts)]
+    rep = fe.run_until_idle()
+    assert rep["finished"] == 3 and rep["abandoned"] == 0
+    assert all(len(list(fe.output(r))) == 4 for r in rids)

@@ -1,0 +1,52 @@
+"""Compat-driver regression (DESIGN.md §12): the lockstep clock is the
+default, so every pre-event-core sweep must keep reproducing its gated
+metrics unchanged — the benchmark sweeps run here downscaled, with their
+internal gates (pressure-ledger balance, no silent drops, fleet prefill
+cut, decode equivalence) still armed.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.serving import ClusterFrontend
+
+
+def test_lockstep_is_the_default_clock():
+    """Existing callers constructed ClusterFrontend without a clock_mode;
+    the compat guarantee is that they still get lockstep semantics."""
+    import inspect
+    sig = inspect.signature(ClusterFrontend.__init__)
+    assert sig.parameters["clock_mode"].default == "lockstep"
+    with pytest.raises(ValueError, match="clock_mode"):
+        # clock_mode is validated before the engine list is touched
+        ClusterFrontend([object()], clock_mode="warp")
+
+
+def test_cluster_sweep_reproduces_gated_metrics():
+    """The PR 3 capacity-pressure replica sweep, downscaled. Its internal
+    gates assert the pressure ledger balances, nothing was silently
+    dropped, and fleet tokens equal the per-replica sum."""
+    from benchmarks.serving_sim import cluster_sweep
+    out = cluster_sweep(replica_counts=(2,), requests=6)
+    row = out["replicas_2"]
+    assert row["finished"] == 6
+    assert row["pressure_events"] > 0
+    assert row["pressure_events"] == row["pressure_resolved"]
+    assert row["dropped_allocs"] == 0
+    assert row["tokens_generated"] > 0
+    assert row["ttft_p50_s"] > 0
+
+
+def test_fleet_reuse_sweep_reproduces_gated_metrics():
+    """The PR 7 fleet-migration A/B, downscaled. Its internal gates
+    assert decode equivalence between the fleet and per-replica arms,
+    ledger balance, real migrations, and a >=20% fleet prefill cut."""
+    from benchmarks.serving_sim import fleet_reuse
+    out = fleet_reuse(replicas=2, fanout=6)
+    assert out["ledger_imbalance"] == 0
+    assert out["migrations"] > 0 and out["cross_replica_hits"] > 0
+    assert out["prefill_cut"] >= 0.20
+    assert out["dropped_allocs"] == 0

@@ -1,0 +1,272 @@
+"""Determinism + invariant harness for the event-driven fleet plane
+(DESIGN.md §12): content-derived event ordering, bit-identical trace
+hashes across reruns *and* across tie-break insertion shuffles, and the
+conservation invariants (token/page/refcount ledgers, abandonment never
+leaks, pinned prefixes never decay while referenced) checked after every
+processed event. Pure-python analytic simulator — no jax, runs in
+milliseconds.
+"""
+import random
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.serving.events import (Event, EventKind, EventQueue, EventTrace,
+                                  NonQuiescentError)
+from repro.serving.fleet_sim import FleetConfig, FleetRequest, FleetSim
+
+from experiments.scenarios import build
+
+
+# ---------------------------------------------------------------------------
+# EventQueue / EventTrace primitives
+# ---------------------------------------------------------------------------
+
+
+def _event_soup(rng, n=200):
+    """Events with heavy timestamp collisions to stress the tie-breaks."""
+    return [Event(time=rng.choice([0.0, 1.0, 1.0, 2.5]),
+                  kind=rng.choice(list(EventKind)),
+                  replica=rng.randrange(4),
+                  key=rng.randrange(8),
+                  info=(i,))
+            for i in range(n)]
+
+
+def test_event_queue_pop_order_is_content_derived():
+    rng = random.Random(7)
+    events = _event_soup(rng)
+    reference = None
+    for shuffle_seed in range(5):
+        shuffled = list(events)
+        random.Random(shuffle_seed).shuffle(shuffled)
+        q = EventQueue()
+        for ev in shuffled:
+            q.push(ev)
+        order = [ev.sort_key for ev in q.drain()]
+        assert order == sorted(order), "pop order not sorted by sort_key"
+        if reference is None:
+            reference = order
+        assert order == reference, \
+            f"insertion shuffle {shuffle_seed} changed pop order"
+
+
+def test_event_queue_rejects_scheduling_in_the_past():
+    q = EventQueue()
+    q.push(Event(5.0, EventKind.ARRIVAL, 0))
+    q.pop()
+    assert q.last_time == 5.0
+    with pytest.raises(ValueError, match="past"):
+        q.push(Event(4.0, EventKind.STEP, 0))
+
+
+def test_trace_digest_reflects_event_content():
+    a, b = EventTrace(), EventTrace()
+    ev = Event(1.0, EventKind.ARRIVAL, 0, key=3, info=("x",))
+    a.add(ev)
+    b.add(ev)
+    assert a.digest() == b.digest()
+    b.add(Event(1.0, EventKind.ARRIVAL, 0, key=4))
+    assert a.digest() != b.digest()
+    assert b.n_events == 2
+
+
+# ---------------------------------------------------------------------------
+# FleetSim determinism
+# ---------------------------------------------------------------------------
+
+
+def _mk_requests(n=300, groups=6, seed=0, abandon_after_s=None,
+                 max_new=64):
+    rng = random.Random(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        t += rng.expovariate(2000.0)
+        reqs.append(FleetRequest(
+            session_key=i, group=rng.randrange(groups),
+            shared_tokens=512, unique_tokens=rng.randrange(32, 256),
+            max_new_tokens=rng.randrange(8, max_new), arrival_s=t,
+            abandon_after_s=abandon_after_s))
+    return reqs
+
+
+def _small_cfg(**kw):
+    base = dict(n_replicas=2, slots_per_replica=4, max_prefills_per_round=4)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def _run(reqs, cfg=None):
+    sim = FleetSim(cfg or _small_cfg())
+    for r in reqs:
+        sim.submit(r)
+    report = sim.run()
+    sim.check()
+    return sim, report
+
+
+def test_same_seed_runs_are_bit_identical():
+    _, rep_a = _run(_mk_requests())
+    _, rep_b = _run(_mk_requests())
+    assert rep_a["trace"]["digest"] == rep_b["trace"]["digest"]
+    assert rep_a == rep_b
+
+
+def test_submission_order_shuffle_is_bit_identical():
+    """The determinism satellite: the event queue orders by content, so
+    submitting the same request set in any order replays identically."""
+    reqs = _mk_requests()
+    _, rep_a = _run(reqs)
+    for shuffle_seed in (1, 2):
+        shuffled = list(reqs)
+        random.Random(shuffle_seed).shuffle(shuffled)
+        _, rep_b = _run(shuffled)
+        assert rep_b["trace"]["digest"] == rep_a["trace"]["digest"]
+
+
+def test_scenario_smoke_digest_is_stable_across_runs():
+    def one():
+        sc = build("bursty", "smoke")
+        sim = FleetSim(sc.fleet())
+        for req in sc.generate(random.Random(sc.seed)):
+            sim.submit(req)
+        return sim.run()["trace"]["digest"]
+    assert one() == one()
+
+
+# ---------------------------------------------------------------------------
+# Invariants at every event boundary
+# ---------------------------------------------------------------------------
+
+
+def _drive_checked(sim, extra_check=None):
+    """FleetSim.run() with sim.check() (and an optional extra invariant)
+    asserted after *every* processed event, not just at quiescence."""
+    while sim.queue:
+        ev = sim.queue.pop()
+        sim.trace.add(ev)
+        getattr(sim, sim._HANDLERS[ev.kind])(ev)
+        sim.check()
+        if extra_check is not None:
+            extra_check(sim)
+    return sim.report(quiesced=True)
+
+
+def test_conservation_holds_after_every_event():
+    sim = FleetSim(_small_cfg())
+    for r in _mk_requests(n=120):
+        sim.submit(r)
+    rep = _drive_checked(sim)
+    assert rep["sessions"]["finished"] == 120
+    assert rep["pressure"]["ledger_imbalance"] == 0
+
+
+def test_per_replica_timestamps_are_monotonic():
+    sim = FleetSim(_small_cfg(record_trace=True))
+    for r in _mk_requests(n=120):
+        sim.submit(r)
+    sim.run()
+    last = {}
+    for (t, kind, replica, key, info) in sim.trace.events:
+        assert t >= last.get(replica, 0.0), \
+            f"replica {replica} clock ran backwards at {t}"
+        last[replica] = t
+    assert sim.trace.n_events == len(sim.trace.events)
+
+
+def test_abandonment_never_leaks():
+    """Every submitted session ends finished or abandoned; abandoned
+    sessions release all hot bytes and pins (checked every event)."""
+    sim = FleetSim(_small_cfg(slots_per_replica=2))
+    reqs = _mk_requests(n=200, abandon_after_s=0.02, max_new=128)
+    for r in reqs:
+        sim.submit(r)
+    rep = _drive_checked(sim)
+    s = rep["sessions"]
+    assert s["finished"] + s["abandoned"] == s["submitted"] == 200
+    assert s["abandoned"] > 0, "scenario was supposed to shed load"
+    assert rep["pending_sessions"] == 0
+    for sess in sim.sessions.values():
+        if sess.phase == "abandoned":
+            assert sess.hot_bytes == 0.0 and sess.pinned_group < 0
+
+
+def test_pinned_prefix_never_decays_while_referenced():
+    """cold_ttl shorter than any decode: decay sweeps fire mid-flight but
+    a pinned (actively referenced) group must survive every sweep."""
+    def pins_resolve(sim):
+        for rep in sim.replicas:
+            for sess in rep.active.values():
+                if sess.pinned_group >= 0:
+                    assert sess.pinned_group in rep.groups, \
+                        f"pinned group {sess.pinned_group} decayed"
+
+    sim = FleetSim(_small_cfg(cold_ttl_s=0.005))
+    for r in _mk_requests(n=150, groups=3, max_new=96):
+        sim.submit(r)
+    rep = _drive_checked(sim, extra_check=pins_resolve)
+    assert rep["sessions"]["finished"] == 150
+    assert rep["retention"]["decayed_bytes"] > 0, \
+        "ttl was supposed to trigger decay sweeps"
+
+
+def test_non_quiescent_raise_and_report():
+    sim = FleetSim(_small_cfg())
+    for r in _mk_requests(n=50):
+        sim.submit(r)
+    with pytest.raises(NonQuiescentError, match="not quiescent") as ei:
+        sim.run(max_events=10)
+    assert ei.value.report["quiesced"] is False
+
+    sim2 = FleetSim(_small_cfg())
+    for r in _mk_requests(n=50):
+        sim2.submit(r)
+    rep = sim2.run(max_events=10, on_stall="report")
+    assert rep["quiesced"] is False and rep["pending_events"] > 0
+    # the budget is a checkpoint, not a wall: the drain can resume
+    rep = sim2.run()
+    assert rep["quiesced"] is True and rep["pending_sessions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Property suite (skips cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5),        # group
+                          st.integers(1, 300),      # unique tokens
+                          st.integers(1, 64),       # max new tokens
+                          st.floats(0.0, 0.5)),     # inter-arrival gap
+                min_size=1, max_size=60),
+       st.one_of(st.none(), st.floats(0.001, 0.1)))
+def test_property_conservation_any_workload(specs, abandon):
+    t = 0.0
+    sim = FleetSim(_small_cfg(slots_per_replica=2))
+    for i, (group, unique, max_new, gap) in enumerate(specs):
+        t += gap
+        sim.submit(FleetRequest(session_key=i, group=group,
+                                shared_tokens=256, unique_tokens=unique,
+                                max_new_tokens=max_new, arrival_s=t,
+                                abandon_after_s=abandon))
+    rep = _drive_checked(sim)
+    s = rep["sessions"]
+    assert s["finished"] + s["abandoned"] == len(specs)
+    assert rep["pressure"]["ledger_imbalance"] == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_shuffle_invariance_any_seed(seed):
+    reqs = _mk_requests(n=40, seed=seed)
+    _, rep_a = _run(reqs)
+    shuffled = list(reqs)
+    random.Random(seed ^ 0xA5A5).shuffle(shuffled)
+    _, rep_b = _run(shuffled)
+    assert rep_a["trace"]["digest"] == rep_b["trace"]["digest"]

@@ -1,0 +1,103 @@
+"""Scenario zoo smoke gates (DESIGN.md §12, experiments/): every family
+drains to quiescence with tail SLOs over a non-empty finished population
+and a balanced pressure ledger — the same gates the CI `fleet-scenarios`
+job enforces — plus the trajectory-persistence dedupe contract for
+``BENCH_fleet.json``.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.core.trajectory import persist_trajectory
+
+from experiments.run_fleet import gate, run_scenario
+from experiments.scenarios import SCENARIOS, build
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_smoke_meets_gates(name):
+    entry = run_scenario(name, "smoke")
+    gate(entry)                       # quiesced, SLO p99 present, ledger 0
+    s = entry["sessions"]
+    assert s["finished"] + s["abandoned"] == s["submitted"] == entry[
+        "submitted"]
+    assert entry["trace"]["n_events"] > 0
+    assert len(entry["trace"]["digest"]) == 40
+    for metric in ("ttft", "itl"):
+        slo = entry["slo"][metric]
+        assert slo["p50"] <= slo["p95"] <= slo["p99"]
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_presets_and_ownership(name):
+    """Each family publishes smoke + default presets, and the scenario —
+    not the caller — owns every piece of randomness and fleet shape."""
+    presets = SCENARIOS[name].presets()
+    assert {"smoke", "default"} <= set(presets)
+    sc = build(name, "smoke")
+    assert sc.n_replicas >= 1 and sc.sessions >= 1
+    fleet = sc.fleet()
+    assert fleet.n_replicas == sc.n_replicas
+
+
+def test_abandonment_scenario_actually_abandons():
+    entry = run_scenario("abandonment", "smoke")
+    assert entry["sessions"]["abandoned"] > 0
+    assert entry["sessions"]["finished"] > 0, \
+        "SLO gate needs a finished population even under shedding"
+
+
+def test_long_doc_scenario_exercises_pressure_plane():
+    entry = run_scenario("long_doc", "smoke")
+    p = entry["pressure"]
+    assert p["events"] > 0, "long_doc is sized to overflow the warm tier"
+    assert p["unresolved"] == 0 and p["ledger_imbalance"] == 0
+
+
+def test_diurnal_scenario_exercises_retention_decay():
+    entry = run_scenario("diurnal", "smoke")
+    assert entry["retention"]["decayed_bytes"] > 0, \
+        "diurnal lulls are sized to outlive the cold TTL"
+
+
+def test_unknown_scenario_and_preset_fail_loudly():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        build("no-such-family", "smoke")
+    with pytest.raises(ValueError, match="preset"):
+        build("bursty", "no-such-preset")
+
+
+# ---------------------------------------------------------------------------
+# BENCH_fleet.json persistence
+# ---------------------------------------------------------------------------
+
+
+def _entry(**kw):
+    base = {"scenario": "bursty/smoke", "seed": 1, "wall_s": 0.5,
+            "events_per_s": 1000, "reuse": 0.7}
+    base.update(kw)
+    return base
+
+
+def test_persist_trajectory_dedupes_wall_clock_noise(tmp_path):
+    ignore = ("at", "wall_s", "events_per_s")
+    assert persist_trajectory("B.json", _entry(), key="scenario",
+                              root=str(tmp_path), ignore=ignore)
+    # identical metrics, different wall clock -> deduplicated away
+    assert not persist_trajectory(
+        "B.json", _entry(wall_s=9.9, events_per_s=3), key="scenario",
+        root=str(tmp_path), ignore=ignore)
+    # a metric change appends
+    assert persist_trajectory("B.json", _entry(reuse=0.8), key="scenario",
+                              root=str(tmp_path), ignore=ignore)
+    # a different scenario key never dedupes against this one
+    assert persist_trajectory("B.json", _entry(scenario="diurnal/smoke"),
+                              key="scenario", root=str(tmp_path),
+                              ignore=ignore)
+    data = json.loads((tmp_path / "B.json").read_text())
+    assert len(data["entries"]) == 3
+    assert all("at" in e for e in data["entries"])
