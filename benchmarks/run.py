@@ -16,7 +16,7 @@ import sys
 import traceback
 
 SUITES = ("fig1", "workload", "tco", "serving", "kernels", "kernel_bench",
-          "roofline", "reliability")
+          "roofline", "reliability", "replication")
 
 
 def main(argv=None) -> None:
@@ -60,6 +60,10 @@ def main(argv=None) -> None:
         from benchmarks import serving_sim
         results["reliability"] = _run("serving_sim.reliability",
                                       serving_sim.run_reliability, failures)
+    if "replication" in want:
+        from benchmarks import serving_sim
+        results["replication"] = _run("serving_sim.replication",
+                                      serving_sim.run_replication, failures)
 
     if args.json:
         with open(args.json, "w") as f:

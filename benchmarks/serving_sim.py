@@ -35,6 +35,14 @@
    past 4x retention: uncorrectable blocks reported, decode measurably
    degrades) — plus the per-state ECC overhead ladder showing the split
    code shrinking check bits on demoted/cold/spilled pages.
+7. Replication sweep (DESIGN.md §13; suite ``replication``, trajectory
+   in ``BENCH_fleet.json``): reactive vs predictive prefix replication
+   on the event-driven fleet simulator — the herald-led rag_storm
+   fan-out must cut TTFT p95 >= 40% at bit-identical decoded tokens
+   with speculative push bytes > 0 and strictly fewer demand
+   migrations; the diurnal tenant mix must eliminate demand migrations
+   at flat TTFT; trace digests bit-stable across reruns and submission
+   shuffles.
 """
 from __future__ import annotations
 
@@ -652,6 +660,141 @@ def reliability(arch="deepseek-7b", rber=1e-3, n_shares=3, head_tokens=32,
         "overaged_uncorrectable": over_rel["injection"]["uncorrectable_blocks"],
         "ecc_overhead_ladder": ladder,
     }
+
+
+def replication(scenario="rag_storm", preset="smoke", threshold=2,
+                copies=7, min_ttft_cut=0.40, ttft_slack=0.02) -> dict:
+    """Predictive prefix replication A/B on the fleet simulator
+    (DESIGN.md §13): the same scenario run reactive (no replication —
+    demand migrations only) vs predictive (directory hit counts cross
+    ``threshold`` → speculative ``REPLICATION_PUSH`` pre-places the group
+    on the ``copies`` least-loaded non-owners over the shared fabric).
+
+    Gates, on bit-identical decoded tokens across both arms:
+
+    - ``min_ttft_cut`` > 0 (the rag_storm arm): predictive TTFT p95 must
+      land at least that fraction below the reactive baseline — the
+      herald-led fan-out hits warm owners instead of piling on one;
+    - ``min_ttft_cut`` = 0 (the diurnal arm): predictive TTFT p95 must
+      not regress beyond ``ttft_slack``;
+    - speculative push bytes > 0 and demand-migration count strictly
+      below the reactive baseline (pre-placement absorbs the pulls);
+    - the fabric byte ledger balances (transfers == migrated +
+      replicated bytes, enforced by ``FleetSim.check``) and the trace
+      digest is bit-stable across a rerun *and* a shuffled submission
+      order (the event queue, not submission order, fixes the timeline).
+    """
+    import random
+    from dataclasses import replace as dc_replace
+
+    from repro.serving.fleet_sim import FleetSim
+
+    from experiments.scenarios import build
+
+    def run_one(predictive: bool, shuffle_seed=None):
+        sc = build(scenario, preset)
+        cfg = sc.fleet()
+        if predictive:
+            cfg = dc_replace(cfg, replicate_threshold=threshold,
+                             replicate_copies=copies)
+        sim = FleetSim(cfg)
+        rng = random.Random(sc.seed)
+        if shuffle_seed is None:
+            sc.submit_all(sim, rng)
+        else:   # open-loop only: shuffled submission must not move events
+            reqs = list(sc.generate(rng))
+            random.Random(shuffle_seed).shuffle(reqs)
+            for r in reqs:
+                sim.submit(r)
+        rep = sim.run(max_events=20_000_000)
+        sim.check()
+        return rep
+
+    base = run_one(False)
+    pred = run_one(True)
+    rerun = run_one(True)
+    shuffled = run_one(True, shuffle_seed=1234)
+    assert pred["trace"]["digest"] == rerun["trace"]["digest"], \
+        f"{scenario}: predictive trace digest unstable across reruns"
+    assert pred["trace"]["digest"] == shuffled["trace"]["digest"], \
+        f"{scenario}: trace digest moved under submission shuffle"
+    bf, pf = base["fleet"], pred["fleet"]
+    assert pf["decoded_tokens"] == bf["decoded_tokens"], \
+        (pf["decoded_tokens"], bf["decoded_tokens"])
+    rp = pred["replication"]
+    assert rp["replicated_bytes"] > 0, "no speculative push bytes metered"
+    assert pf["migrations"] < bf["migrations"], \
+        f"demand migrations {pf['migrations']} !< baseline {bf['migrations']}"
+    ttft_base = base["slo"]["ttft"]["p95"]
+    ttft_pred = pred["slo"]["ttft"]["p95"]
+    ttft_cut = 1.0 - ttft_pred / ttft_base
+    if min_ttft_cut > 0:
+        assert ttft_cut >= min_ttft_cut, \
+            f"{scenario}: TTFT p95 cut {ttft_cut:.2%} < {min_ttft_cut:.0%}"
+    else:
+        assert ttft_cut >= -ttft_slack, \
+            f"{scenario}: predictive regressed TTFT p95 by {-ttft_cut:.2%}"
+    shards = pred["directory"]
+    assert shards["delta_batches"] <= shards["delta_ops"]
+    return {
+        "scenario": f"{scenario}/{preset}+replication",
+        "threshold": threshold,
+        "copies": copies,
+        "ttft_p95_reactive_s": ttft_base,
+        "ttft_p95_predictive_s": ttft_pred,
+        "ttft_p95_cut": ttft_cut,
+        "ttft_p99_reactive_s": base["slo"]["ttft"]["p99"],
+        "ttft_p99_predictive_s": pred["slo"]["ttft"]["p99"],
+        "decoded_tokens": pf["decoded_tokens"],
+        "migrations_reactive": bf["migrations"],
+        "migrations_predictive": pf["migrations"],
+        "replication_pushes": rp["pushes_scheduled"],
+        "replications": rp["replications"],
+        "replicated_bytes": rp["replicated_bytes"],
+        "pushes_deferred": rp["pushes_deferred"],
+        "pushes_abandoned": rp["pushes_abandoned"],
+        # every fabric byte is exactly one demand or speculative byte
+        "ledger_imbalance": pred["fabric"]["bytes"]
+        - pf["migrated_bytes"] - rp["replicated_bytes"],
+        "fabric": pred["fabric"],
+        "directory_shards": shards,
+        "reuse_frac_reactive": bf["reuse_frac"],
+        "reuse_frac_predictive": pf["reuse_frac"],
+        "trace_digest": pred["trace"]["digest"],
+    }
+
+
+def run_replication(csv=True):
+    """The ``replication`` benchmark suite (its own CI leg): reactive vs
+    predictive on the herald-led rag_storm fan-out (hard >= 40% TTFT p95
+    cut) and the diurnal tenant mix (migration elimination at flat TTFT),
+    both persisted to BENCH_fleet.json alongside the fleet trajectory."""
+    from repro.core.trajectory import persist_trajectory
+
+    out = {}
+    for key, kw in (
+            ("rag_storm", dict(scenario="rag_storm", threshold=2, copies=7,
+                               min_ttft_cut=0.40)),
+            ("diurnal", dict(scenario="diurnal", threshold=4, copies=2,
+                             min_ttft_cut=0.0))):
+        t0 = time.perf_counter()
+        entry = replication(**kw)
+        dt = (time.perf_counter() - t0) * 1e6
+        out[key] = entry
+        persist_trajectory("BENCH_fleet.json", entry, key="scenario",
+                           ignore=("at",))
+        if csv:
+            print(f"serving_sim/repl_{key}_ttft_p95_cut,{dt:.1f},"
+                  f"{entry['ttft_p95_cut']:.4f}")
+            print(f"serving_sim/repl_{key}_migrations,{dt:.1f},"
+                  f"{entry['migrations_predictive']}")
+            print(f"serving_sim/repl_{key}_migrations_reactive,{dt:.1f},"
+                  f"{entry['migrations_reactive']}")
+            print(f"serving_sim/repl_{key}_replicated_gb,{dt:.1f},"
+                  f"{entry['replicated_bytes'] / 1e9:.4f}")
+            print(f"serving_sim/repl_{key}_pushes_deferred,{dt:.1f},"
+                  f"{entry['pushes_deferred']}")
+    return out
 
 
 def _persist_paged_trajectory(entry: dict) -> None:

@@ -38,21 +38,21 @@ def run_scenario(name: str, preset: str = "smoke", seed: int = 0,
     sim = FleetSim(sc.fleet())
     rng = random.Random(seed if seed else sc.seed)
     t0 = time.perf_counter()
-    n = 0
-    for req in sc.generate(rng):
-        sim.submit(req)
-        n += 1
+    # submit_all lets closed-loop families chain follow-ups off
+    # completion times; open-loop families pre-schedule every arrival
+    sc.submit_all(sim, rng)
     report = sim.run(max_events=max_events)
     sim.check()
     wall = time.perf_counter() - t0
     entry = {
         "scenario": f"{name}/{preset}",
         "seed": seed if seed else sc.seed,
-        "submitted": n,
+        "submitted": sim.stats["submitted"],
         "wall_s": round(wall, 3),
         "events_per_s": round(report["trace"]["n_events"] / max(wall, 1e-9)),
         **{k: report[k] for k in ("quiesced", "n_replicas", "sessions",
-                                  "slo", "fleet", "retention", "pressure",
+                                  "slo", "fleet", "replication", "directory",
+                                  "fabric", "retention", "pressure",
                                   "trace")},
     }
     gate(entry)

@@ -53,6 +53,16 @@ class ScenarioBase:
     def generate(self, rng: random.Random) -> Iterator[FleetRequest]:
         raise NotImplementedError
 
+    def submit_all(self, sim, rng: random.Random) -> None:
+        """Feed the scenario into a :class:`FleetSim`. The default is
+        open-loop: every arrival is pre-scheduled by ``generate``.
+        Closed-loop families override this to chain follow-ups off
+        completion times (``FleetSim.chain``) — the RNG draw order must
+        stay independent of execution order (pre-draw all think times)
+        so the trace-digest determinism contract holds."""
+        for req in self.generate(rng):
+            sim.submit(req)
+
     @classmethod
     def presets(cls) -> Dict[str, "ScenarioBase"]:
         raise NotImplementedError
@@ -147,7 +157,16 @@ class Agentic(ScenarioBase):
     """Tool-call loops: each agent re-enters ``calls_per_agent`` times,
     its scratchpad prefix growing by ``growth_tokens`` per round — the
     registered prefix group extends, so every re-entry is a longest-match
-    hit on pages the agent itself registered."""
+    hit on pages the agent itself registered.
+
+    ``closed_loop`` (the default) makes the loop real: call *k+1*
+    arrives one think-time after call *k* **completes**
+    (``FleetSim.chain``), so achieved latency shapes the arrival process
+    — a slow fleet sees agents back off, a fast one sees them hammer.
+    Think times are pre-drawn in generation order, so the RNG stream
+    never depends on completion order and the trace digest stays
+    bit-stable. ``closed_loop=False`` recovers the PR 9 open-loop
+    pre-scheduled arrivals."""
     agents: int = 400
     calls_per_agent: int = 8
     base_shared_tokens: int = 256
@@ -155,24 +174,45 @@ class Agentic(ScenarioBase):
     think_time_s: float = 2.0
     unique_tokens: int = 32
     max_new_tokens: int = 16
+    closed_loop: bool = True
 
     def fleet(self) -> FleetConfig:
         # sticky loops: don't migrate a scratchpad around the fleet
         return replace(super().fleet(), migrate_load_gap=16)
 
+    def _agent_calls(self, rng: random.Random, agent: int, sid0: int):
+        """One agent's call sequence with pre-drawn gaps — the exact RNG
+        consumption of the PR 9 open-loop generator (uniform start, one
+        expovariate per call), so both loop modes share a seed stream."""
+        t = rng.uniform(0.0, 10.0)
+        calls, gaps = [], []
+        for call in range(self.calls_per_agent):
+            calls.append(FleetRequest(
+                session_key=sid0 + call, group=agent,
+                shared_tokens=self.base_shared_tokens
+                + call * self.growth_tokens,
+                unique_tokens=self.unique_tokens,
+                max_new_tokens=self.max_new_tokens, arrival_s=t))
+            gap = rng.expovariate(1.0 / self.think_time_s)
+            gaps.append(gap)
+            t += gap
+        return calls, gaps
+
     def generate(self, rng: random.Random) -> Iterator[FleetRequest]:
-        sid = 0
         for a in range(self.agents):
-            t = rng.uniform(0.0, 10.0)
-            for call in range(self.calls_per_agent):
-                yield FleetRequest(
-                    session_key=sid, group=a,
-                    shared_tokens=self.base_shared_tokens
-                    + call * self.growth_tokens,
-                    unique_tokens=self.unique_tokens,
-                    max_new_tokens=self.max_new_tokens, arrival_s=t)
-                sid += 1
-                t += rng.expovariate(1.0 / self.think_time_s)
+            calls, _ = self._agent_calls(rng, a, a * self.calls_per_agent)
+            yield from calls
+
+    def submit_all(self, sim, rng: random.Random) -> None:
+        if not self.closed_loop:
+            super().submit_all(sim, rng)
+            return
+        for a in range(self.agents):
+            calls, gaps = self._agent_calls(rng, a,
+                                            a * self.calls_per_agent)
+            sim.submit(calls[0])
+            for k in range(1, len(calls)):
+                sim.chain(calls[k - 1].session_key, calls[k], gaps[k - 1])
 
     @property
     def sessions_total(self) -> int:
@@ -188,12 +228,19 @@ class Agentic(ScenarioBase):
 
 @dataclass(frozen=True)
 class RagStorm(ScenarioBase):
-    """RAG fan-out: every storm shares one *fresh* document group across
-    ``fanout`` near-simultaneous requests — the first computes and
-    registers it, the rest race admission; overloaded owners trigger
-    migration bursts that serialize on the receivers' links."""
+    """RAG fan-out: every storm shares one *fresh* document group. The
+    document's first ``heralds`` queries trickle in (the leading edge a
+    trending document always has), then ``fanout`` near-simultaneous
+    requests land ``lead_s`` later — the reactive plane answers the burst
+    with a pile-up on the one registered owner plus demand-migration
+    bursts that serialize on the donor's up-link; the predictive plane
+    (DESIGN §13) sees the herald hits cross the replication threshold and
+    pre-places the document on warm owners before the burst arrives."""
     storms: int = 120
     fanout: int = 32
+    heralds: int = 2
+    herald_gap_s: float = 0.15
+    lead_s: float = 0.4
     storm_gap_s: float = 0.5
     doc_tokens: int = 1024
     unique_tokens: int = 48
@@ -204,13 +251,22 @@ class RagStorm(ScenarioBase):
         t = 0.0
         for storm in range(self.storms):
             t += rng.expovariate(1.0 / self.storm_gap_s)
+            for h in range(self.heralds):
+                yield FleetRequest(
+                    session_key=sid, group=storm,
+                    shared_tokens=self.doc_tokens,
+                    unique_tokens=self.unique_tokens,
+                    max_new_tokens=self.max_new_tokens,
+                    arrival_s=t + h * self.herald_gap_s)
+                sid += 1
+            burst = t + (self.heralds - 1) * self.herald_gap_s + self.lead_s
             for _ in range(self.fanout):
                 yield FleetRequest(
                     session_key=sid, group=storm,
                     shared_tokens=self.doc_tokens,
                     unique_tokens=self.unique_tokens,
                     max_new_tokens=self.max_new_tokens,
-                    arrival_s=t + rng.uniform(0.0, 0.05))
+                    arrival_s=burst + rng.uniform(0.0, 0.05))
                 sid += 1
 
     @classmethod

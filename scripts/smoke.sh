@@ -89,6 +89,34 @@ print("fleet reuse (ssm):",
        ("prefill_cut", "cross_replica_hit_rate", "migration_bytes")})
 EOF
 
+echo "== predictive replication A/B (reactive vs predictive fleet plane) =="
+python -m benchmarks.run replication --json /tmp/smoke_replication.json
+python - <<'EOF'
+import json
+rep = json.load(open("/tmp/smoke_replication.json"))
+assert not rep["failures"], rep["failures"]
+# DESIGN.md §13 gates: the herald-led rag_storm fan-out must cut TTFT
+# p95 >= 40% vs the reactive baseline at bit-identical decoded tokens,
+# with nonzero speculative push bytes, strictly fewer demand migrations,
+# and a fabric byte ledger that balances exactly (every byte is one
+# demand migration or one speculative push — zero imbalance)
+for key, arm in rep["suites"]["replication"].items():
+    assert arm["replicated_bytes"] > 0, (key, arm)
+    assert arm["migrations_predictive"] < arm["migrations_reactive"], \
+        (key, arm)
+    assert arm["ledger_imbalance"] == 0, (key, arm)
+rs = rep["suites"]["replication"]["rag_storm"]
+assert rs["ttft_p95_cut"] >= 0.40, rs
+di = rep["suites"]["replication"]["diurnal"]
+assert di["ttft_p95_cut"] >= -0.02, di
+print("replication:", {k: {"ttft_p95_cut": round(a["ttft_p95_cut"], 4),
+                           "migrations": (a["migrations_reactive"],
+                                          a["migrations_predictive"]),
+                           "replicated_gb": round(a["replicated_bytes"] / 1e9,
+                                                  2)}
+                       for k, a in rep["suites"]["replication"].items()})
+EOF
+
 echo "== kernel bench (grouped grid vs ungrouped baseline) =="
 python -m benchmarks.run kernel_bench --json /tmp/smoke_kernels.json
 python - <<'EOF'

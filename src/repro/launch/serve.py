@@ -159,10 +159,28 @@ def main(argv=None):
                     help="seconds a request may wait queued before the "
                          "scheduler abandons it (None = wait forever)")
     ap.add_argument("--interconnect-gbps", type=float, default=50.0,
-                    help="inter-replica transfer bandwidth in GBYTES/s — "
+                    help="per-replica NIC link bandwidth in GBYTES/s — "
                          "the same unit as the memclass tier "
                          "read_bw_gbps/write_bw_gbps fields (the "
                          "prefix-migration cost model)")
+    ap.add_argument("--fabric-gbps", type=float, default=None,
+                    help="shared-fabric bisection bandwidth in GBYTES/s "
+                         "(DESIGN.md §13); transfers queue on donor "
+                         "up-links, receiver down-links and "
+                         "floor(fabric/link) core channels (default: "
+                         "half-bisection, link * replicas//2)")
+    ap.add_argument("--replicate-threshold", type=int, default=None,
+                    help="fleet-wide directory hits after which a prefix "
+                         "is speculatively pushed to the least-loaded "
+                         "non-owners (DESIGN.md §13; default: reactive "
+                         "demand migration only)")
+    ap.add_argument("--replicate-copies", type=int, default=1,
+                    help="extra owners the predictive replicator "
+                         "maintains for a hot prefix")
+    ap.add_argument("--directory-shards", type=int, default=8,
+                    help="hash shards the fleet prefix directory spreads "
+                         "its digest keys across (load-balance counters "
+                         "land in the report)")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced
@@ -202,7 +220,11 @@ def main(argv=None):
         fe = ClusterFrontend(engines,
                              migrate_prefixes=args.migrate_prefixes,
                              interconnect_gbps=args.interconnect_gbps,
-                             clock_mode=args.clock)
+                             clock_mode=args.clock,
+                             fabric_bisection_gbps=args.fabric_gbps,
+                             replicate_threshold=args.replicate_threshold,
+                             replicate_copies=args.replicate_copies,
+                             directory_shards=args.directory_shards)
         for i in range(args.requests):
             fe.submit(gen_prompt(), max_new_tokens=args.max_new,
                       session_key=f"session-{i % max(args.sessions, 1)}")

@@ -3,8 +3,10 @@ from repro.serving.engine import (ComputeBackend, EngineConfig, MemoryPlane,
                                   PrefillChunk, ServeEngine, SnapshotHandle,
                                   StepPlan, StepReport, choose_hot_tier,
                                   latency_percentiles)
+from repro.serving.directory import DirectoryShard, ShardedDirectory
 from repro.serving.events import (Event, EventKind, EventQueue, EventTrace,
                                   NonQuiescentError)
+from repro.serving.fabric import Fabric
 from repro.serving.fleet_sim import (FleetConfig, FleetRequest, FleetSim,
                                      latency_slo)
 from repro.serving.kv_cache import PagedKVManager, PressureStats, RadixStats
@@ -20,4 +22,5 @@ __all__ = ["EngineConfig", "ServeEngine", "ComputeBackend", "MemoryPlane",
            "RadixNode", "PrefixMatch", "SnapshotHandle", "choose_hot_tier",
            "latency_percentiles", "Event", "EventKind", "EventQueue",
            "EventTrace", "NonQuiescentError", "FleetConfig", "FleetRequest",
-           "FleetSim", "latency_slo"]
+           "FleetSim", "latency_slo", "Fabric", "ShardedDirectory",
+           "DirectoryShard"]

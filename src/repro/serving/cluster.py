@@ -25,11 +25,20 @@ recomputing them cold.
   against the receiving tiers, retention re-programmed on arrival through
   the one lifecycle state machine (DESIGN.md §9: a donor-hot prefix lands
   in the receiver's hot tier at long retention).
-- **migration admission control** — each receiver has one modelled
-  interconnect link: concurrent migrations to the same replica serialize
-  on it, a transfer arriving while the link is busy queues (the queue
-  wait is reported in the fleet report's ``interconnect`` section), and
-  the triggering request's TTFT pays queue wait + transfer time.
+- **shared-fabric admission control** (DESIGN.md §13) — transfers run
+  over a :class:`~repro.serving.fabric.Fabric` topology: every replica
+  has one full-duplex NIC (up + down link) and the switch core carries a
+  bisection-bandwidth cap, so concurrent migrations and replications
+  contend realistically (two exports from one donor serialize on its
+  up-link even to distinct receivers). A transfer finding any resource
+  busy queues (the wait is reported in the fleet report's
+  ``interconnect`` section) and the triggering request's TTFT pays queue
+  wait + transfer time.
+- **predictive replication** (DESIGN.md §13) — the directory counts
+  fleet-wide hits per entry; crossing ``replicate_threshold`` pushes the
+  prefix to the ``replicate_copies`` least-loaded non-owners *before*
+  the fan-out burst lands, as low-priority ``REPLICATION_PUSH`` events
+  that yield (re-defer) whenever the fabric is carrying demand traffic.
 - **session-affinity fallback** — requests carrying a ``session_key``
   with no directory match go to their sticky replica;
 - **least-loaded routing** — keyless, matchless requests go to the
@@ -57,43 +66,67 @@ from __future__ import annotations
 import hashlib
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.serving.directory import ShardedDirectory
 from repro.serving.engine import ServeEngine, latency_percentiles
 from repro.serving.events import (Event, EventKind, EventQueue, EventTrace,
                                   NonQuiescentError)
+from repro.serving.fabric import Fabric
 from repro.serving.radix import _flat
 
 
 class PrefixDirectory:
-    """Fleet-level map: page-aligned prefix key -> owning replicas.
+    """Fleet-level map: page-aligned prefix -> owning replicas, stored as
+    fixed-width sha1 *digests* hash-partitioned over
+    :class:`~repro.serving.directory.DirectoryShard`s (DESIGN.md §13).
 
-    Keys are position-space token tuples (sentinel meta prefix + prompt
-    tokens, exactly the radix tree's keys) at page granularity, so a
-    lookup agrees with what ``RadixKVIndex.match_len`` would find on the
-    owner. Every page-aligned prefix of a registered path gets an entry
-    (idempotent), which makes invalidation exact: an evicted leaf drops
-    ownership of precisely the run it covered."""
+    Keys are position-space: each page's digest chains the hash state of
+    every page before it (sentinel meta prefix + prompt tokens, exactly
+    the radix tree's path), so a lookup agrees with what
+    ``RadixKVIndex.match_len`` would find on the owner while storing 20
+    bytes per entry instead of the full token tuple. Every page-aligned
+    prefix of a registered path gets an entry (idempotent), which makes
+    invalidation exact: an evicted leaf drops ownership of precisely the
+    run it covered, as O(changed pages) shard ops.
 
-    def __init__(self, page_tokens: int):
+    Hook traffic (register on publish, invalidate on evict/decay) queues
+    into a pending delta and is applied as one batch at the next read
+    (``flush``) — an eviction sweep's invalidations land as a single
+    O(changes) delta instead of interleaved point updates. Reads
+    (lookup / owned_by / n_entries) always flush first, so callers never
+    observe stale ownership."""
+
+    def __init__(self, page_tokens: int, n_shards: int = 8):
         if page_tokens < 1:
             raise ValueError("page_tokens must be >= 1")
         self.page_tokens = page_tokens
-        self.owners: Dict[tuple, Set[int]] = {}
+        self.shards = ShardedDirectory(n_shards)
         self.registrations = 0
         self.invalidations = 0
+        self._delta: List[Tuple[str, bytes, int]] = []
 
     @staticmethod
     def _key(tokens: Sequence) -> list:
         return _flat(tokens)
 
+    def _digests(self, flat: list) -> List[bytes]:
+        """sha1 digest per page-aligned prefix, one incremental pass: the
+        hash state carries across page boundaries, so digesting all n
+        prefixes of an n-page path is O(path), not O(path^2)."""
+        pt = self.page_tokens
+        n = (len(flat) // pt) * pt
+        h = hashlib.sha1()
+        out: List[bytes] = []
+        for end in range(pt, n + 1, pt):
+            h.update(repr(flat[end - pt:end]).encode())
+            out.append(h.digest())
+        return out
+
     def register(self, replica: int, tokens: Sequence) -> None:
         """Replica ``replica`` now holds every page-aligned prefix of
         ``tokens`` in its radix tree."""
-        flat = self._key(tokens)
-        pt = self.page_tokens
-        n = (len(flat) // pt) * pt
-        for end in range(pt, n + 1, pt):
-            self.owners.setdefault(tuple(flat[:end]), set()).add(replica)
-        if n:
+        digs = self._digests(self._key(tokens))
+        self._delta.extend(("add", d, replica) for d in digs)
+        if digs:
             self.registrations += 1
 
     def invalidate(self, replica: int, tokens: Sequence,
@@ -101,38 +134,50 @@ class PrefixDirectory:
         """A leaf covering the last ``tail_tokens`` of path ``tokens``
         left ``replica``'s tree: drop its ownership of the prefixes that
         run covered (ancestor prefixes remain owned — they are still in
-        the tree)."""
-        flat = self._key(tokens)
+        the tree). One linear hash pass; O(changed pages) shard ops."""
+        digs = self._digests(self._key(tokens))
         pt = self.page_tokens
-        n = (len(flat) // pt) * pt
-        start = max(n - tail_tokens, 0)
-        for end in range(start + pt, n + 1, pt):
-            key = tuple(flat[:end])
-            owners = self.owners.get(key)
-            if owners is None:
-                continue
-            owners.discard(replica)
-            if not owners:
-                del self.owners[key]
+        start_page = max(len(digs) * pt - tail_tokens, 0) // pt
+        self._delta.extend(("discard", d, replica)
+                           for d in digs[start_page:])
         self.invalidations += 1
 
-    def lookup(self, tokens: Sequence) -> Tuple[int, Optional[Set[int]]]:
+    def flush(self) -> None:
+        """Apply queued hook ops as one delta batch."""
+        if self._delta:
+            ops, self._delta = self._delta, []
+            self.shards.apply_delta(ops)
+
+    def lookup_entry(self, tokens: Sequence
+                     ) -> Tuple[int, Optional[Set[int]], Optional[bytes]]:
         """Longest registered page-aligned prefix of ``tokens``:
-        ``(matched_tokens, owner_replicas)`` — ``(0, None)`` on miss."""
-        flat = self._key(tokens)
-        pt = self.page_tokens
-        n = (len(flat) // pt) * pt
-        for end in range(n, 0, -pt):
-            owners = self.owners.get(tuple(flat[:end]))
+        ``(matched_tokens, owner_replicas, digest)`` — the digest is the
+        directory key for hit recording; ``(0, None, None)`` on miss."""
+        self.flush()
+        digs = self._digests(self._key(tokens))
+        for i in range(len(digs) - 1, -1, -1):
+            owners = self.shards.owners(digs[i])
             if owners:
-                return end, owners
-        return 0, None
+                return (i + 1) * self.page_tokens, owners, digs[i]
+        return 0, None, None
+
+    def lookup(self, tokens: Sequence) -> Tuple[int, Optional[Set[int]]]:
+        matched, owners, _ = self.lookup_entry(tokens)
+        return matched, owners
+
+    def record_hit(self, digest: bytes) -> int:
+        """One fleet-wide hit on ``digest``'s entry; returns the count —
+        the predictive replicator's threshold signal."""
+        return self.shards.hit(digest)
 
     def owned_by(self, replica: int) -> int:
-        return sum(1 for o in self.owners.values() if replica in o)
+        self.flush()
+        return sum(1 for sh in self.shards.shards
+                   for o in sh.owners.values() if replica in o)
 
     def n_entries(self) -> int:
-        return len(self.owners)
+        self.flush()
+        return len(self.shards)
 
 
 class ClusterFrontend:
@@ -159,13 +204,21 @@ class ClusterFrontend:
       interconnect wait is charged to the triggering request's TTFT.
     """
 
+    #: bounded speculative-push retries: after this many fabric-hot
+    #: defers a push is abandoned (the demand path will pull on miss)
+    _PUSH_MAX_DEFERS = 8
+
     def __init__(self, engines: List[ServeEngine],
                  migrate_prefixes: bool = False,
                  interconnect_gbps: float = 50.0,
                  migrate_load_gap: int = 2,
                  prefix_affinity: bool = True,
                  clock_mode: str = "lockstep",
-                 record_trace: bool = False):
+                 record_trace: bool = False,
+                 replicate_threshold: Optional[int] = None,
+                 replicate_copies: int = 1,
+                 directory_shards: int = 8,
+                 fabric_bisection_gbps: Optional[float] = None):
         if not engines:
             raise ValueError("ClusterFrontend needs at least one replica")
         if interconnect_gbps <= 0:
@@ -192,12 +245,27 @@ class ClusterFrontend:
         self.migration_queue_wait_s = 0.0  # time spent queued on a busy link
         self.migrations_queued = 0  # transfers that found their link busy
         self._last_migrated = 0    # tokens grafted for the pending submit
-        # migration admission control (ROADMAP): each receiver has ONE
-        # modelled interconnect link — concurrent migrations serialize on
-        # it. `_link_busy_until[i]` is the absolute sim time replica i's
-        # link frees up; a transfer arriving earlier queues and its
-        # requester waits out the queue + its own transfer.
-        self._link_busy_until: Dict[int, float] = {}
+        # predictive replication (DESIGN §13): once a directory entry's
+        # fleet-wide hit count crosses the threshold, push it to the
+        # least-loaded non-owners ahead of the burst (None = reactive)
+        self.replicate_threshold = replicate_threshold
+        self.replicate_copies = replicate_copies
+        self.replications = 0          # speculative pushes delivered
+        self.replicated_tokens = 0
+        self.replication_bytes = 0.0
+        self.replication_s = 0.0
+        self.replications_deferred = 0  # pushes that yielded to a hot fabric
+        self.pushes_abandoned = 0       # defer budget exhausted / entry gone
+        self._push_inflight: Set[Tuple[bytes, int]] = set()
+        self._pending_pushes: Dict[int, tuple] = {}
+        self._push_seq = 0
+        # shared-fabric admission control (DESIGN §13): every transfer
+        # holds its donor's up-link, its receiver's down-link, and one
+        # bisection core channel — concurrent migrations and replications
+        # contend realistically; a transfer finding any resource busy
+        # queues, and the triggering request waits out queue + transfer.
+        self.fabric = Fabric(len(engines), interconnect_gbps,
+                             fabric_bisection_gbps)
         # deferred interconnect charges (replica -> seconds): applied at
         # the next cluster step, *after* the triggering requests are
         # enqueued, so their submitted_at predates the transfer and their
@@ -208,7 +276,8 @@ class ClusterFrontend:
         # fleet-level prefix directory: every replica's publishes and
         # evictions flow in through the manager hooks; pre-existing tree
         # content (engines that served before this frontend) bootstraps in
-        self.directory = PrefixDirectory(engines[0].ecfg.page_tokens)
+        self.directory = PrefixDirectory(engines[0].ecfg.page_tokens,
+                                         n_shards=directory_shards)
         for i, e in enumerate(self.engines):
             e.kv.on_prefix_insert = (
                 lambda tokens, _i=i: self.directory.register(_i, tokens))
@@ -255,10 +324,14 @@ class ClusterFrontend:
                 round(e.mem.utilization(e.ecfg.kv_tier), 9), i)
 
     # -- the directory protocol: route first, migrate on miss ----------
-    def _migrate(self, donor: int, target: int, key) -> int:
+    def _migrate(self, donor: int, target: int, key,
+                 speculative: bool = False) -> int:
         """Pull the donor's published prefix (pages + compute snapshot)
         into the target replica as a metered inter-replica transfer.
-        Returns the tokens now matched on the target (0 = nothing moved)."""
+        ``speculative`` marks a predictive replication push: same wire
+        physics and tier metering, separate ledger, and no request is
+        gated on its delivery. Returns the tokens now matched on the
+        target (0 = nothing moved)."""
         exp = self.engines[donor].export_prefix(key)
         if exp is None:
             return 0
@@ -274,36 +347,44 @@ class ClusterFrontend:
         moved = (imp["new_tokens"] * e.kv.kv_bytes_token
                  + imp["snapshot_bytes"])
         if moved > 0:
-            # admission control on the receiver's one interconnect link:
-            # the transfer starts when the link frees (queue wait, ROADMAP)
-            # and occupies it for bytes / bandwidth. Lockstep advances the
-            # receiver's clock at the next cluster step (_flush_transfer);
-            # event mode schedules a MIGRATION_DELIVERY event at the
-            # link-free time and gates the triggering request's admission
-            # on it. Either way TTFT pays queue wait + transfer.
+            # shared-fabric admission control: the transfer starts when
+            # the donor's up-link, the receiver's down-link AND a core
+            # channel are all free (queue wait), then holds all three for
+            # bytes / bandwidth. Lockstep advances the receiver's clock
+            # at the next cluster step (_flush_transfer); event mode
+            # schedules a MIGRATION_DELIVERY event at the wire-done time
+            # and (for demand pulls) gates the triggering request's
+            # admission on it. Either way TTFT pays queue wait + transfer.
             dur = moved / (self.interconnect_gbps * 1e9)
             t_req = (self._route_time if self.clock_mode == "event"
                      else e.mem.now)
-            start = max(t_req, self._link_busy_until.get(target, 0.0))
+            start, done = self.fabric.reserve(donor, target, moved, t_req)
             wait = start - t_req
-            self._link_busy_until[target] = start + dur
             if self.clock_mode == "event":
-                self._last_delivery_at = self._link_busy_until[target]
+                if not speculative:
+                    self._last_delivery_at = done
                 self._migration_seq += 1
-                self.events.push(Event(self._last_delivery_at,
+                self.events.push(Event(done,
                                        EventKind.MIGRATION_DELIVERY, target,
                                        key=self._migration_seq,
-                                       info=(imp["new_tokens"],)))
+                                       info=(imp["new_tokens"],
+                                             int(speculative))))
             else:
-                self._pending_transfer[target] = \
-                    self._link_busy_until[target] - t_req
-            if wait > 0:
-                self.migrations_queued += 1
-                self.migration_queue_wait_s += wait
-            self.migrations += 1
-            self.migrated_tokens += imp["new_tokens"]
-            self.migration_bytes += moved
-            self.migration_s += dur
+                self._pending_transfer[target] = max(
+                    self._pending_transfer.get(target, 0.0), done - t_req)
+            if speculative:
+                self.replications += 1
+                self.replicated_tokens += imp["new_tokens"]
+                self.replication_bytes += moved
+                self.replication_s += dur
+            else:
+                if wait > 0:
+                    self.migrations_queued += 1
+                    self.migration_queue_wait_s += wait
+                self.migrations += 1
+                self.migrated_tokens += imp["new_tokens"]
+                self.migration_bytes += moved
+                self.migration_s += dur
         return imp["total_tokens"]
 
     def _flush_transfer(self, i: int) -> None:
@@ -322,12 +403,13 @@ class ClusterFrontend:
         key = self.engines[0].radix_key_for(prompt_tokens)
         if key is None:
             return None
-        matched, owners = self.directory.lookup(key)
+        matched, owners, digest = self.directory.lookup_entry(key)
         if not matched or not owners:
             return None
         live = [i for i in owners if i < len(self.engines)]
         if not live:
             return None
+        hits = self.directory.record_hit(digest)
         choice = min(live, key=self._load_key)
         if self.migrate_prefixes and len(self.engines) > 1:
             least = min(range(len(self.engines)), key=self._load_key)
@@ -338,10 +420,52 @@ class ClusterFrontend:
                 if got > 0:
                     self._last_migrated = got
                     choice = least
+        if (self.replicate_threshold is not None
+                and len(self.engines) > 1
+                and hits >= self.replicate_threshold):
+            self._maybe_replicate(key, digest)
         self.radix_routed += 1
         if session_key is not None:
             self.routes[str(session_key)] = choice
         return choice
+
+    def _maybe_replicate(self, key, digest: bytes) -> None:
+        """Predictive replication (DESIGN §13): the entry crossed its
+        fleet-wide hit threshold — push it to the least-loaded non-owners
+        until ``1 + replicate_copies`` replicas hold it. Event mode
+        schedules low-priority REPLICATION_PUSH events (they fire after
+        every demand event at the same instant and re-defer while the
+        fabric is hot); lockstep pushes inline, skipping when the fabric
+        is busy (the next hit retries)."""
+        _, owners, _ = self.directory.lookup_entry(key)  # post-migration
+        if not owners:
+            return
+        live = sorted(i for i in owners if i < len(self.engines))
+        if not live:
+            return
+        inflight = sum(1 for d, _t in self._push_inflight if d == digest)
+        need = self.replicate_copies + 1 - len(live) - inflight
+        if need <= 0:
+            return
+        targets = sorted(
+            (i for i in range(len(self.engines))
+             if i not in owners and (digest, i) not in self._push_inflight),
+            key=self._load_key)[:need]
+        donor = min(live, key=self._load_key)
+        for target in targets:
+            if self.clock_mode == "event":
+                self._push_seq += 1
+                self._push_inflight.add((digest, target))
+                self._pending_pushes[self._push_seq] = (digest, key, target, 0)
+                self.events.push(Event(self._route_time,
+                                       EventKind.REPLICATION_PUSH, target,
+                                       key=self._push_seq))
+            else:
+                if self.fabric.hot(donor, target,
+                                   self.engines[target].mem.now):
+                    self.replications_deferred += 1
+                    continue
+                self._migrate(donor, target, key, speculative=True)
 
     def route(self, session_key: Optional[str] = None,
               prompt_tokens: Optional[list] = None) -> int:
@@ -528,12 +652,49 @@ class ClusterFrontend:
         replica, local = entry
         self.engines[replica].sched.abandon(local, ev.time)
 
+    def _ev_push(self, ev: Event) -> None:
+        """Execute (or re-defer) one speculative replication push. The
+        event kind is the lowest priority, so at its timestamp every
+        demand-side fabric reservation has already been made: a push that
+        finds the path hot yields — retrying at the projected free
+        instant, bounded by ``_PUSH_MAX_DEFERS`` — which is exactly how a
+        demand migration preempts queued speculative work."""
+        digest, key, target, defers = self._pending_pushes.pop(ev.key)
+        matched, owners, _ = self.directory.lookup_entry(key)
+        live = ([i for i in owners if i < len(self.engines)]
+                if matched and owners else [])
+        if not live or target in owners:
+            # evicted fleet-wide, or the receiver became an owner on its
+            # own (demand migration beat the push): nothing to do
+            self._push_inflight.discard((digest, target))
+            return
+        donor = min(live, key=self._load_key)
+        if self.fabric.hot(donor, target, ev.time):
+            self.replications_deferred += 1
+            if defers + 1 >= self._PUSH_MAX_DEFERS:
+                self.pushes_abandoned += 1
+                self._push_inflight.discard((digest, target))
+                return
+            free = self.fabric.free_at(donor, target, ev.time)
+            self._push_seq += 1
+            self._pending_pushes[self._push_seq] = (digest, key, target,
+                                                    defers + 1)
+            self.events.push(Event(free, EventKind.REPLICATION_PUSH, target,
+                                   key=self._push_seq))
+            return
+        self._route_time = ev.time
+        got = self._migrate(donor, target, key, speculative=True)
+        self._push_inflight.discard((digest, target))
+        if got == 0:
+            self.pushes_abandoned += 1
+
     _EVENT_HANDLERS = {
         EventKind.ARRIVAL: _ev_arrival,
         EventKind.STEP: _ev_step,
         EventKind.MIGRATION_DELIVERY: _ev_delivery,
         EventKind.ABANDON: _ev_abandon,
         EventKind.RETENTION_DECAY: _ev_decay,
+        EventKind.REPLICATION_PUSH: _ev_push,
     }
 
     def run_events(self, max_events: int = 1_000_000,
@@ -628,6 +789,7 @@ class ClusterFrontend:
                 "entries": self.directory.n_entries(),
                 "registrations": self.directory.registrations,
                 "invalidations": self.directory.invalidations,
+                "shards": self.directory.shards.shard_counters(),
             },
             "interconnect": {
                 "gbps": self.interconnect_gbps,
@@ -637,7 +799,14 @@ class ClusterFrontend:
                 "migration_s": self.migration_s,
                 "queued_migrations": self.migrations_queued,
                 "queue_wait_s": self.migration_queue_wait_s,
+                "replications": self.replications,
+                "replicated_tokens": self.replicated_tokens,
+                "replication_bytes": self.replication_bytes,
+                "replication_s": self.replication_s,
+                "replications_deferred": self.replications_deferred,
+                "pushes_abandoned": self.pushes_abandoned,
             },
+            "fabric": self.fabric.report(),
             "latency": latency_percentiles(records),
             "per_replica": reps,
         }

@@ -64,6 +64,11 @@ class EventKind(IntEnum):
     RETENTION_DECAY = 5  # wall-clock cold-leaf decay sweep
     ABANDON = 6         # abandonment timeout check for one session
     SCRUB_DUE = 7       # periodic retention-plane scrub read (DESIGN §11)
+    REPLICATION_PUSH = 8  # speculative prefix push decision (DESIGN §13);
+    #                       lowest priority: at an equal timestamp every
+    #                       demand-side event (arrivals, their migrations)
+    #                       fires first, so pushes see — and yield to —
+    #                       the fabric reservations demand traffic made.
 
 
 @dataclass(frozen=True, order=True)

@@ -18,8 +18,11 @@ gap with an analytic replica model on the event core of
   warm tier, NAND cold tier). DRAM refresh and MRM scrub traffic are
   integrated over simulated wall-clock, mirroring the §11 metering.
 - **Fleet semantics match the real cluster plane.** Route-first /
-  migrate-on-miss against a prefix directory, per-receiver interconnect
-  link serialization, retention registration/decay with pins, and the
+  migrate-on-miss against a hash-sharded prefix directory (DESIGN §13),
+  transfers contending on a shared :class:`~repro.serving.fabric.Fabric`
+  (per-replica NIC up/down links + bisection core), optional predictive
+  replication (hit-threshold-triggered low-priority pushes that yield to
+  demand traffic), retention registration/decay with pins, and the
   pressure policy chain (evict-LRU → spill-to-cold → recompute) with a
   balancing ledger — the same invariants the engine-backed
   ``ClusterFrontend`` enforces, checked by :meth:`FleetSim.check`.
@@ -33,11 +36,13 @@ one seed fixes the whole trajectory.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.memclass import TECHNOLOGIES
+from .directory import ShardedDirectory
 from .events import Event, EventKind, EventQueue, EventTrace, NonQuiescentError
+from .fabric import Fabric
 
 _EPS = 1e-12
 
@@ -79,8 +84,19 @@ class FleetConfig:
     warm_capacity_bytes: float = 256e9
     cold_capacity_bytes: float = 1e12
     interconnect_gbps: float = 100.0
+    # shared fabric (DESIGN §13): per-replica NIC links at
+    # interconnect_gbps; the switch core carries fabric_bisection_gbps
+    # aggregate (None = half-bisection: link * n_replicas // 2)
+    fabric_bisection_gbps: Optional[float] = None
     migrate_prefixes: bool = True
     migrate_load_gap: int = 4
+    # predictive replication (DESIGN §13): once a group's fleet-wide
+    # directory hit count reaches the threshold, push it to the
+    # replicate_copies least-loaded non-owners (None = reactive only)
+    replicate_threshold: Optional[int] = None
+    replicate_copies: int = 2
+    push_max_defers: int = 8
+    directory_shards: int = 8
     cold_ttl_s: float = 300.0
     scrub_interval_s: Optional[float] = None
     record_trace: bool = False
@@ -159,9 +175,11 @@ class FleetSim:
         self.sessions: Dict[int, _Session] = {}
         self.queue = EventQueue()
         self.trace = EventTrace(record=c.record_trace)
-        # fleet-shared planes: prefix directory + per-receiver links
-        self.directory: Dict[int, Set[int]] = {}     # group -> owner rids
-        self._link_busy_until: Dict[int, float] = {}
+        # fleet-shared planes: hash-sharded prefix directory (group ids
+        # as keys) + the shared fabric every transfer contends on
+        self.directory = ShardedDirectory(c.directory_shards)
+        self.fabric = Fabric(c.n_replicas, c.interconnect_gbps,
+                             c.fabric_bisection_gbps)
         # traffic + pressure counters
         self.stats = {
             "submitted": 0, "finished": 0, "abandoned": 0,
@@ -172,11 +190,24 @@ class FleetSim:
             "scrub_bytes": 0.0, "reprogram_bytes": 0.0,
             "reprogram_events": 0, "decayed_bytes": 0.0,
             "migrations": 0, "migrated_bytes": 0.0,
+            "migration_queue_wait_s": 0.0,
+            "replication_pushes": 0, "replications": 0,
+            "replicated_bytes": 0.0, "pushes_deferred": 0,
+            "pushes_abandoned": 0, "chained_submits": 0,
             "pressure_events": 0, "resolved_evict": 0, "resolved_spill": 0,
             "resolved_recompute": 0, "unresolved": 0,
         }
         self._records: List[dict] = []
         self._migration_seq = 0
+        # speculative pushes in flight: group -> receiver rids (cleared
+        # on delivery/drop, so a group is pushed at most once per target)
+        self._push_inflight: Dict[int, Set[int]] = {}
+        # closed-loop chains: parent session_key -> (follow-up, think_s)
+        self._chained: Dict[int, Tuple[FleetRequest, float]] = {}
+        # peak gauges (satellite: the fleet report used to sample these
+        # after teardown, reporting 0s for any drained run)
+        self.peak_directory_groups = 0
+        self.peak_load = 0
 
     # -- submission ---------------------------------------------------------
 
@@ -190,6 +221,27 @@ class FleetSim:
         if req.abandon_after_s is not None:
             self.queue.push(Event(req.arrival_s + req.abandon_after_s,
                                   EventKind.ABANDON, -1, key=sid))
+
+    def chain(self, parent_key: int, req: FleetRequest,
+              think_s: float) -> None:
+        """Closed-loop follow-up: when session ``parent_key`` finishes,
+        ``req`` arrives ``think_s`` after the *completion instant* (its
+        own ``arrival_s`` is ignored) — the arrival process is shaped by
+        achieved latency, not a pre-drawn schedule. An abandoned parent
+        drops its whole chain. Deterministic: the re-arrival time is
+        derived from the simulated completion, and the scenario pre-draws
+        ``think_s``, so no randomness depends on execution order."""
+        if think_s < 0:
+            raise ValueError(f"think_s must be >= 0, got {think_s}")
+        if parent_key in self._chained:
+            raise ValueError(f"session {parent_key} already has a chained "
+                             "follow-up")
+        self._chained[parent_key] = (req, think_s)
+
+    def _drop_chain(self, sid: int) -> None:
+        nxt = self._chained.pop(sid, None)
+        while nxt is not None:
+            nxt = self._chained.pop(nxt[0].session_key, None)
 
     # -- byte model ---------------------------------------------------------
 
@@ -271,7 +323,18 @@ class FleetSim:
             g.pages = pages
             g.bytes += delta
             g.last_access = t
-        self.directory.setdefault(s.req.group, set()).add(rep.rid)
+        self._dir_add(s.req.group, rep.rid)
+
+    def _dir_add(self, group: int, rid: int) -> None:
+        self.directory.add(group, rid)
+        # ownership gained by any path (own compute, demand migration,
+        # push delivery) cancels a pending speculative push to this rid
+        inflight = self._push_inflight.get(group)
+        if inflight is not None:
+            inflight.discard(rid)
+        n = len(self.directory)
+        if n > self.peak_directory_groups:
+            self.peak_directory_groups = n
 
     def _evict_lru(self, rep: _Replica, need: float) -> float:
         """Evict unpinned warm groups, LRU-first, until ``need`` bytes are
@@ -296,11 +359,7 @@ class FleetSim:
         else:
             rep.cold_live -= g.bytes
         del rep.groups[g.group]
-        owners = self.directory.get(g.group)
-        if owners is not None:
-            owners.discard(rep.rid)
-            if not owners:
-                del self.directory[g.group]
+        self.directory.discard(g.group, rep.rid)
 
     # -- routing + migration ------------------------------------------------
 
@@ -311,11 +370,18 @@ class FleetSim:
         """Route-first / migrate-on-miss (DESIGN §7): prefer a directory
         owner of the request's group; if every owner is overloaded past
         ``migrate_load_gap`` vs the fleet minimum, send the session to the
-        least-loaded replica and pull the prefix over its link."""
-        owners = self.directory.get(req.group)
+        least-loaded replica and pull the prefix over the fabric. Every
+        directory match also bumps the group's fleet-wide hit count — the
+        predictive replicator's threshold signal (DESIGN §13)."""
+        owners = self.directory.owners(req.group)
         best = self._least_loaded()
         if not owners or self._page_align(req.shared_tokens) <= 0:
             return best
+        hits = self.directory.hit(req.group)
+        if (self.cfg.replicate_threshold is not None
+                and self.cfg.n_replicas > 1
+                and hits >= self.cfg.replicate_threshold):
+            self._maybe_replicate(req.group, t)
         owner = min((self.replicas[r] for r in owners),
                     key=lambda r: (r.load(), r.rid))
         if owner.load() - best.load() <= self.cfg.migrate_load_gap:
@@ -326,17 +392,77 @@ class FleetSim:
 
     def _migrate(self, src: _Replica, dst: _Replica, group: int,
                  t: float) -> None:
+        """Demand pull: reserve the fabric path immediately (donor
+        up-link + receiver down-link + one core channel) — speculative
+        pushes queued behind this instant will see the fabric hot and
+        re-defer, which is exactly how demand traffic preempts them."""
         g = src.groups[group]
-        bw = self.cfg.interconnect_gbps * 1e9
-        start = max(t, self._link_busy_until.get(dst.rid, 0.0))
-        done = start + g.bytes / bw
-        self._link_busy_until[dst.rid] = done
+        start, done = self.fabric.reserve(src.rid, dst.rid, int(g.bytes), t)
         self._migration_seq += 1
         self.queue.push(Event(done, EventKind.MIGRATION_DELIVERY, dst.rid,
                               key=self._migration_seq,
-                              info=(group, g.pages, int(g.bytes))))
+                              info=(group, g.pages, int(g.bytes), 0)))
         self.stats["migrations"] += 1
         self.stats["migrated_bytes"] += g.bytes
+        self.stats["migration_queue_wait_s"] += start - t
+
+    def _maybe_replicate(self, group: int, t: float) -> None:
+        """Schedule speculative pushes so ``1 + replicate_copies``
+        replicas hold the group. Pushes are REPLICATION_PUSH events — the
+        lowest event priority, so at any instant every demand-side fabric
+        reservation lands first and the push handler sees (and yields to)
+        it."""
+        owners = self.directory.owners(group)
+        if not owners:
+            return
+        inflight = self._push_inflight.setdefault(group, set())
+        need = self.cfg.replicate_copies + 1 - len(owners) - len(inflight)
+        if need <= 0:
+            return
+        targets = sorted(
+            (r for r in self.replicas
+             if r.rid not in owners and r.rid not in inflight),
+            key=lambda r: (r.load(), r.rid))[:need]
+        for rep in targets:
+            inflight.add(rep.rid)
+            self.stats["replication_pushes"] += 1
+            self.queue.push(Event(t, EventKind.REPLICATION_PUSH, rep.rid,
+                                  key=group))
+
+    def _on_replication_push(self, ev: Event) -> None:
+        """Execute (or re-defer) one speculative push. A hot fabric means
+        demand traffic reserved the path first: the push yields, retrying
+        at the projected free instant, up to ``push_max_defers`` times."""
+        group = ev.key
+        defers = ev.info[0] if ev.info else 0
+        inflight = self._push_inflight.setdefault(group, set())
+        owners = self.directory.owners(group)
+        if not owners or ev.replica in owners:
+            inflight.discard(ev.replica)
+            return  # group evicted fleet-wide / receiver already owns it
+        donor = min((self.replicas[r] for r in owners),
+                    key=lambda r: (r.load(), r.rid))
+        if self.fabric.hot(donor.rid, ev.replica, ev.time):
+            self.stats["pushes_deferred"] += 1
+            if defers + 1 >= self.cfg.push_max_defers:
+                self.stats["pushes_abandoned"] += 1
+                inflight.discard(ev.replica)
+                return
+            free = self.fabric.free_at(donor.rid, ev.replica, ev.time)
+            self.queue.push(Event(free, EventKind.REPLICATION_PUSH,
+                                  ev.replica, key=group,
+                                  info=(defers + 1,)))
+            return
+        g = donor.groups[group]
+        start, done = self.fabric.reserve(donor.rid, ev.replica,
+                                          int(g.bytes), ev.time)
+        self._migration_seq += 1
+        self.queue.push(Event(done, EventKind.MIGRATION_DELIVERY, ev.replica,
+                              key=self._migration_seq,
+                              info=(group, g.pages, int(g.bytes), 1)))
+        self.stats["replications"] += 1
+        self.stats["replicated_bytes"] += g.bytes
+        # stays in _push_inflight until the delivery installs ownership
 
     # -- event handlers -----------------------------------------------------
 
@@ -345,10 +471,16 @@ class FleetSim:
         rep = self._route(s.req, ev.time)
         s.replica = rep.rid
         rep.queue.append(s.sid)
+        load = rep.load()
+        if load > self.peak_load:
+            self.peak_load = load
         self._ensure_service(rep, ev.time)
 
     def _on_migration_delivery(self, ev: Event) -> None:
-        group, pages, nbytes = ev.info
+        group, pages, nbytes = ev.info[:3]
+        inflight = self._push_inflight.get(group)
+        if inflight is not None:
+            inflight.discard(ev.replica)
         rep = self.replicas[ev.replica]
         g = rep.groups.get(group)
         if g is not None and g.pages >= pages:
@@ -377,12 +509,13 @@ class FleetSim:
         # arrival re-programs retention on the receiving device (§8)
         self.stats["reprogram_bytes"] += nbytes
         self.stats["reprogram_events"] += 1
-        self.directory.setdefault(group, set()).add(rep.rid)
+        self._dir_add(group, rep.rid)
 
     def _on_abandon(self, ev: Event) -> None:
         s = self.sessions[ev.key]
         if s.phase in ("done", "abandoned"):
             return
+        self._drop_chain(s.sid)
         rep = self.replicas[s.replica]
         if s.phase in ("prefill", "decode"):
             rep.active.pop(s.sid, None)
@@ -588,6 +721,13 @@ class FleetSim:
             "itl": itl,
             "generated": gen,
         })
+        nxt = self._chained.pop(s.sid, None)
+        if nxt is not None:
+            # closed-loop client: the follow-up arrives think-time after
+            # the completion the client actually observed
+            follow, think = nxt
+            self.stats["chained_submits"] += 1
+            self.submit(replace(follow, arrival_s=t + think))
 
     # -- driver -------------------------------------------------------------
 
@@ -599,6 +739,7 @@ class FleetSim:
         EventKind.SCRUB_DUE: "_on_scrub",
         EventKind.CHUNK_COMPLETE: "_on_service",
         EventKind.DECODE_ROUND: "_on_service",
+        EventKind.REPLICATION_PUSH: "_on_replication_push",
     }
 
     def run(self, max_events: Optional[int] = None,
@@ -653,6 +794,21 @@ class FleetSim:
         assert st["pressure_events"] == (
             st["resolved_evict"] + st["resolved_spill"]
             + st["resolved_recompute"] + st["unresolved"])
+        # every byte a transfer moved is metered on the fabric exactly
+        # once, and split exactly across the demand/speculative ledgers
+        assert abs(self.fabric.bytes_total
+                   - (st["migrated_bytes"] + st["replicated_bytes"])) < 1.0, (
+            f"fabric bytes {self.fabric.bytes_total} != migrated "
+            f"{st['migrated_bytes']} + replicated {st['replicated_bytes']}")
+        for group, inflight in self._push_inflight.items():
+            owners = (self.directory.owners(group) or set())
+            live = inflight & owners
+            assert not live, (
+                f"group {group} push in flight to owners {live}")
+        for pk in self._chained:
+            s = self.sessions.get(pk)
+            assert s is not None and s.phase not in ("done", "abandoned"), (
+                f"chained follow-up parent {pk} already terminal")
         for sid, s in self.sessions.items():
             if s.phase in ("done", "abandoned"):
                 assert s.hot_bytes == 0.0, f"finished {sid} leaks hot bytes"
@@ -685,9 +841,28 @@ class FleetSim:
                 "decoded_tokens": st["decoded_tokens"],
                 "migrations": st["migrations"],
                 "migrated_bytes": st["migrated_bytes"],
-                "directory_groups": len(self.directory),
+                "migration_queue_wait_s": st["migration_queue_wait_s"],
+                "chained_submits": st["chained_submits"],
+                # peak gauges, tracked while events fire — the old
+                # at-teardown samples were always 0 on a drained fleet
+                "directory_groups_peak": self.peak_directory_groups,
+                "peak_load": self.peak_load,
+                # at-drain residue (directory entries that survived
+                # decay/eviction; loads are 0 iff quiesced)
+                "directory_groups_final": len(self.directory),
                 "max_load": max(loads), "min_load": min(loads),
             },
+            "replication": {
+                "threshold": self.cfg.replicate_threshold,
+                "copies": self.cfg.replicate_copies,
+                "pushes_scheduled": st["replication_pushes"],
+                "replications": st["replications"],
+                "replicated_bytes": st["replicated_bytes"],
+                "pushes_deferred": st["pushes_deferred"],
+                "pushes_abandoned": st["pushes_abandoned"],
+            },
+            "directory": self.directory.shard_counters(),
+            "fabric": self.fabric.report(),
             "retention": {
                 "hot_refresh_bytes": st["hot_refresh_bytes"],
                 "warm_refresh_bytes": st["warm_refresh_bytes"],

@@ -283,6 +283,116 @@ def test_migration_admission_control_queues_on_busy_link(cluster_setup):
     assert rep_done["finished"] == 7
 
 
+def test_directory_shard_counters_prove_load_balance():
+    """ISSUE 10 satellite: the hash-sharded directory spreads digest keys
+    across every shard (Fibonacci mixing on the page digests), keeps the
+    per-shard lookup/update counters, and batches invalidations as deltas
+    (``delta_batches <= delta_ops``: O(changes) mutations, not a
+    per-prefix broadcast)."""
+    d = PrefixDirectory(page_tokens=4, n_shards=8)
+    rng = np.random.default_rng(0)
+    paths = [list(rng.integers(0, 1000, 16)) for _ in range(200)]
+    for i, path in enumerate(paths):
+        d.register(i % 4, path)
+        d.lookup(path)
+    c = d.shards.shard_counters()
+    assert c["n_shards"] == 8
+    assert sum(c["entries"]) == d.n_entries()
+    assert min(c["entries"]) > 0, f"idle shard: {c['entries']}"
+    mean = sum(c["entries"]) / c["n_shards"]
+    assert max(c["entries"]) < 3 * mean, f"shard hot spot: {c['entries']}"
+    assert min(c["lookups"]) > 0 and sum(c["updates"]) > 0
+    assert 0 < c["delta_batches"] <= c["delta_ops"]
+    # delta invalidation drains exactly what was registered
+    for i, path in enumerate(paths):
+        d.invalidate(i % 4, path, tail_tokens=len(path))
+    assert d.n_entries() == 0
+    assert all(n == 0 for n in d.shards.shard_counters()["entries"])
+
+
+def _replication_sequence(fe, prompt):
+    """Seed one owner, then three extension hits: the second crosses a
+    replicate_threshold of 2 and pushes toward the non-owners. In
+    lockstep mode the first push makes the donor's up-link hot, so the
+    same-instant second copy *defers* (admission control, no retry loop
+    outside the event plane) — the third hit re-crosses the threshold on
+    a cold fabric and fills the remaining copy."""
+    fe.submit(list(prompt), 4, session_key="seed")
+    fe.run_until_idle()
+    for i, key in enumerate(("h1", "h2", "h3")):
+        fe.submit(prompt + [301 + i], 4, session_key=key)
+        rep = fe.run_until_idle()
+    return rep
+
+
+def test_predictive_replication_accounting_zero_imbalance(cluster_setup):
+    """ISSUE 10 satellite: a speculative push meters its bytes exactly
+    once on the fabric and exactly once into the receiver's tier — the
+    fabric byte ledger equals demand migration bytes + replication bytes
+    with zero imbalance, and the replicas' page ledgers still drain."""
+    full, cfg, params = cluster_setup
+    engines = [_mk_engine(full, cfg, params) for _ in range(3)]
+    fe = ClusterFrontend(engines, migrate_prefixes=True,
+                         migrate_load_gap=100,     # no demand migrations
+                         replicate_threshold=2, replicate_copies=2)
+    prompt = list(range(2, 66))
+    rep = _replication_sequence(fe, prompt)
+    home = fe.replica_of(min(fe.requests))         # the seed's owner
+    inter = rep["interconnect"]
+    assert fe.replications == 2                    # both non-owners warmed
+    assert inter["replications"] == 2
+    assert inter["replication_bytes"] > 0
+    assert inter["replicated_tokens"] == 2 * 64
+    assert inter["migrations"] == 0                # speculative != demand
+    # the invariant: every fabric byte is one demand or speculative byte
+    imbalance = fe.fabric.bytes_total - (fe.migration_bytes
+                                         + fe.replication_bytes)
+    assert imbalance == pytest.approx(0.0)
+    assert rep["fabric"]["bytes"] == fe.fabric.bytes_total
+    # the receivers really adopted the pages (tier write metered once)
+    key = engines[0].radix_key_for(prompt)
+    matched, owners = fe.directory.lookup(key)
+    assert matched == 64 and owners == {0, 1, 2}
+    for i, e in enumerate(engines):
+        if i != home:
+            assert e.kv.radix_stats.adopted_pages > 0, f"replica {i}"
+    # teardown releases every adopted copy on every replica
+    for e in engines:
+        e.kv.evict_prefixes()
+        assert e.kv.live_pages() == 0
+        assert e.mem.devices["mrm"].alloc.utilization == 0.0
+    assert fe.directory.lookup(key) == (0, None)
+
+
+def test_event_mode_replication_matches_lockstep(cluster_setup):
+    """The REPLICATION_PUSH event path delivers the same copies the
+    lockstep path does — same replication count, same decoded tokens,
+    same balanced fabric ledger — with pushes recorded in the trace."""
+    full, cfg, params = cluster_setup
+
+    def run_one(clock_mode):
+        engines = [_mk_engine(full, cfg, params) for _ in range(3)]
+        fe = ClusterFrontend(engines, migrate_prefixes=True,
+                             migrate_load_gap=100, clock_mode=clock_mode,
+                             record_trace=True,
+                             replicate_threshold=2, replicate_copies=2)
+        rep = _replication_sequence(fe, list(range(2, 66)))
+        outs = {k: list(fe.output(r)) for k, r in
+                zip(("seed", "h1", "h2", "h3"), sorted(fe.requests))}
+        return fe, rep, outs
+
+    fe_l, rep_l, outs_l = run_one("lockstep")
+    fe_e, rep_e, outs_e = run_one("event")
+    assert outs_l == outs_e, "replication changed decoded tokens"
+    assert fe_e.replications == fe_l.replications == 2
+    assert rep_e["interconnect"]["replication_bytes"] == pytest.approx(
+        rep_l["interconnect"]["replication_bytes"])
+    for fe in (fe_l, fe_e):
+        assert fe.fabric.bytes_total == pytest.approx(
+            fe.migration_bytes + fe.replication_bytes)
+    assert fe_e.trace.n_events > 0
+
+
 def test_fleet_report_interconnect_and_directory_sections(cluster_setup):
     full, cfg, params = cluster_setup
     fe = ClusterFrontend([_mk_engine(full, cfg, params) for _ in range(2)],

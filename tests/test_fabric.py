@@ -1,0 +1,200 @@
+"""Shared-fabric topology + predictive-replication admission control
+(DESIGN.md §13): donor up-links serialize concurrent exports even to
+distinct receivers, the bisection core caps aggregate flow, and the
+replicator's defer-on-hot policy lets demand migrations preempt queued
+speculative pushes. Pure-python analytic plane — no jax.
+"""
+import random
+import sys
+from dataclasses import replace
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.serving.events import EventKind
+from repro.serving.fabric import Fabric
+from repro.serving.fleet_sim import FleetConfig, FleetRequest, FleetSim
+
+GB = 1e9
+
+
+# ---------------------------------------------------------------------------
+# topology primitives
+# ---------------------------------------------------------------------------
+
+
+def test_up_link_serializes_concurrent_exports():
+    # one donor, two receivers: second transfer queues on the donor NIC
+    # even though both receivers are idle (the PR 3-9 per-receiver model
+    # would have run them in parallel)
+    fab = Fabric(4, link_gbps=100.0, bisection_gbps=400.0)
+    s0, d0 = fab.reserve(0, 1, int(100 * GB), 0.0)
+    s1, d1 = fab.reserve(0, 2, int(100 * GB), 0.0)
+    assert (s0, d0) == (0.0, pytest.approx(1.0))
+    assert s1 == pytest.approx(d0) and d1 == pytest.approx(2.0)
+    assert fab.queue_wait_s == pytest.approx(1.0)
+
+
+def test_down_link_serializes_concurrent_imports():
+    fab = Fabric(4, link_gbps=100.0, bisection_gbps=400.0)
+    _, d0 = fab.reserve(1, 0, int(50 * GB), 0.0)
+    s1, _ = fab.reserve(2, 0, int(50 * GB), 0.0)
+    assert s1 == pytest.approx(d0)
+
+
+def test_bisection_core_caps_disjoint_pairs():
+    # 2x link bisection = 2 channels: the third disjoint-pair transfer
+    # queues on the core although all four NICs involved are free
+    fab = Fabric(8, link_gbps=100.0, bisection_gbps=200.0)
+    assert fab.n_channels == 2
+    _, d0 = fab.reserve(0, 1, int(100 * GB), 0.0)
+    s1, _ = fab.reserve(2, 3, int(100 * GB), 0.0)
+    s2, _ = fab.reserve(4, 5, int(100 * GB), 0.0)
+    assert s1 == 0.0
+    assert s2 == pytest.approx(d0)
+
+
+def test_free_at_and_hot_track_the_full_path():
+    fab = Fabric(4, link_gbps=100.0, bisection_gbps=400.0)
+    assert not fab.hot(0, 1, 0.0)
+    _, done = fab.reserve(0, 1, int(100 * GB), 0.0)
+    assert fab.hot(0, 1, 0.5) and fab.hot(0, 2, 0.5) and fab.hot(2, 1, 0.5)
+    assert not fab.hot(2, 3, 0.5)          # disjoint path, channels free
+    assert fab.free_at(0, 2, 0.5) == pytest.approx(done)
+    assert not fab.hot(0, 1, done)         # instantaneously free again
+
+
+def test_half_bisection_default_and_validation():
+    fab = Fabric(8, link_gbps=100.0)
+    assert fab.bisection_gbps == pytest.approx(400.0)
+    assert fab.n_channels == 4
+    with pytest.raises(ValueError, match="below a single link"):
+        Fabric(4, link_gbps=100.0, bisection_gbps=50.0)
+    with pytest.raises(ValueError, match="positive"):
+        Fabric(4, link_gbps=0.0)
+
+
+def test_ledgers_meter_every_byte_once():
+    fab = Fabric(4, link_gbps=100.0)
+    fab.reserve(0, 1, int(10 * GB), 0.0)
+    fab.reserve(0, 2, int(30 * GB), 0.0)
+    rep = fab.report()
+    assert rep["transfers"] == 2
+    assert rep["bytes"] == int(40 * GB)
+    assert rep["up_bytes"] == {0: int(40 * GB)}
+    assert rep["down_bytes"] == {1: int(10 * GB), 2: int(30 * GB)}
+    assert rep["busy_s"] == pytest.approx(0.4)
+
+
+# ---------------------------------------------------------------------------
+# admission control: demand preempts queued speculation
+# ---------------------------------------------------------------------------
+
+
+def test_demand_migration_preempts_queued_speculative_push():
+    # the replicator never reserves a hot fabric — it re-checks at
+    # free_at(). A demand migration arriving inside that window reserves
+    # immediately, so the earlier-queued push finds the fabric hot again
+    # and defers a second time: demand traffic overtakes speculation
+    # without an explicit priority queue.
+    fab = Fabric(4, link_gbps=100.0, bisection_gbps=100.0)  # 1 channel
+    fab.reserve(0, 1, int(100 * GB), 0.0)                   # demand, 0..1s
+    # speculative push 2->3 asks at t=0.5: hot (core busy) -> defers
+    assert fab.hot(2, 3, 0.5)
+    retry_at = fab.free_at(2, 3, 0.5)
+    assert retry_at == pytest.approx(1.0)
+    # demand migration 2->3 at t=0.8 reserves *now* (queued start)
+    s, d = fab.reserve(2, 3, int(100 * GB), 0.8)
+    assert s == pytest.approx(1.0) and d == pytest.approx(2.0)
+    # the push re-checks at its retry time and yields again
+    assert fab.hot(2, 3, retry_at)
+    assert fab.free_at(2, 3, retry_at) == pytest.approx(d)
+
+
+def test_replication_push_is_lowest_priority_event_kind():
+    # at an equal timestamp every demand-side event fires first, so a
+    # push decision sees the fabric reservations demand traffic just made
+    assert EventKind.REPLICATION_PUSH == max(EventKind)
+    assert EventKind.REPLICATION_PUSH > EventKind.MIGRATION_DELIVERY
+    assert EventKind.REPLICATION_PUSH > EventKind.ARRIVAL
+
+
+# ---------------------------------------------------------------------------
+# fleet integration: pushes defer under contention, ledger stays balanced
+# ---------------------------------------------------------------------------
+
+
+def _herald_fanout(n_groups=3, fanout=12, heralds=2):
+    """Herald-led fan-out bursts sharing one fresh group each (the
+    rag_storm shape, hand-rolled so the test owns every timestamp)."""
+    reqs, sid = [], 0
+    for g in range(n_groups):
+        t = g * 2.0
+        for h in range(heralds):
+            reqs.append(FleetRequest(session_key=sid, group=g,
+                                     shared_tokens=1024, unique_tokens=48,
+                                     max_new_tokens=4,
+                                     arrival_s=t + 0.15 * h))
+            sid += 1
+        for i in range(fanout):
+            reqs.append(FleetRequest(session_key=sid, group=g,
+                                     shared_tokens=1024, unique_tokens=48,
+                                     max_new_tokens=4,
+                                     arrival_s=t + 0.55 + 0.004 * i))
+            sid += 1
+    return reqs
+
+
+def _run(cfg, reqs):
+    sim = FleetSim(cfg)
+    for r in reqs:
+        sim.submit(r)
+    rep = sim.run(max_events=2_000_000)
+    sim.check()
+    return sim, rep
+
+
+def test_fleet_pushes_defer_on_hot_fabric_and_ledger_balances():
+    # a starved fabric (1 GB/s link, single core channel) keeps the
+    # fabric hot through every burst: speculative pushes must defer (and
+    # some abandon), never reserve into the contention, and the fabric
+    # byte ledger must still equal migrated + replicated exactly
+    cfg = FleetConfig(n_replicas=4, interconnect_gbps=1.0,
+                      fabric_bisection_gbps=1.0,
+                      replicate_threshold=1, replicate_copies=3)
+    sim, rep = _run(cfg, _herald_fanout())
+    rp = rep["replication"]
+    assert rp["pushes_scheduled"] > 0
+    assert rp["pushes_deferred"] > 0, "hot fabric never deferred a push"
+    fab = rep["fabric"]
+    assert fab["bytes"] == pytest.approx(
+        rep["fleet"]["migrated_bytes"] + rp["replicated_bytes"])
+    assert rep["quiesced"]
+
+
+def test_fleet_replication_beats_reactive_on_herald_fanout():
+    reqs = _herald_fanout(n_groups=4, fanout=16)
+    base_cfg = FleetConfig(n_replicas=4, interconnect_gbps=100.0)
+    pred_cfg = replace(base_cfg, replicate_threshold=1, replicate_copies=3)
+    _, base = _run(base_cfg, reqs)
+    _, pred = _run(pred_cfg, reqs)
+    assert pred["fleet"]["decoded_tokens"] == base["fleet"]["decoded_tokens"]
+    assert pred["replication"]["replicated_bytes"] > 0
+    assert pred["fleet"]["migrations"] < base["fleet"]["migrations"]
+    assert pred["slo"]["ttft"]["p95"] < base["slo"]["ttft"]["p95"]
+
+
+def test_fleet_trace_digest_stable_under_submission_shuffle():
+    reqs = _herald_fanout()
+    cfg = FleetConfig(n_replicas=4, replicate_threshold=1,
+                      replicate_copies=3, record_trace=True)
+    digests = []
+    for seed in (None, 0, 1):
+        order = list(reqs)
+        if seed is not None:
+            random.Random(seed).shuffle(order)
+        _, rep = _run(cfg, order)
+        digests.append(rep["trace"]["digest"])
+    assert len(set(digests)) == 1, "submission order leaked into the trace"

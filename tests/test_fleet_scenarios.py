@@ -64,6 +64,40 @@ def test_diurnal_scenario_exercises_retention_decay():
         "diurnal lulls are sized to outlive the cold TTL"
 
 
+def test_agentic_scenario_is_closed_loop_and_deterministic():
+    """ISSUE 10 satellite: agent follow-up calls re-arrive off the
+    *completion* time of the previous call (think time added to
+    finished_at, not a pre-scheduled open-loop timeline), and the chain
+    stays bit-deterministic — think times are pre-drawn in generation
+    order, so the RNG stream never depends on completion order."""
+    a = run_scenario("agentic", "smoke")
+    b = run_scenario("agentic", "smoke")
+    assert a["trace"]["digest"] == b["trace"]["digest"]
+    assert a["fleet"]["chained_submits"] > 0, \
+        "agentic follow-ups were not chained off completions"
+    # every chained follow-up was really submitted and drained
+    s = a["sessions"]
+    assert s["finished"] + s["abandoned"] == s["submitted"]
+    assert a["quiesced"]
+
+
+def test_rag_storm_heralds_lead_the_burst():
+    """The herald queries precede the fan-out by lead_s, giving the
+    predictive replicator (DESIGN.md §13) a signal before the burst."""
+    import random as _random
+
+    sc = build("rag_storm", "smoke")
+    assert sc.heralds >= 1 and sc.lead_s > 0
+    reqs = list(sc.generate(_random.Random(sc.seed)))
+    by_group = {}
+    for r in reqs:
+        by_group.setdefault(r.group, []).append(r.arrival_s)
+    for times in by_group.values():
+        assert len(times) == sc.heralds + sc.fanout
+        burst_start = min(times[sc.heralds:])
+        assert burst_start - times[sc.heralds - 1] >= sc.lead_s - 1e-9
+
+
 def test_unknown_scenario_and_preset_fail_loudly():
     with pytest.raises(ValueError, match="unknown scenario"):
         build("no-such-family", "smoke")
